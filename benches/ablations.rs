@@ -1,0 +1,109 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Multi-line SPM** (§V-C) — disable the line-interleaved column
+//!    access: the Fig. 9 row-stage gathers serialize.
+//! 2. **Coarse-grained {layer,iter} priority** (Fig. 8) — replace with
+//!    dependency-order FIFO issue.
+//! 3. **Instance packing** (§V-A streaming) — run shallow stage DFGs
+//!    one instance per iteration.
+//! 4. **Wrap-back mapping** (Fig. 7b) — quantify how much NoC traffic
+//!    the mod-P wrap avoids (structural count, no alternative mapping).
+
+#[path = "common.rs"]
+mod common;
+
+use butterfly_dataflow::arch::{ArchConfig, UnitKind};
+use butterfly_dataflow::coordinator::{run_kernel, ExperimentConfig};
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::dfg::microcode::lower_stage_packed;
+use butterfly_dataflow::dfg::stages::StageDfg;
+use butterfly_dataflow::model::log2_int;
+use butterfly_dataflow::sim::{simulate, SimOptions};
+use butterfly_dataflow::util::table::Table;
+
+fn main() {
+    let arch = ArchConfig::full();
+
+    // --- 1 & 2: SPM multi-line and scheduler ablations on real kernels.
+    let mut t = Table::new(
+        "ablation: multi-line SPM and block scheduling",
+        &["kernel", "baseline cycles", "single-line SPM", "FIFO issue"],
+    );
+    for (kind, points) in [(KernelKind::Bpmm, 4096), (KernelKind::Fft, 2048)] {
+        let s = common::spec(kind, points, 32 * 1024, points);
+        let base = run_kernel(&s, &ExperimentConfig::default()).unwrap();
+        let noml = run_kernel(
+            &s,
+            &ExperimentConfig {
+                sim: SimOptions { no_multiline_spm: true, ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fifo = run_kernel(
+            &s,
+            &ExperimentConfig {
+                sim: SimOptions { fifo_scheduling: true, ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        t.row(&[
+            s.name.clone(),
+            format!("{:.0}", base.cycles),
+            format!("{:.0} ({:.2}x)", noml.cycles, noml.cycles / base.cycles),
+            format!("{:.0} ({:.2}x)", fifo.cycles, fifo.cycles / base.cycles),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // --- 3: instance packing on a shallow stage DFG.
+    let mut t = Table::new(
+        "ablation: instance packing of shallow stage DFGs (32-point BPMM)",
+        &["pack", "cycles (64 iter-equiv)", "Cal util"],
+    );
+    let stage = StageDfg {
+        kind: KernelKind::Bpmm,
+        points: 32,
+        sub_iters: 1,
+        twiddle_before: false,
+        weights_from_ddr: false,
+    };
+    for pack in [1usize, 2, 4, 8, 16] {
+        // Same total instances: iters × pack = 256.
+        let iters = 256 / pack;
+        let p = lower_stage_packed(&stage, &arch, iters, pack);
+        let st = simulate(&p, &arch, &SimOptions::default());
+        let cal = st.utilization(UnitKind::Cal, arch.num_pes());
+        t.row(&[
+            format!("{pack}"),
+            format!("{}", st.cycles),
+            common::pct(cal),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // --- 4: wrap-back NoC savings (structural).
+    let mut t = Table::new(
+        "wrap-back rule: remote vs local butterfly swaps per kernel",
+        &["points", "stages", "remote stages", "NoC scalars saved"],
+    );
+    for points in [64usize, 256, 512, 4096] {
+        let stages = log2_int(points);
+        let pes = arch.num_pes();
+        // Swap into stage t is remote iff 0 < 2^(t-1) < P.
+        let remote = (1..stages).filter(|t| (1usize << (t - 1)) < pes).count();
+        let local = stages - 1 - remote;
+        // Each local-ized stage would otherwise move n/2 elements/iter.
+        let saved = local * points / 2;
+        t.row(&[
+            format!("{points}"),
+            format!("{stages}"),
+            format!("{remote}"),
+            format!("{saved}/iter"),
+        ]);
+    }
+    t.print();
+}

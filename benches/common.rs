@@ -1,0 +1,37 @@
+//! Shared helpers for the figure/table bench targets.
+//!
+//! Each bench regenerates the rows/series of one table or figure of the
+//! paper (the workload, the sweep, the baseline and the formatted
+//! output); see DESIGN.md's experiment index.  They are deterministic
+//! analysis programs (`harness = false`), not statistical timers — the
+//! wall-clock benchmark of the simulator itself is `perf_simulator`.
+
+#![allow(dead_code)]
+
+use butterfly_dataflow::coordinator::ExperimentConfig;
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::workloads::KernelSpec;
+
+pub fn cfg() -> ExperimentConfig {
+    ExperimentConfig::default()
+}
+
+pub fn spec(kind: KernelKind, points: usize, vectors: usize, seq: usize) -> KernelSpec {
+    KernelSpec {
+        name: format!("{}-{}", kind.name(), points),
+        kind,
+        points,
+        vectors,
+        d_in: points,
+        d_out: points,
+        seq,
+    }
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", 100.0 * v)
+}
+
+pub fn ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}

@@ -1,0 +1,69 @@
+//! Fig. 2 — Profiling dense-based vs FFT-based attention kernels of
+//! ViT and BERT on the GPU platform (Jetson Xavier NX).
+//!
+//! Regenerates the figure's three panels per model: L1 hit rate, L2 hit
+//! rate, and kernel duration, for the dense kernels (`to_qkv`,
+//! `softmax(qk)*v`) and the butterfly kernels (`fft-sequence`,
+//! `fft-hidden`) across sequence scales at batch 128.
+//!
+//! Expected shape (paper): FFT kernel hit rates collapse vs dense,
+//! and the duration shows no clear speedup despite the O(n log n)
+//! flops — even a slowdown for BERT at large scales.
+
+#[path = "common.rs"]
+mod common;
+
+use butterfly_dataflow::baselines::gpu::GpuModel;
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::util::stats::fmt_time;
+use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads::platforms;
+
+fn main() {
+    let nx = GpuModel::new(platforms::jetson_xavier_nx());
+    let batch = 128;
+
+    for (model, hidden, seqs) in [
+        ("VIT", 512usize, vec![256usize]),
+        ("BERT", 1024, vec![512, 2048, 8192]),
+    ] {
+        let mut t = Table::new(
+            &format!("Fig.2 {model} on Jetson Xavier NX (batch {batch})"),
+            &["kernel", "seq", "L1 hit", "L2 hit", "duration"],
+        );
+        for &seq in &seqs {
+            // Dense kernels.
+            let dq = nx.dense_matmul("to_qkv", 3 * batch * seq, hidden, hidden, true);
+            let da = nx.dense_attention("softmax(qk)*v", batch, seq, hidden, true);
+            // Butterfly (cuFFT) kernels on the same GPU.
+            let fh = nx.butterfly(&common::spec(KernelKind::Fft, hidden, batch * seq, seq));
+            let fs = nx.butterfly(&common::spec(KernelKind::Fft, seq, batch * hidden, seq));
+            for (name, r) in [
+                ("dense-to_qkv", &dq),
+                ("dense-softmax(qk)v", &da),
+                ("fft-hidden", &fh),
+                ("fft-sequence", &fs),
+            ] {
+                t.row(&[
+                    name.to_string(),
+                    format!("{seq}"),
+                    common::pct(r.l1_hit),
+                    common::pct(r.l2_hit),
+                    fmt_time(r.time_s),
+                ]);
+            }
+            // The Fig. 2 punchline: theoretical flop reduction vs actual.
+            let flop_ratio = (dq.flops + da.flops) / (fh.flops + fs.flops);
+            let time_ratio = (dq.time_s + da.time_s) / (fh.time_s + fs.time_s);
+            t.row(&[
+                "(butterfly vs dense)".into(),
+                format!("{seq}"),
+                format!("flops {:.1}x", flop_ratio),
+                format!("time {:.2}x", time_ratio),
+                "<- sparsity squandered".into(),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+}

@@ -1,0 +1,42 @@
+//! Fig. 12 — Data-accessing requirement percentages of the GPU caches
+//! (Jetson Xavier NX) vs the SPM of the multilayer dataflow.
+//!
+//! Expected shape (paper): NX L1 requirement >20% (up to 53.8%), L2
+//! >40% (up to 71.19%), both growing past seq 512; our SPM requirement
+//! compressed below 12.48% at every scale.
+
+#[path = "common.rs"]
+mod common;
+
+use butterfly_dataflow::baselines::gpu::GpuModel;
+use butterfly_dataflow::coordinator::run_kernel;
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads::platforms;
+
+fn main() {
+    let nx = GpuModel::new(platforms::jetson_xavier_nx());
+    let cfg = common::cfg();
+    let mut t = Table::new(
+        "Fig.12 accessing requirement: GPU cache vs multilayer-dataflow SPM",
+        &["scale", "kind", "NX L1 req", "NX L2 req", "our SPM req"],
+    );
+    let batch = 128;
+    for kind in [KernelKind::Fft, KernelKind::Bpmm] {
+        for points in [256usize, 512, 1024, 2048, 4096, 8192] {
+            let vectors = batch * 64; // rows per transform batch
+            let s = common::spec(kind, points, vectors, points);
+            let gpu = nx.butterfly(&s);
+            let ours = run_kernel(&s, &cfg).expect("sim");
+            t.row(&[
+                format!("{points}"),
+                kind.name().to_string(),
+                common::pct(gpu.l1_req),
+                common::pct(gpu.l2_req),
+                common::pct(ours.spm_requirement),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper: L1 req 20-53.8%, L2 req 40-71.2%, SPM req <= 12.48%");
+}

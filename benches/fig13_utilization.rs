@@ -1,0 +1,46 @@
+//! Fig. 13 — Utilization of the four decoupled function units for (a)
+//! FFT on attention and (b) BPMM on linear layers, across scales.
+//!
+//! Expected shape (paper): Cal >64% everywhere, >89% for large FFT;
+//! Load <6% (FFT) / <8% (BPMM); FFT Flow ≈ 20.45% on average (double
+//! the BPMM Flow, the re/im swap); BPMM shows relatively higher Load
+//! (lower arithmetic density).
+
+#[path = "common.rs"]
+mod common;
+
+use butterfly_dataflow::arch::UnitKind;
+use butterfly_dataflow::coordinator::run_kernel;
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::util::table::Table;
+
+fn main() {
+    let cfg = common::cfg();
+    let mut flow_fft_acc = Vec::new();
+    for (panel, kind) in [("(a) FFT on attention", KernelKind::Fft),
+                          ("(b) BPMM on linear layers", KernelKind::Bpmm)] {
+        let mut t = Table::new(
+            &format!("Fig.13 {panel}"),
+            &["scale", "Load", "Flow", "Cal", "Store"],
+        );
+        for points in [256usize, 512, 1024, 2048, 4096, 8192] {
+            let s = common::spec(kind, points, 64 * 1024 * 1024 / points, points);
+            let r = run_kernel(&s, &cfg).expect("sim");
+            if kind == KernelKind::Fft {
+                flow_fft_acc.push(r.util_of(UnitKind::Flow));
+            }
+            t.row(&[
+                format!("{points}"),
+                common::pct(r.util_of(UnitKind::Load)),
+                common::pct(r.util_of(UnitKind::Flow)),
+                common::pct(r.util_of(UnitKind::Cal)),
+                common::pct(r.util_of(UnitKind::Store)),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    let avg = flow_fft_acc.iter().sum::<f64>() / flow_fft_acc.len() as f64;
+    println!("FFT Flow average: {} (paper: 20.45%)", common::pct(avg));
+    println!("paper: Cal >64% all kernels, >89% large FFT; Load <6% FFT / <8% BPMM");
+}

@@ -1,0 +1,45 @@
+//! Fig. 14 — CalUnit utilization across stage-division schemes for long
+//! vectors (2K/4K/8K, BPMM and FFT).
+//!
+//! Expected shape (paper): balanced divisions win — BPMM best at
+//! 32x64 (85.03%), 64x64 (85.38%), 128x64 (84.08%); unbalanced splits
+//! with a shallow 16-point stage lose utilization.
+
+#[path = "common.rs"]
+mod common;
+
+use butterfly_dataflow::arch::UnitKind;
+use butterfly_dataflow::coordinator::run_kernel_with;
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::dfg::stages::enumerate_divisions;
+use butterfly_dataflow::util::table::Table;
+
+fn main() {
+    let cfg = common::cfg();
+    for kind in [KernelKind::Bpmm, KernelKind::Fft] {
+        let cap = match kind {
+            KernelKind::Fft => cfg.arch.max_fft_points,
+            KernelKind::Bpmm => cfg.arch.max_bpmm_points,
+        };
+        for points in [2048usize, 4096, 8192] {
+            let mut t = Table::new(
+                &format!("Fig.14 {} {points}: CalUnit utilization per division", kind.name()),
+                &["division", "cal util", "cycles"],
+            );
+            let mut best = (String::new(), 0.0f64);
+            for (r, c) in enumerate_divisions(points, 16, cap) {
+                let s = common::spec(kind, points, 16 * 1024, points);
+                let res = run_kernel_with(&s, &cfg, Some((r, c))).expect("sim");
+                let cal = res.util_of(UnitKind::Cal);
+                if cal > best.1 {
+                    best = (format!("{r}x{c}"), cal);
+                }
+                t.row(&[format!("{r}x{c}"), common::pct(cal), format!("{:.0}", res.cycles)]);
+            }
+            t.row(&["BEST".into(), common::pct(best.1), best.0]);
+            t.print();
+            println!();
+        }
+    }
+    println!("paper best: BPMM 2k->32x64 (85.03%), 4k->64x64 (85.38%), 8k->128x64 (84.08%)");
+}

@@ -1,0 +1,126 @@
+//! Fig. 15 — Execution time of attention kernels: Jetson Xavier NX with
+//! tensor cores (dense) and CUDA cores (butterfly) vs the multilayer
+//! dataflow design.
+//!
+//! Expected shape (paper): vs dense-on-tensor up to 14.34× (ViT avg
+//! 11.13×), BERT up to 8.42× (avg 7.45×); vs butterfly-on-CUDA ViT avg
+//! 1.78× (peak gap 1.67×), BERT avg 1.97×, max 3.30× on the 64K-seq
+//! BERT-AT-all; AT-all (2D-FFT) kernels benefit most.
+
+#[path = "common.rs"]
+mod common;
+
+use butterfly_dataflow::baselines::gpu::GpuModel;
+use butterfly_dataflow::coordinator::{run_kernel, ExperimentConfig};
+use butterfly_dataflow::util::stats::{fmt_time, geomean};
+use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads::{self, platforms, KernelSpec};
+
+struct Row {
+    name: String,
+    ours: f64,
+    dense: f64,
+    cuda: f64,
+}
+
+fn run_family(
+    name: &str,
+    kernels: &[KernelSpec],
+    cfg: &ExperimentConfig,
+    nx: &GpuModel,
+) -> Vec<Row> {
+    let mut rows = Vec::new();
+    let mut i = 0;
+    while i < kernels.len() {
+        let spec = kernels[i].clone();
+        if spec.name.contains("AT-all-hidden") {
+            // Fold the 2D-FFT axis pair; dense counterpart = attention.
+            let pair = kernels[i + 1].clone();
+            let ours = run_kernel(&spec, cfg).unwrap().time_s
+                + run_kernel(&pair, cfg).unwrap().time_s;
+            let b = spec.vectors / spec.seq;
+            // Feasibility: the dense score matrix must fit device memory
+            // (NX: 8 GB shared) — 64K sequences cannot run densely at all.
+            let score_bytes = b as f64 * (spec.seq as f64).powi(2) * 2.0;
+            let dense = if score_bytes > 6e9 {
+                f64::NAN // dense OOM — excluded from the speedup stats
+            } else {
+                nx.dense_attention(&spec.name, b, spec.seq, spec.points, true)
+                    .time_s
+            };
+            let cuda = nx.butterfly(&spec).time_s + nx.butterfly(&pair).time_s;
+            rows.push(Row {
+                name: spec.name.replace("-hidden", ""),
+                ours,
+                dense,
+                cuda,
+            });
+            i += 2;
+            continue;
+        }
+        let ours = run_kernel(&spec, cfg).unwrap().time_s;
+        let dense = nx
+            .dense_matmul(&spec.name, spec.vectors, spec.d_in, spec.d_out, true)
+            .time_s;
+        let cuda = nx.butterfly(&spec).time_s;
+        rows.push(Row { name: spec.name.clone(), ours, dense, cuda });
+        i += 1;
+    }
+    println!("-- {name} --");
+    rows
+}
+
+fn main() {
+    let cfg = common::cfg();
+    let nx = GpuModel::new(platforms::jetson_xavier_nx());
+    let mut t = Table::new(
+        "Fig.15 execution time: NX dense(tensor) / NX butterfly(cuda) / ours",
+        &["kernel", "dense(tensor)", "butterfly(cuda)", "ours",
+          "speedup dense", "speedup cuda"],
+    );
+    let mut all = Vec::new();
+    all.extend(run_family("VIT", &workloads::vit_kernels(128), &cfg, &nx));
+    for seq in [4096usize, 16 * 1024, 64 * 1024] {
+        all.extend(run_family(
+            &format!("BERT-{seq}"),
+            &workloads::bert_kernels(1, seq),
+            &cfg,
+            &nx,
+        ));
+    }
+    let mut sp_d = Vec::new();
+    let mut sp_c = Vec::new();
+    let mut max_d: (f64, String) = (0.0, String::new());
+    let mut max_c: (f64, String) = (0.0, String::new());
+    for r in &all {
+        let sd = r.dense / r.ours;
+        let sc = r.cuda / r.ours;
+        if sd.is_finite() {
+            sp_d.push(sd);
+            if sd > max_d.0 {
+                max_d = (sd, r.name.clone());
+            }
+        }
+        sp_c.push(sc);
+        if sc > max_c.0 {
+            max_c = (sc, r.name.clone());
+        }
+        t.row(&[
+            r.name.clone(),
+            if r.dense.is_finite() { fmt_time(r.dense) } else { "OOM".into() },
+            fmt_time(r.cuda),
+            fmt_time(r.ours),
+            if sd.is_finite() { common::ratio(sd) } else { "-".into() },
+            common::ratio(sc),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nspeedup vs dense(tensor): geomean {:.2}x, max {:.2}x ({})  [paper: avg 9.29x, max 14.34x]",
+        geomean(&sp_d), max_d.0, max_d.1
+    );
+    println!(
+        "speedup vs butterfly(cuda): geomean {:.2}x, max {:.2}x ({})  [paper: avg ~1.8-2.0x, max 3.30x]",
+        geomean(&sp_c), max_c.0, max_c.1
+    );
+}

@@ -1,0 +1,51 @@
+//! Fig. 16 — Speedup and energy efficiency over the GPU with
+//! tensor/CUDA cores.
+//!
+//! Expected shape (paper): energy-efficiency gains 6.38×-12.32× vs
+//! dense-on-tensor and 2.17×-8.06× vs butterfly-on-CUDA; the FFT
+//! (higher arithmetic density) kernels gain most.
+
+#[path = "common.rs"]
+mod common;
+
+use butterfly_dataflow::baselines::gpu::GpuModel;
+use butterfly_dataflow::coordinator::run_kernel;
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads::platforms;
+
+fn main() {
+    let cfg = common::cfg();
+    let platform = platforms::jetson_xavier_nx();
+    let gpu_power = platform.power_w;
+    let nx = GpuModel::new(platform);
+    let mut t = Table::new(
+        "Fig.16 speedup and energy efficiency over GPU (tensor / cuda)",
+        &["kernel", "speedup tensor", "eff tensor", "speedup cuda", "eff cuda",
+          "our power"],
+    );
+    let batch = 64;
+    for kind in [KernelKind::Fft, KernelKind::Bpmm] {
+        for points in [512usize, 1024, 4096] {
+            let s = common::spec(kind, points, batch * 1024, points);
+            let ours = run_kernel(&s, &cfg).expect("sim");
+            let dense =
+                nx.dense_matmul(&s.name, s.vectors, s.d_in, s.d_out, true);
+            let cuda = nx.butterfly(&s);
+            // Energy efficiency ratio = (work/J ours) / (work/J gpu)
+            // = (t_gpu * P_gpu) / (t_ours * P_ours) for equal work.
+            let eff_t = (dense.time_s * gpu_power) / (ours.time_s * ours.power_w);
+            let eff_c = (cuda.time_s * gpu_power) / (ours.time_s * ours.power_w);
+            t.row(&[
+                s.name.clone(),
+                common::ratio(dense.time_s / ours.time_s),
+                common::ratio(eff_t),
+                common::ratio(cuda.time_s / ours.time_s),
+                common::ratio(eff_c),
+                format!("{:.2} W", ours.power_w),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper: energy eff 6.38-12.32x vs tensor(dense), 2.17-8.06x vs cuda(butterfly)");
+}

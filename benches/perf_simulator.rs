@@ -1,0 +1,66 @@
+//! Wall-clock benchmark of the simulator itself (the §Perf target):
+//! simulated-PE-cycles per wall-second and end-to-end bench-suite cost.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::dfg::microcode::lower_stage_packed;
+use butterfly_dataflow::dfg::stages::StageDfg;
+use butterfly_dataflow::sim::{simulate, SimOptions};
+use butterfly_dataflow::util::stats::{si, Summary};
+use butterfly_dataflow::util::table::Table;
+
+fn bench_case(kind: KernelKind, points: usize, iters: usize, pack: usize) -> (f64, f64, f64) {
+    let arch = ArchConfig::full();
+    let stage = StageDfg {
+        kind,
+        points,
+        sub_iters: 1,
+        twiddle_before: false,
+        weights_from_ddr: false,
+    };
+    let program = lower_stage_packed(&stage, &arch, iters, pack);
+    let opts = SimOptions::default();
+    // Warm + measure.
+    let mut wall = Summary::new();
+    let mut sim_cycles = 0.0;
+    let mut blocks = 0.0;
+    for i in 0..5 {
+        let t0 = Instant::now();
+        let stats = simulate(&program, &arch, &opts);
+        let dt = t0.elapsed().as_secs_f64();
+        if i > 0 {
+            wall.push(dt);
+        }
+        sim_cycles = stats.cycles as f64 * 16.0; // PE-cycles
+        blocks = stats.blocks_run as f64;
+    }
+    (wall.median(), sim_cycles, blocks)
+}
+
+fn main() {
+    let mut t = Table::new(
+        "simulator throughput (median of 4 after warmup)",
+        &["case", "wall", "PE-cycles/s", "blocks/s"],
+    );
+    for (kind, points, iters, pack) in [
+        (KernelKind::Fft, 256, 64, 1),
+        (KernelKind::Fft, 256, 256, 1),
+        (KernelKind::Bpmm, 512, 256, 1),
+        (KernelKind::Bpmm, 32, 256, 8),
+        (KernelKind::Fft, 64, 512, 4),
+    ] {
+        let (wall, cycles, blocks) = bench_case(kind, points, iters, pack);
+        t.row(&[
+            format!("{}-{points} x{iters} pack{pack}", kind.name()),
+            format!("{:.2} ms", wall * 1e3),
+            si(cycles / wall),
+            si(blocks / wall),
+        ]);
+    }
+    t.print();
+}

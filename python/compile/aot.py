@@ -1,0 +1,168 @@
+"""AOT export: lower the L2 models to HLO *text* artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Each artifact bakes its parameters in as constants (deterministic seeds),
+so the Rust side supplies only the activation tensor.  Alongside every
+``<name>.hlo.txt`` we write ``<name>.meta.json`` (shape/dtype/expected
+checksum) that `rust/src/runtime` uses to validate I/O, plus a golden
+input/output pair ``<name>.golden.npyf32`` for bit-exact runtime tests.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile does).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import butterfly as bf
+from .kernels import fft as kfft
+from .kernels.ref import random_bpmm_factors
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    CRITICAL: print with ``print_large_constants=True``.  The default
+    printer elides big constants as ``constant({...})`` and the xla
+    0.5.1 text parser silently materializes those as zeros — the model
+    weights would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-jax metadata attributes (source_end_line, ...) choke the 0.5.1
+    # text parser; layouts/metadata are irrelevant to the interchange.
+    opts.print_metadata = False
+    opts.print_backend_config = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def write_f32_tensor(path: str, arr: np.ndarray) -> None:
+    """Tiny self-describing binary: ndim, dims..., f32 data (little-endian).
+
+    The Rust loader is ``runtime::tensor::read_f32_tensor``.
+    """
+    arr = np.ascontiguousarray(arr, dtype=np.float32)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", arr.ndim))
+        for d in arr.shape:
+            f.write(struct.pack("<I", d))
+        f.write(arr.tobytes())
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: list[dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, example_input: np.ndarray) -> None:
+        """Lower fn(x)->(y,) at x's shape, dump HLO text + golden pair."""
+        x = jnp.asarray(example_input, dtype=jnp.float32)
+        wrapped = lambda t: (fn(t),)
+        lowered = jax.jit(wrapped).lower(
+            jax.ShapeDtypeStruct(x.shape, jnp.float32))
+        text = to_hlo_text(lowered)
+        if "{...}" in text:
+            raise RuntimeError(
+                f"artifact {name}: HLO text contains elided constants "
+                "('{...}') — the rust loader would read zeros")
+        hlo_path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        y = np.asarray(jax.jit(wrapped)(x)[0])
+        write_f32_tensor(os.path.join(self.out_dir, f"{name}.in.f32t"),
+                         np.asarray(x))
+        write_f32_tensor(os.path.join(self.out_dir, f"{name}.out.f32t"), y)
+        meta = {
+            "name": name,
+            "input_shape": list(x.shape),
+            "output_shape": list(y.shape),
+            "dtype": "f32",
+            "hlo_bytes": len(text),
+            "output_mean": float(y.mean()),
+            "output_l2": float(np.sqrt((y.astype(np.float64) ** 2).sum())),
+        }
+        with open(os.path.join(self.out_dir, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        self.manifest.append(meta)
+        print(f"  {name}: in{tuple(x.shape)} -> out{tuple(y.shape)}, "
+              f"hlo {len(text)/1024:.0f} KiB", flush=True)
+
+    def finish(self) -> None:
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+def build_all(out_dir: str, quick: bool = False) -> None:
+    ex = Exporter(out_dir)
+    rng = np.random.default_rng(42)
+
+    # 1. Raw BPMM kernel, paper's single-DFG scale (n=256, batch 64).
+    factors_256 = random_bpmm_factors(256, seed=3)
+    ex.export("bpmm_b64_n256",
+              lambda x: bf.bpmm(x, factors_256),
+              rng.normal(size=(64, 256)).astype(np.float32))
+
+    # 2. Raw FFT kernel (returns re-plane; im validated in pytest).
+    ex.export("fft_b64_n256",
+              lambda x: kfft.fft_real(x)[0],
+              rng.normal(size=(64, 256)).astype(np.float32))
+
+    # 3. FABNet-style encoder block, seq 256 / hidden 256.
+    p_fnet = M.FnetBlockParams.init(256, ffn_mult=4, seed=7)
+    ex.export("fnet_block_b4_s256_h256",
+              lambda x: M.fnet_block(x, p_fnet),
+              rng.normal(size=(4, 256, 256)).astype(np.float32) * 0.1)
+
+    # 4. Butterfly softmax-attention block (AT-to_qkv BPMM), seq 128 / d 256.
+    p_attn = M.ButterflyAttentionParams.init(256, heads=4, seed=11)
+    ex.export("bfattn_b2_s128_h256",
+              lambda x: M.butterfly_attention(x, p_attn),
+              rng.normal(size=(2, 128, 256)).astype(np.float32) * 0.1)
+
+    if not quick:
+        # 5. Table-IV one-layer vanilla transformer, 1K seq / 1K hidden.
+        p_van = M.VanillaButterflyParams.init(1024, seed=13)
+        ex.export("vanilla_b1_s1024_h1024",
+                  lambda x: M.vanilla_butterfly_layer(x, p_van),
+                  rng.normal(size=(1, 1024, 1024)).astype(np.float32) * 0.1)
+
+        # 6. Staged (Fig. 9) BPMM at n=2048 (division 64x32 auto).
+        staged = M.make_staged_bpmm_factors(2048, seed=17)
+        ex.export("bpmm_staged_b16_n2048",
+                  lambda x: M.bpmm_staged(x, staged),
+                  rng.normal(size=(16, 2048)).astype(np.float32))
+
+    ex.finish()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the large artifacts (CI smoke)")
+    args = ap.parse_args()
+    print(f"AOT-lowering artifacts to {args.out_dir}", flush=True)
+    build_all(args.out_dir, quick=args.quick)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""L1 Pallas kernel: BPMM — butterfly-pattern matrix multiply.
+
+The paper's hot-spot is the chain of ``log2(n)`` butterfly stages applied to
+a batch of vectors (Fig. 4 / Fig. 5b).  The TPU adaptation of the
+"multilayer DFG stays resident in SPM" idea (DESIGN.md §Hardware-Adaptation)
+is: one ``pallas_call`` invocation owns a ``(block_b, n)`` tile in VMEM and
+runs **all stages** on it before writing back — HBM sees each element twice
+(one load, one store) regardless of the stage count, exactly like the
+paper's SPM-resident multilayer execution avoids per-stage shuffles.
+
+The batch dimension maps onto the vector lanes (the paper's SIMD-lane
+batching of §V-C); the stage loop is unrolled at trace time since
+``log2(n)`` is static.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; correctness is the contract here, TPU timing is estimated
+analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import log2_int
+
+# Maximum single-DFG scale the paper maps on the PE array (BPMM, real).
+MAX_BPMM_POINTS = 512
+# Default batch tile: matches the SIMD16 entry width of the paper's SPM.
+DEFAULT_BLOCK_B = 16
+
+
+def _bpmm_kernel(x_ref, w_ref, o_ref, *, stages: int):
+    """All butterfly stages over one (block_b, n) tile, VMEM-resident."""
+    x = x_ref[...]
+    b, n = x.shape
+    for s in range(stages):
+        stride = 1 << s
+        blocks = n // (2 * stride)
+        xr = x.reshape(b, blocks, 2, stride)
+        # Stage weights: (n//2, 4) laid out as (blocks, stride, 4).
+        w = w_ref[s].reshape(blocks, stride, 4)
+        top, bot = xr[:, :, 0, :], xr[:, :, 1, :]
+        y_top = w[:, :, 0] * top + w[:, :, 1] * bot
+        y_bot = w[:, :, 2] * top + w[:, :, 3] * bot
+        x = jnp.stack([y_top, y_bot], axis=2).reshape(b, n)
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def bpmm(x: jnp.ndarray, factors: jnp.ndarray,
+         block_b: int = DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """Apply a full BPMM factor set to ``x`` of shape (batch, n).
+
+    ``factors``: (log2 n, n//2, 4) real stage weights (see ref.py).
+    Batch is tiled by ``block_b``; n stays whole inside a tile (n <= 512
+    per the paper's single-DFG limit — larger n goes through the
+    multi-stage division in model.py).
+    """
+    batch, n = x.shape
+    stages = log2_int(n)
+    assert factors.shape == (stages, n // 2, 4), factors.shape
+    if batch % block_b != 0:
+        # Pad the batch to a tile multiple; cheaper than a ragged grid.
+        pad = block_b - batch % block_b
+        x = jnp.concatenate([x, jnp.zeros((pad, n), x.dtype)], axis=0)
+    grid = (x.shape[0] // block_b,)
+    out = pl.pallas_call(
+        functools.partial(_bpmm_kernel, stages=stages),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            # Full factor stack resident per tile (the paper pre-stores
+            # stage weights in each PE before streaming iterations).
+            pl.BlockSpec((stages, n // 2, 4), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, factors)
+    return out[:batch]
+
+
+def _bpmm_grouped_kernel(x_ref, w_ref, o_ref, *, stages: int):
+    """Like _bpmm_kernel but with a per-group factor set (leading dim 1)."""
+    x = x_ref[0]
+    b, n = x.shape
+    for s in range(stages):
+        stride = 1 << s
+        blocks = n // (2 * stride)
+        xr = x.reshape(b, blocks, 2, stride)
+        w = w_ref[0, s].reshape(blocks, stride, 4)
+        top, bot = xr[:, :, 0, :], xr[:, :, 1, :]
+        y_top = w[:, :, 0] * top + w[:, :, 1] * bot
+        y_bot = w[:, :, 2] * top + w[:, :, 3] * bot
+        x = jnp.stack([y_top, y_bot], axis=2).reshape(b, n)
+    o_ref[0] = x
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def bpmm_grouped(x: jnp.ndarray, factors: jnp.ndarray,
+                 block_b: int = DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """Grouped BPMM: x (groups, batch, n), factors (groups, log2 n, n//2, 4).
+
+    Group g's batch rows all go through factor set g.  This is the
+    single-launch form of the Fig. 9 column/row stages, where each column
+    (row) of the reshaped matrix carries its own butterfly weights —
+    the Monarch block-diagonal structure.
+    """
+    groups, batch, n = x.shape
+    stages = log2_int(n)
+    assert factors.shape == (groups, stages, n // 2, 4), factors.shape
+    if batch % block_b != 0:
+        pad = block_b - batch % block_b
+        x = jnp.concatenate(
+            [x, jnp.zeros((groups, pad, n), x.dtype)], axis=1)
+    bt = x.shape[1] // block_b
+    out = pl.pallas_call(
+        functools.partial(_bpmm_grouped_kernel, stages=stages),
+        grid=(groups, bt),
+        in_specs=[
+            pl.BlockSpec((1, block_b, n), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, stages, n // 2, 4), lambda g, i: (g, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, n), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, factors)
+    return out[:, :batch, :]
+
+
+def bpmm_single_stage(x: jnp.ndarray, w: jnp.ndarray, stage: int,
+                      block_b: int = DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """One butterfly stage as its own kernel (used by the stage-division
+    path where a synchronization barrier separates stages)."""
+    batch, n = x.shape
+    stages_total = log2_int(n)
+    assert 0 <= stage < stages_total
+    return bpmm(x, _single_stage_factors(w, n, stage), block_b=block_b)
+
+
+def _single_stage_factors(w: jnp.ndarray, n: int, stage: int) -> jnp.ndarray:
+    """Embed one stage's weights into an identity factor stack."""
+    stages = log2_int(n)
+    ident = jnp.tile(jnp.asarray([1.0, 0.0, 0.0, 1.0], dtype=w.dtype),
+                     (stages, n // 2, 1))
+    return ident.at[stage].set(w)

@@ -1,0 +1,135 @@
+"""L1 Pallas kernel: radix-2 DIT FFT as butterfly dataflow.
+
+Complex values are carried as separate real/imaginary planes (Pallas has no
+complex refs); each butterfly stage is the complex specialization of the
+BPMM 2x2 block: ``(t, b) -> (t + w*b, t - w*b)``.  The paper's observation
+that FFT needs twice the Flow traffic of BPMM (real+imag swap, §VI-D) shows
+up here as the doubled plane state.
+
+Same VMEM-residency contract as butterfly.py: one tile = all stages, HBM is
+touched once per element per direction.  The bit-reversal input permutation
+is done with a static gather before the stage loop — inside the kernel, so
+the permuted layout never exists in HBM (the paper's P_N matrices are folded
+into SPM addressing the same way).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import bit_reversal_permutation, fft_twiddles, log2_int
+
+# Paper: max single-DFG FFT scale on the PE array (complex halves storage).
+MAX_FFT_POINTS = 256
+DEFAULT_BLOCK_B = 16
+
+
+def _bit_reverse_rows(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Bit-reversal permutation of the last axis as reshape/transpose.
+
+    ``y[..., k] = x[..., bitrev(k)]``: split the axis into ``bits`` binary
+    axes and reverse their order.  Pure layout ops — no gather constants,
+    which Pallas kernels may not capture.  This is also exactly how the
+    paper folds the P_N permutation matrices into SPM addressing instead
+    of materializing them.
+    """
+    b = x.shape[0]
+    y = x.reshape((b,) + (2,) * bits)
+    y = y.transpose((0,) + tuple(range(bits, 0, -1)))
+    return y.reshape(b, -1)
+
+
+def _fft_kernel(xr_ref, xi_ref, twr_ref, twi_ref, or_ref, oi_ref,
+                *, n: int, stages: int, inverse: bool):
+    xr = _bit_reverse_rows(xr_ref[...], stages)
+    xi = _bit_reverse_rows(xi_ref[...], stages)
+    b = xr.shape[0]
+    for s in range(stages):
+        stride = 1 << s
+        blocks = n // (2 * stride)
+        wr = twr_ref[s].reshape(blocks, stride)
+        wi = twi_ref[s].reshape(blocks, stride)
+        if inverse:
+            wi = -wi
+        tr = xr.reshape(b, blocks, 2, stride)
+        ti = xi.reshape(b, blocks, 2, stride)
+        top_r, bot_r = tr[:, :, 0, :], tr[:, :, 1, :]
+        top_i, bot_i = ti[:, :, 0, :], ti[:, :, 1, :]
+        # w * bot (complex multiply on planes)
+        wb_r = wr * bot_r - wi * bot_i
+        wb_i = wr * bot_i + wi * bot_r
+        y_top_r, y_top_i = top_r + wb_r, top_i + wb_i
+        y_bot_r, y_bot_i = top_r - wb_r, top_i - wb_i
+        xr = jnp.stack([y_top_r, y_bot_r], axis=2).reshape(b, n)
+        xi = jnp.stack([y_top_i, y_bot_i], axis=2).reshape(b, n)
+    if inverse:
+        xr = xr / n
+        xi = xi / n
+    or_ref[...] = xr
+    oi_ref[...] = xi
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "inverse"))
+def fft(xr: jnp.ndarray, xi: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B,
+        inverse: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched 1D FFT over the last axis; planes (batch, n) -> (re, im)."""
+    batch, n = xr.shape
+    assert xi.shape == (batch, n)
+    stages = log2_int(n)
+    tw = fft_twiddles(n)
+    twr = jnp.asarray(tw.real, dtype=xr.dtype)
+    twi = jnp.asarray(tw.imag, dtype=xr.dtype)
+    if batch % block_b != 0:
+        pad = block_b - batch % block_b
+        z = jnp.zeros((pad, n), xr.dtype)
+        xr = jnp.concatenate([xr, z], axis=0)
+        xi = jnp.concatenate([xi, z], axis=0)
+    grid = (xr.shape[0] // block_b,)
+    spec_x = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+    spec_tw = pl.BlockSpec((stages, n // 2), lambda i: (0, 0))
+    out_r, out_i = pl.pallas_call(
+        functools.partial(_fft_kernel, n=n, stages=stages, inverse=inverse),
+        grid=grid,
+        in_specs=[spec_x, spec_x, spec_tw, spec_tw],
+        out_specs=[spec_x, spec_x],
+        out_shape=[jax.ShapeDtypeStruct(xr.shape, xr.dtype)] * 2,
+        interpret=True,
+    )(xr, xi, twr, twi)
+    return out_r[:batch], out_i[:batch]
+
+
+def fft_real(x: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B):
+    """FFT of a real batch (batch, n) -> (re, im) planes."""
+    return fft(x, jnp.zeros_like(x), block_b=block_b)
+
+
+def fft2d(x: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B):
+    """2D FFT over (seq, hidden) of a real input (..., seq, hidden).
+
+    FNet mixing: fft over hidden, then over sequence.  Returns (re, im).
+    Leading axes are flattened into the batch (paper: batch x head
+    dimensions pour iterations into the DFG pipeline).
+    """
+    lead = x.shape[:-2]
+    seq, hid = x.shape[-2:]
+    flat = x.reshape((-1, hid))
+    hr, hi = fft_real(flat, block_b=block_b)
+    hr = hr.reshape(lead + (seq, hid))
+    hi = hi.reshape(lead + (seq, hid))
+    # FFT along sequence: transpose seq<->hidden, batch the rest.
+    hr_t = jnp.swapaxes(hr, -1, -2).reshape((-1, seq))
+    hi_t = jnp.swapaxes(hi, -1, -2).reshape((-1, seq))
+    sr, si = fft(hr_t, hi_t, block_b=block_b)
+    sr = jnp.swapaxes(sr.reshape(lead + (hid, seq)), -1, -2)
+    si = jnp.swapaxes(si.reshape(lead + (hid, seq)), -1, -2)
+    return sr, si
+
+
+def fnet_mixing(x: jnp.ndarray, block_b: int = DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """FNet token mixing Re(FFT2(x)) built on the Pallas FFT kernel."""
+    sr, _ = fft2d(x, block_b=block_b)
+    return sr.astype(x.dtype)

@@ -1,0 +1,231 @@
+"""Pure-jnp reference oracles for the butterfly kernels.
+
+Everything in this module is *deliberately naive*: dense matrices, explicit
+permutations, textbook Cooley-Tukey.  The Pallas kernels in
+``butterfly.py`` / ``fft.py`` and the Rust model in ``rust/src/model/``
+are validated against these functions.
+
+Conventions
+-----------
+* A *butterfly stage* ``s`` (0-based) pairs element ``i`` with ``i + 2**s``
+  within blocks of ``2**(s+1)``.  Pair ``p`` of stage ``s`` is
+  ``(blk, off)`` with ``i = blk * 2**(s+1) + off``, ``j = i + 2**s`` and
+  the flat pair index ``p = blk * 2**s + off``.
+* BPMM stage weights have shape ``(n//2, 4)`` per stage: for pair ``p``
+  the 2x2 dense block ``[[w0, w1], [w2, w3]]`` maps
+  ``(x_i, x_j) -> (w0*x_i + w1*x_j, w2*x_i + w3*x_j)``.
+* A full BPMM factor set has shape ``(log2(n), n//2, 4)`` and is applied
+  stage 0 first (stride 1) up to stage log2(n)-1 (stride n/2), matching
+  the paper's Fig. 4 left-to-right product B_n ... B_2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def log2_int(n: int) -> int:
+    """log2 for exact powers of two, raising otherwise."""
+    l = int(n).bit_length() - 1
+    if n <= 0 or (1 << l) != n:
+        raise ValueError(f"{n} is not a positive power of two")
+    return l
+
+
+# ---------------------------------------------------------------------------
+# Butterfly stage / BPMM
+# ---------------------------------------------------------------------------
+
+def stage_pair_indices(n: int, stage: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return (i, j) index arrays of the n//2 pairs of a butterfly stage."""
+    stride = 1 << stage
+    blocks = n // (2 * stride)
+    blk = np.repeat(np.arange(blocks), stride)
+    off = np.tile(np.arange(stride), blocks)
+    i = blk * 2 * stride + off
+    return i, i + stride
+
+
+def stage_dense_matrix(n: int, stage: int, w: np.ndarray) -> np.ndarray:
+    """Materialize one butterfly stage as a dense (n, n) matrix.
+
+    ``w`` has shape (n//2, 4).  Row/col convention: y = B @ x.
+    """
+    w = np.asarray(w)
+    assert w.shape == (n // 2, 4), w.shape
+    i, j = stage_pair_indices(n, stage)
+    m = np.zeros((n, n), dtype=w.dtype)
+    m[i, i] = w[:, 0]
+    m[i, j] = w[:, 1]
+    m[j, i] = w[:, 2]
+    m[j, j] = w[:, 3]
+    return m
+
+
+def bpmm_dense_matrix(n: int, factors: np.ndarray) -> np.ndarray:
+    """Product of all stages as a dense matrix (stage log2(n)-1 leftmost)."""
+    stages = log2_int(n)
+    assert factors.shape == (stages, n // 2, 4), factors.shape
+    m = np.eye(n, dtype=factors.dtype)
+    for s in range(stages):
+        m = stage_dense_matrix(n, s, factors[s]) @ m
+    return m
+
+
+def bpmm_stage_ref(x: jnp.ndarray, w: jnp.ndarray, stage: int) -> jnp.ndarray:
+    """Apply one butterfly stage to x of shape (..., n) (real or complex)."""
+    n = x.shape[-1]
+    stride = 1 << stage
+    blocks = n // (2 * stride)
+    xr = x.reshape(x.shape[:-1] + (blocks, 2, stride))
+    wr = w.reshape(blocks, stride, 4)
+    top, bot = xr[..., 0, :], xr[..., 1, :]
+    y_top = wr[..., 0] * top + wr[..., 1] * bot
+    y_bot = wr[..., 2] * top + wr[..., 3] * bot
+    y = jnp.stack([y_top, y_bot], axis=-2)
+    return y.reshape(x.shape)
+
+
+def bpmm_ref(x: jnp.ndarray, factors: jnp.ndarray) -> jnp.ndarray:
+    """Apply the full BPMM (all log2(n) stages) to x of shape (..., n)."""
+    stages = factors.shape[0]
+    for s in range(stages):
+        x = bpmm_stage_ref(x, factors[s], s)
+    return x
+
+
+def random_bpmm_factors(n: int, seed: int = 0,
+                        dtype=jnp.float32) -> jnp.ndarray:
+    """Random butterfly factor set, biased towards identity so the full
+    product stays well-conditioned at any log2(n) depth."""
+    stages = log2_int(n)
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0.0, 0.5, size=(stages, n // 2, 4)) + \
+        0.5 * np.tile(np.array([1.0, 0.0, 0.0, 1.0]), (stages, n // 2, 1))
+    return jnp.asarray(w, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFT via butterfly stages (decimation in time)
+# ---------------------------------------------------------------------------
+
+def bit_reversal_permutation(n: int) -> np.ndarray:
+    """Index array ``perm`` with perm[k] = bit-reverse(k, log2 n)."""
+    bits = log2_int(n)
+    perm = np.zeros(n, dtype=np.int64)
+    for k in range(n):
+        r = 0
+        for b in range(bits):
+            if k & (1 << b):
+                r |= 1 << (bits - 1 - b)
+        perm[k] = r
+    return perm
+
+
+def fft_twiddles(n: int) -> np.ndarray:
+    """Per-stage complex twiddles, shape (log2 n, n//2) complex128.
+
+    Stage ``s`` pair (blk, off) uses w = exp(-2 pi i * off / 2**(s+1))
+    (DIT radix-2 after bit-reversal input permutation).
+    """
+    stages = log2_int(n)
+    tw = np.zeros((stages, n // 2), dtype=np.complex128)
+    for s in range(stages):
+        stride = 1 << s
+        blocks = n // (2 * stride)
+        w = np.exp(-2j * np.pi * np.arange(stride) / (2 * stride))
+        tw[s] = np.tile(w, blocks)
+    return tw
+
+
+def fft_stage_factors(n: int) -> np.ndarray:
+    """FFT stages expressed as *complex* BPMM factors, shape (log2 n, n//2, 4).
+
+    Pair map: (t, b) -> (t + w*b, t - w*b), i.e. block [[1, w], [1, -w]].
+    """
+    tw = fft_twiddles(n)
+    stages, half = tw.shape
+    f = np.zeros((stages, half, 4), dtype=np.complex128)
+    f[:, :, 0] = 1.0
+    f[:, :, 1] = tw
+    f[:, :, 2] = 1.0
+    f[:, :, 3] = -tw
+    return f
+
+
+def fft_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Reference DFT over the last axis (jnp.fft)."""
+    return jnp.fft.fft(x, axis=-1)
+
+
+def fft_butterfly_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """DIT radix-2 FFT built from butterfly stages (complex, last axis)."""
+    n = x.shape[-1]
+    perm = jnp.asarray(bit_reversal_permutation(n))
+    x = jnp.take(x, perm, axis=-1).astype(jnp.complex128)
+    factors = jnp.asarray(fft_stage_factors(n))
+    for s in range(factors.shape[0]):
+        x = bpmm_stage_ref(x, factors[s], s)
+    return x
+
+
+def fft2d_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """2D DFT over the last two axes (sequence, hidden) — FNet mixing."""
+    return jnp.fft.fft2(x, axes=(-2, -1))
+
+
+# ---------------------------------------------------------------------------
+# Attention references
+# ---------------------------------------------------------------------------
+
+def softmax_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
+                          v: jnp.ndarray) -> jnp.ndarray:
+    """Dense softmax(QK^T/sqrt(d))V over (..., seq, dim)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("...sd,...td->...st", q, k) / jnp.sqrt(
+        jnp.asarray(d, dtype=q.dtype))
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("...st,...td->...sd", probs, v)
+
+
+def fnet_mixing_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """FNet token mixing: Re(FFT2(x)) over (seq, hidden)."""
+    return jnp.real(fft2d_ref(x)).astype(x.dtype)
+
+
+def dense_linear_ref(x: jnp.ndarray, w: jnp.ndarray,
+                     b=None) -> jnp.ndarray:
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def butterfly_linear_ref(x: jnp.ndarray, factor_sets, d_in: int,
+                         d_out: int) -> jnp.ndarray:
+    """BPMM linear layer with Fig.10 slicing for unequal hidden sizes.
+
+    ``factor_sets`` is a list of factor arrays, each (log2 m, m//2, 4) where
+    m = min(d_in, d_out):
+      * d_in > d_out: slice x into d_in/d_out pieces, BPMM each, sum.
+      * d_in < d_out: BPMM x with d_out/d_in factor sets, concatenate.
+      * equal: single factor set.
+    """
+    if d_in == d_out:
+        return bpmm_ref(x, factor_sets[0])
+    if d_in > d_out:
+        k = d_in // d_out
+        assert k * d_out == d_in and len(factor_sets) == k
+        pieces = jnp.split(x, k, axis=-1)
+        return sum(bpmm_ref(p, f) for p, f in zip(pieces, factor_sets))
+    k = d_out // d_in
+    assert k * d_in == d_out and len(factor_sets) == k
+    return jnp.concatenate([bpmm_ref(x, f) for f in factor_sets], axis=-1)
+
+
+def layer_norm_ref(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)

@@ -1,0 +1,313 @@
+"""L2: JAX forward models for butterfly-sparse attention workloads.
+
+Builds the paper's benchmark networks out of the L1 Pallas kernels:
+
+* ``butterfly_linear``  — BPMM linear layer with Fig. 10 slicing.
+* ``bpmm_staged`` / ``fft_staged`` — the multi-stage Cooley-Tukey division
+  of Fig. 9 for scales beyond the single-DFG limit (512 BPMM / 256 FFT).
+* ``fnet_block``        — FABNet-style encoder block: 2D-FFT token mixing
+  plus BPMM feed-forward (the paper's second benchmark).
+* ``butterfly_attention_block`` — softmax attention with BPMM q,k,v and
+  output projections (the paper's "AT-to_qkv" sparse kernels).
+* ``vanilla_butterfly_layer``   — the Table-IV one-layer vanilla
+  transformer (1K seq, 1K hidden): 2D-FFT attention + two BPMM FFN layers.
+
+Everything is shape-static and jit-lowerable; ``aot.py`` exports the
+variants the Rust runtime loads.  Parameters are created by the
+``init_*`` functions with a deterministic seed so Rust-side tests can
+reproduce expected outputs bit-for-bit via the same HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import butterfly as bf
+from .kernels import fft as kfft
+from .kernels.ref import log2_int, random_bpmm_factors
+
+
+# ---------------------------------------------------------------------------
+# BPMM linear layer (Fig. 10 slicing)
+# ---------------------------------------------------------------------------
+
+def make_butterfly_linear_params(d_in: int, d_out: int, seed: int = 0,
+                                 dtype=jnp.float32) -> list[jnp.ndarray]:
+    """Factor sets for a (d_in -> d_out) BPMM linear layer.
+
+    Per Fig. 10: k = max(d_in, d_out) / min(d_in, d_out) factor sets of
+    scale min(d_in, d_out).  Both sizes must be powers of two.
+    """
+    m = min(d_in, d_out)
+    k = max(d_in, d_out) // m
+    assert k * m == max(d_in, d_out), (d_in, d_out)
+    if m > bf.MAX_BPMM_POINTS:
+        # Beyond the single-DFG limit each slice is itself a two-stage
+        # (Fig. 9) butterfly — returned as staged-factor dicts.
+        return [make_staged_bpmm_factors(m, seed=seed + 17 * j, dtype=dtype)
+                for j in range(k)]
+    return [random_bpmm_factors(m, seed=seed + 17 * j, dtype=dtype)
+            for j in range(k)]
+
+
+def butterfly_linear(x: jnp.ndarray, factor_sets: Sequence[jnp.ndarray],
+                     d_in: int, d_out: int,
+                     block_b: int = bf.DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """BPMM linear layer over x of shape (..., d_in) -> (..., d_out)."""
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, d_in))
+
+    def run(piece, factors):
+        if isinstance(factors, dict):  # staged (Fig. 9) factor set
+            return bpmm_staged(piece, factors, block_b=block_b)
+        return bf.bpmm(piece, factors, block_b=block_b)
+
+    if d_in == d_out:
+        y = run(flat, factor_sets[0])
+    elif d_in > d_out:
+        k = d_in // d_out
+        pieces = jnp.split(flat, k, axis=-1)
+        y = sum(run(p, f) for p, f in zip(pieces, factor_sets))
+    else:
+        k = d_out // d_in
+        y = jnp.concatenate([run(flat, f) for f in factor_sets], axis=-1)
+    return y.reshape(lead + (d_out,))
+
+
+# ---------------------------------------------------------------------------
+# Multi-stage division (Fig. 9)
+# ---------------------------------------------------------------------------
+
+def default_division(n: int, max_points: int) -> tuple[int, int]:
+    """Balanced r x c division with both factors <= max_points.
+
+    Mirrors the paper's Fig.-14 finding that balanced divisions win
+    (2k -> 32x64, 4k -> 64x64, 8k -> 128x64).
+    """
+    stages = log2_int(n)
+    r = 1 << ((stages + 1) // 2)
+    c = n // r
+    while r > max_points:
+        r //= 2
+        c *= 2
+    while c > max_points:
+        c //= 2
+        r *= 2
+    assert r * c == n and r <= max_points and c <= max_points, (n, r, c)
+    return r, c
+
+
+def make_staged_bpmm_factors(n: int, seed: int = 0, dtype=jnp.float32,
+                             division: tuple[int, int] | None = None):
+    """Two-stage (Monarch-like) butterfly factors for n > MAX_BPMM_POINTS.
+
+    Column stage: one scale-r factor set per column group; row stage: one
+    scale-c set per row.  This is exactly the structure the paper executes
+    as DFG1 / barrier / DFG2 (twiddle layer omitted for BPMM).
+    """
+    r, c = division or default_division(n, bf.MAX_BPMM_POINTS)
+    col = jnp.stack([random_bpmm_factors(r, seed=seed + 31 * j, dtype=dtype)
+                     for j in range(c)])         # (c, log2 r, r//2, 4)
+    row = jnp.stack([random_bpmm_factors(c, seed=seed + 7919 + j, dtype=dtype)
+                     for j in range(r)])         # (r, log2 c, c//2, 4)
+    return {"r": r, "c": c, "col": col, "row": row}
+
+
+def bpmm_staged(x: jnp.ndarray, factors, block_b: int = bf.DEFAULT_BLOCK_B):
+    """Two-stage BPMM of a long vector batch (batch, n), n = r*c.
+
+    Layout matches Fig. 9: x viewed as A[r, c] row-major; stage 1 runs
+    scale-r butterflies down the columns, stage 2 scale-c butterflies
+    along the rows.  ``factors`` comes from make_staged_bpmm_factors.
+    """
+    r, c, col, row = factors["r"], factors["c"], factors["col"], factors["row"]
+    batch, n = x.shape
+    assert n == r * c, (n, r, c)
+    a = x.reshape(batch, r, c)
+    # Column stage: column j (length r) goes through factor set col[j].
+    at = a.transpose(2, 0, 1)                             # (c, batch, r)
+    at = bf.bpmm_grouped(at, col, block_b=block_b)
+    a = at.transpose(1, 2, 0)                             # (batch, r, c)
+    # Row stage: row i (length c) goes through factor set row[i].
+    ar = a.transpose(1, 0, 2)                             # (r, batch, c)
+    ar = bf.bpmm_grouped(ar, row, block_b=block_b)
+    a = ar.transpose(1, 0, 2)                             # (batch, r, c)
+    return a.reshape(batch, n)
+
+
+def fft_staged(x_r: jnp.ndarray, x_i: jnp.ndarray,
+               division: tuple[int, int] | None = None,
+               block_b: int = bf.DEFAULT_BLOCK_B):
+    """Four-step Cooley-Tukey FFT of (batch, n) with n beyond MAX_FFT_POINTS.
+
+    n = n1 * n2; input viewed as A[n1][n2] = x[n1 + n1_total*n2]... we use
+    the standard decomposition: with n = n1*n2,
+      A[a][b]   = x[a + n1*b]            (a in [0,n1), b in [0,n2))
+      Y[a]      = FFT_n2(A[a][:])        (row FFTs, the paper's DFG1)
+      Y[a][k2] *= w_n^(a*k2)             (twiddle layer)
+      Z[:, k2]  = FFT_n1(Y[:, k2])       (column FFTs, DFG2)
+      X[n2*k1 + k2] = Z[k1][k2]          (row-major flatten)
+    """
+    batch, n = x_r.shape
+    n1, n2 = division or default_division(n, kfft.MAX_FFT_POINTS)
+    assert n1 * n2 == n
+    # A[a][b] = x[a + n1*b]: reshape (n2, n1) then transpose.
+    ar = x_r.reshape(batch, n2, n1).transpose(0, 2, 1)   # (batch, n1, n2)
+    ai = x_i.reshape(batch, n2, n1).transpose(0, 2, 1)
+    # Row FFTs (length n2).
+    yr, yi = kfft.fft(ar.reshape(batch * n1, n2), ai.reshape(batch * n1, n2),
+                      block_b=block_b)
+    yr = yr.reshape(batch, n1, n2)
+    yi = yi.reshape(batch, n1, n2)
+    # Twiddle: w_n^(a*k2), a row index, k2 col index.
+    a_idx = np.arange(n1)[:, None]
+    k2_idx = np.arange(n2)[None, :]
+    ang = -2.0 * np.pi * (a_idx * k2_idx) / n
+    twr = jnp.asarray(np.cos(ang), dtype=x_r.dtype)
+    twi = jnp.asarray(np.sin(ang), dtype=x_r.dtype)
+    zr = yr * twr - yi * twi
+    zi = yr * twi + yi * twr
+    # Column FFTs (length n1): transpose so columns are contiguous.
+    zr_t = zr.transpose(0, 2, 1).reshape(batch * n2, n1)
+    zi_t = zi.transpose(0, 2, 1).reshape(batch * n2, n1)
+    fr, fi = kfft.fft(zr_t, zi_t, block_b=block_b)
+    fr = fr.reshape(batch, n2, n1).transpose(0, 2, 1)    # (batch, n1, n2)
+    fi = fi.reshape(batch, n2, n1).transpose(0, 2, 1)
+    # X[n2*k1 + k2] = Z[k1][k2]: row-major flatten.
+    return fr.reshape(batch, n), fi.reshape(batch, n)
+
+
+def fft_auto(x_r: jnp.ndarray, x_i: jnp.ndarray,
+             block_b: int = bf.DEFAULT_BLOCK_B):
+    """1D FFT dispatching to single-DFG or staged form by scale."""
+    n = x_r.shape[-1]
+    if n <= kfft.MAX_FFT_POINTS:
+        return kfft.fft(x_r, x_i, block_b=block_b)
+    return fft_staged(x_r, x_i, block_b=block_b)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def fnet_mixing(x: jnp.ndarray, block_b: int = bf.DEFAULT_BLOCK_B):
+    """2D-FFT token mixing over (seq, hidden) using the Pallas FFT kernel,
+    dispatching each axis through fft_auto (staged when beyond 256)."""
+    lead = x.shape[:-2]
+    seq, hid = x.shape[-2:]
+    flat = x.reshape((-1, hid))
+    hr, hi = fft_auto(flat, jnp.zeros_like(flat), block_b=block_b)
+    hr = hr.reshape(lead + (seq, hid))
+    hi = hi.reshape(lead + (seq, hid))
+    hr_t = jnp.swapaxes(hr, -1, -2).reshape((-1, seq))
+    hi_t = jnp.swapaxes(hi, -1, -2).reshape((-1, seq))
+    sr, _ = fft_auto(hr_t, hi_t, block_b=block_b)
+    sr = jnp.swapaxes(sr.reshape(lead + (hid, seq)), -1, -2)
+    return sr.astype(x.dtype)
+
+
+@dataclasses.dataclass
+class FnetBlockParams:
+    """FABNet-style block: FFT mixing + BPMM FFN (d -> ffn_mult*d -> d)."""
+    d: int
+    ffn_mult: int
+    ffn1: list  # factor sets d -> ffn_mult*d
+    ffn2: list  # factor sets ffn_mult*d -> d
+
+    @staticmethod
+    def init(d: int, ffn_mult: int = 4, seed: int = 0) -> "FnetBlockParams":
+        return FnetBlockParams(
+            d=d, ffn_mult=ffn_mult,
+            ffn1=make_butterfly_linear_params(d, ffn_mult * d, seed=seed),
+            ffn2=make_butterfly_linear_params(ffn_mult * d, d, seed=seed + 1),
+        )
+
+
+def fnet_block(x: jnp.ndarray, p: FnetBlockParams,
+               block_b: int = bf.DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """x: (batch, seq, d) -> (batch, seq, d)."""
+    h = x + fnet_mixing(layer_norm(x), block_b=block_b)
+    z = layer_norm(h)
+    z = butterfly_linear(z, p.ffn1, p.d, p.ffn_mult * p.d, block_b=block_b)
+    z = jax.nn.gelu(z)
+    z = butterfly_linear(z, p.ffn2, p.ffn_mult * p.d, p.d, block_b=block_b)
+    return h + z
+
+
+@dataclasses.dataclass
+class ButterflyAttentionParams:
+    """Softmax attention with BPMM q,k,v and output projections."""
+    d: int
+    heads: int
+    wq: list
+    wk: list
+    wv: list
+    wo: list
+
+    @staticmethod
+    def init(d: int, heads: int, seed: int = 0) -> "ButterflyAttentionParams":
+        return ButterflyAttentionParams(
+            d=d, heads=heads,
+            wq=make_butterfly_linear_params(d, d, seed=seed),
+            wk=make_butterfly_linear_params(d, d, seed=seed + 1),
+            wv=make_butterfly_linear_params(d, d, seed=seed + 2),
+            wo=make_butterfly_linear_params(d, d, seed=seed + 3),
+        )
+
+
+def butterfly_attention(x: jnp.ndarray, p: ButterflyAttentionParams,
+                        block_b: int = bf.DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """x: (batch, seq, d).  AT-to_qkv kernels are BPMM; scores stay dense."""
+    b, s, d = x.shape
+    h = p.heads
+    dh = d // h
+    q = butterfly_linear(x, p.wq, d, d, block_b=block_b)
+    k = butterfly_linear(x, p.wk, d, d, block_b=block_b)
+    v = butterfly_linear(x, p.wv, d, d, block_b=block_b)
+
+    def split(t):
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(
+        jnp.asarray(dh, x.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhst,bhtd->bhsd", probs, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return butterfly_linear(o, p.wo, d, d, block_b=block_b)
+
+
+@dataclasses.dataclass
+class VanillaButterflyParams:
+    """Table-IV one-layer vanilla transformer: 2D-FFT attention + BPMM FFN."""
+    d: int
+    ffn: FnetBlockParams
+
+    @staticmethod
+    def init(d: int, seed: int = 0) -> "VanillaButterflyParams":
+        return VanillaButterflyParams(d=d, ffn=FnetBlockParams.init(
+            d, ffn_mult=2, seed=seed))
+
+
+def vanilla_butterfly_layer(x: jnp.ndarray, p: VanillaButterflyParams,
+                            block_b: int = bf.DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """One encoder layer, attention matrix replaced by 2D FFT, FFN by BPMM."""
+    h = x + fnet_mixing(layer_norm(x), block_b=block_b)
+    z = layer_norm(h)
+    z = butterfly_linear(z, p.ffn.ffn1, p.d, p.ffn.ffn_mult * p.d,
+                         block_b=block_b)
+    z = jax.nn.gelu(z)
+    z = butterfly_linear(z, p.ffn.ffn2, p.ffn.ffn_mult * p.d, p.d,
+                         block_b=block_b)
+    return h + z

@@ -1,0 +1,130 @@
+"""Pallas BPMM kernel vs pure-jnp / dense-matrix oracles.
+
+Dense parametrized grids substitute for hypothesis (unavailable offline):
+shapes, batch tilings, seeds and stage structure are swept exhaustively at
+small scale and spot-checked at the paper's single-DFG limit (512).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import butterfly as bf
+from compile.kernels import ref
+
+
+def rand_x(batch, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(batch, n)).astype(np.float32))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128, 256, 512])
+@pytest.mark.parametrize("batch", [1, 3, 16])
+def test_bpmm_matches_ref(n, batch):
+    x = rand_x(batch, n, seed=n + batch)
+    f = ref.random_bpmm_factors(n, seed=n)
+    got = bf.bpmm(x, f)
+    want = ref.bpmm_ref(x, f)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [4, 16, 64])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_bpmm_matches_dense_product(n, seed):
+    """The kernel equals multiplication by the materialized product of
+    dense stage matrices — the ground-truth BPMM semantics (Fig. 4)."""
+    x = rand_x(5, n, seed=seed)
+    f = ref.random_bpmm_factors(n, seed=seed + 100)
+    m = ref.bpmm_dense_matrix(n, np.asarray(f))
+    want = np.asarray(x) @ m.T
+    got = bf.bpmm(x, f)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_b", [1, 4, 16, 32])
+def test_bpmm_block_tiling_invariance(block_b):
+    """Output must not depend on the batch tile size (pure partitioning)."""
+    x = rand_x(24, 64, seed=7)
+    f = ref.random_bpmm_factors(64, seed=7)
+    base = bf.bpmm(x, f, block_b=16)
+    got = bf.bpmm(x, f, block_b=block_b)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_bpmm_batch_padding():
+    """Batches that don't divide the tile are padded and cropped correctly."""
+    x = rand_x(17, 32, seed=9)
+    f = ref.random_bpmm_factors(32, seed=9)
+    got = bf.bpmm(x, f, block_b=16)
+    want = ref.bpmm_ref(x, f)
+    assert got.shape == (17, 32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_identity_factors_are_identity():
+    n = 64
+    stages = ref.log2_int(n)
+    ident = jnp.tile(jnp.asarray([1.0, 0.0, 0.0, 1.0], jnp.float32),
+                     (stages, n // 2, 1))
+    x = rand_x(4, n)
+    np.testing.assert_allclose(bf.bpmm(x, ident), x, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("stage", [0, 1, 2, 3, 4])
+def test_single_stage(stage):
+    n = 32
+    rng = np.random.default_rng(stage)
+    w = jnp.asarray(rng.normal(size=(n // 2, 4)).astype(np.float32))
+    x = rand_x(6, n, seed=stage)
+    got = bf.bpmm_single_stage(x, w, stage)
+    want = ref.bpmm_stage_ref(x, w, stage)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_stage_sparsity_rate():
+    """Each stage matrix has exactly 2 nonzeros per row — sparsity 2/N."""
+    n = 64
+    for s in range(ref.log2_int(n)):
+        w = np.random.default_rng(s).normal(size=(n // 2, 4))
+        m = ref.stage_dense_matrix(n, s, w)
+        nnz_per_row = (m != 0).sum(axis=1)
+        assert (nnz_per_row == 2).all()
+
+
+def test_stage_pair_indices_partition():
+    """Every element appears in exactly one pair per stage."""
+    n = 128
+    for s in range(ref.log2_int(n)):
+        i, j = ref.stage_pair_indices(n, s)
+        allidx = np.concatenate([i, j])
+        assert sorted(allidx.tolist()) == list(range(n))
+        assert (j - i == (1 << s)).all()
+
+
+@pytest.mark.parametrize("groups,batch,n", [(2, 4, 16), (4, 8, 32), (3, 5, 64)])
+def test_bpmm_grouped(groups, batch, n):
+    rng = np.random.default_rng(groups * n)
+    x = jnp.asarray(rng.normal(size=(groups, batch, n)).astype(np.float32))
+    fs = jnp.stack([ref.random_bpmm_factors(n, seed=g) for g in range(groups)])
+    got = bf.bpmm_grouped(x, fs)
+    for g in range(groups):
+        want = ref.bpmm_ref(x[g], fs[g])
+        np.testing.assert_allclose(got[g], want, rtol=1e-4, atol=1e-4)
+
+
+def test_bpmm_linearity():
+    """BPMM is linear: f(ax + by) = a f(x) + b f(y)."""
+    n = 64
+    f = ref.random_bpmm_factors(n, seed=21)
+    x, y = rand_x(3, n, seed=1), rand_x(3, n, seed=2)
+    lhs = bf.bpmm(2.5 * x - 1.5 * y, f)
+    rhs = 2.5 * bf.bpmm(x, f) - 1.5 * bf.bpmm(y, f)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+def test_complexity_is_nlogn():
+    """Factor parameter count is (n/2)*4*log2(n) = 2n log2 n, not n^2."""
+    for n in [64, 256, 512]:
+        f = ref.random_bpmm_factors(n)
+        assert f.size == 2 * n * ref.log2_int(n)
+        assert f.size < n * n

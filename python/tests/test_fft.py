@@ -1,0 +1,131 @@
+"""Pallas FFT kernel vs numpy.fft and butterfly-stage oracles."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import fft as kfft
+from compile.kernels import ref
+
+
+def rand(batch, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(batch, n)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(batch, n)).astype(np.float32)))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128, 256])
+@pytest.mark.parametrize("batch", [1, 5, 16])
+def test_fft_matches_numpy(n, batch):
+    xr, xi = rand(batch, n, seed=n + batch)
+    fr, fi = kfft.fft(xr, xi)
+    want = np.fft.fft(np.asarray(xr) + 1j * np.asarray(xi), axis=-1)
+    tol = 1e-3 * max(1, n // 64)
+    np.testing.assert_allclose(fr, want.real, rtol=tol, atol=tol)
+    np.testing.assert_allclose(fi, want.imag, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_fft_real_input(n):
+    xr, _ = rand(3, n, seed=n)
+    fr, fi = kfft.fft_real(xr)
+    want = np.fft.fft(np.asarray(xr), axis=-1)
+    np.testing.assert_allclose(fr, want.real, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(fi, want.imag, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [4, 32, 128])
+def test_ifft_roundtrip(n):
+    xr, xi = rand(4, n, seed=n + 1)
+    fr, fi = kfft.fft(xr, xi)
+    br, bi = kfft.fft(fr, fi, inverse=True)
+    np.testing.assert_allclose(br, xr, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(bi, xi, rtol=1e-3, atol=1e-4)
+
+
+def test_fft_hermitian_symmetry_for_real_input():
+    """X[k] = conj(X[n-k]) for real input — catches twiddle-sign bugs."""
+    n = 64
+    xr, _ = rand(2, n, seed=5)
+    fr, fi = kfft.fft_real(xr)
+    fr, fi = np.asarray(fr), np.asarray(fi)
+    idx = (n - np.arange(1, n)) % n
+    np.testing.assert_allclose(fr[:, 1:], fr[:, idx], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(fi[:, 1:], -fi[:, idx], rtol=1e-3, atol=1e-3)
+
+
+def test_parseval():
+    """sum |x|^2 = (1/n) sum |X|^2 — energy conservation of the stages."""
+    n = 128
+    xr, xi = rand(3, n, seed=6)
+    fr, fi = kfft.fft(xr, xi)
+    e_t = np.sum(np.asarray(xr) ** 2 + np.asarray(xi) ** 2, axis=-1)
+    e_f = np.sum(np.asarray(fr) ** 2 + np.asarray(fi) ** 2, axis=-1) / n
+    np.testing.assert_allclose(e_t, e_f, rtol=1e-3)
+
+
+def test_dc_bin_is_sum():
+    n = 64
+    xr, _ = rand(2, n, seed=7)
+    fr, fi = kfft.fft_real(xr)
+    np.testing.assert_allclose(np.asarray(fr)[:, 0],
+                               np.asarray(xr).sum(-1), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(fi)[:, 0], 0, atol=1e-4)
+
+
+def test_fft_butterfly_ref_matches_numpy():
+    """The pure-jnp butterfly-stage FFT oracle itself is correct."""
+    n = 64
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(3, n)) + 1j * rng.normal(size=(3, n))
+    got = ref.fft_butterfly_ref(jnp.asarray(x))
+    want = np.fft.fft(x, axis=-1)
+    # jax truncates complex128 -> complex64 without jax_enable_x64.
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_fft_stage_factors_match_dense_dft():
+    """Product of stage matrices (after bit reversal) is the DFT matrix."""
+    n = 16
+    perm = ref.bit_reversal_permutation(n)
+    f = ref.fft_stage_factors(n)
+    m = np.eye(n, dtype=np.complex128)[perm]  # P_n
+    for s in range(ref.log2_int(n)):
+        m = ref.stage_dense_matrix(n, s, f[s]) @ m
+    k = np.arange(n)
+    dft = np.exp(-2j * np.pi * np.outer(k, k) / n)
+    np.testing.assert_allclose(m, dft, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("shape", [(2, 3, 32, 16), (1, 64, 64), (4, 16, 128)])
+def test_fft2d_matches_numpy(shape):
+    rng = np.random.default_rng(sum(shape))
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    sr, si = kfft.fft2d(x)
+    want = np.fft.fft2(np.asarray(x), axes=(-2, -1))
+    np.testing.assert_allclose(sr, want.real, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(si, want.imag, rtol=2e-3, atol=2e-3)
+
+
+def test_fnet_mixing_is_real_part():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(2, 32, 32)).astype(np.float32))
+    got = kfft.fnet_mixing(x)
+    want = ref.fnet_mixing_ref(x)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("block_b", [1, 8, 32])
+def test_fft_block_tiling_invariance(block_b):
+    xr, xi = rand(16, 64, seed=12)
+    base_r, base_i = kfft.fft(xr, xi, block_b=16)
+    got_r, got_i = kfft.fft(xr, xi, block_b=block_b)
+    np.testing.assert_allclose(got_r, base_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_i, base_i, rtol=1e-5, atol=1e-5)
+
+
+def test_bit_reversal_is_involution():
+    for n in [2, 8, 64, 256]:
+        p = ref.bit_reversal_permutation(n)
+        assert (p[p] == np.arange(n)).all()
+        assert sorted(p.tolist()) == list(range(n))

@@ -1,0 +1,157 @@
+"""L2 model tests: slicing, staged division, blocks."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10 slicing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d_in,d_out", [(32, 32), (64, 16), (16, 64),
+                                        (128, 32), (32, 128)])
+def test_butterfly_linear_slicing(d_in, d_out):
+    fs = M.make_butterfly_linear_params(d_in, d_out, seed=d_in + d_out)
+    x = rand((6, d_in), seed=1)
+    got = M.butterfly_linear(x, fs, d_in, d_out)
+    want = ref.butterfly_linear_ref(x, fs, d_in, d_out)
+    assert got.shape == (6, d_out)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_butterfly_linear_leading_axes():
+    fs = M.make_butterfly_linear_params(32, 32, seed=3)
+    x = rand((2, 5, 32), seed=2)
+    got = M.butterfly_linear(x, fs, 32, 32)
+    flat = M.butterfly_linear(x.reshape(10, 32), fs, 32, 32)
+    np.testing.assert_allclose(got.reshape(10, 32), flat, rtol=1e-6)
+
+
+def test_butterfly_linear_param_count():
+    """Slicing preserves the O(n log n) parameter budget (Fig. 10)."""
+    d_in, d_out = 256, 64
+    fs = M.make_butterfly_linear_params(d_in, d_out)
+    total = sum(int(np.prod(f.shape)) for f in fs)
+    m = min(d_in, d_out)
+    k = max(d_in, d_out) // m
+    assert total == k * 2 * m * ref.log2_int(m)
+    assert total < d_in * d_out  # sparser than dense
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 staged division
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,expect", [(1024, (32, 32)), (2048, (64, 32)),
+                                      (4096, (64, 64)), (8192, (128, 64))])
+def test_default_division_balanced(n, expect):
+    assert M.default_division(n, 512) == expect
+
+
+def test_default_division_respects_cap():
+    r, c = M.default_division(64 * 1024, 256)
+    assert r * c == 64 * 1024 and r <= 256 and c <= 256
+    assert (r, c) == (256, 256)  # the paper's 64K example
+
+
+@pytest.mark.parametrize("n", [1024, 2048])
+def test_bpmm_staged_matches_per_group_ref(n):
+    st = M.make_staged_bpmm_factors(n, seed=n)
+    x = rand((3, n), seed=n + 1)
+    got = np.asarray(M.bpmm_staged(x, st))
+    r, c = st["r"], st["c"]
+    a = np.asarray(x).reshape(3, r, c)
+    col, row = np.asarray(st["col"]), np.asarray(st["row"])
+    mid = np.zeros_like(a)
+    for j in range(c):
+        mid[:, :, j] = np.asarray(
+            ref.bpmm_ref(jnp.asarray(a[:, :, j]), jnp.asarray(col[j])))
+    out = np.zeros_like(mid)
+    for i in range(r):
+        out[:, i, :] = np.asarray(
+            ref.bpmm_ref(jnp.asarray(mid[:, i, :]), jnp.asarray(row[i])))
+    np.testing.assert_allclose(got.reshape(3, r, c), out,
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,division", [(512, None), (1024, (32, 32)),
+                                        (1024, (64, 16)), (2048, None),
+                                        (4096, None)])
+def test_fft_staged_matches_numpy(n, division):
+    x = rand((2, n), seed=n)
+    fr, fi = M.fft_staged(x, jnp.zeros_like(x), division=division)
+    want = np.fft.fft(np.asarray(x), axis=-1)
+    tol = 5e-3
+    np.testing.assert_allclose(np.asarray(fr), want.real, rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(fi), want.imag, rtol=tol, atol=tol)
+
+
+def test_fft_auto_dispatch():
+    """fft_auto must agree across the single-DFG/staged boundary."""
+    for n in [256, 512]:
+        x = rand((2, n), seed=n + 9)
+        fr, fi = M.fft_auto(x, jnp.zeros_like(x))
+        want = np.fft.fft(np.asarray(x), axis=-1)
+        np.testing.assert_allclose(np.asarray(fr), want.real,
+                                   rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def test_fnet_block_shape_and_determinism():
+    p = M.FnetBlockParams.init(64, seed=1)
+    x = rand((2, 32, 64), seed=4, scale=0.1)
+    y1, y2 = M.fnet_block(x, p), M.fnet_block(x, p)
+    assert y1.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_fnet_mixing_matches_ref_inside_block():
+    x = rand((1, 16, 32), seed=5, scale=0.1)
+    got = M.fnet_mixing(x)
+    want = ref.fnet_mixing_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_butterfly_attention_matches_dense_equivalent():
+    """BPMM attention == dense attention with materialized BPMM matrices."""
+    d, heads, s, b = 32, 2, 8, 2
+    p = M.ButterflyAttentionParams.init(d, heads, seed=6)
+    x = rand((b, s, d), seed=7, scale=0.3)
+    got = M.butterfly_attention(x, p)
+
+    def dense_of(fs):
+        return jnp.asarray(ref.bpmm_dense_matrix(d, np.asarray(fs[0])).T)
+
+    q = x @ dense_of(p.wq)
+    k = x @ dense_of(p.wk)
+    v = x @ dense_of(p.wv)
+    dh = d // heads
+    qh = q.reshape(b, s, heads, dh).transpose(0, 2, 1, 3)
+    kh = k.reshape(b, s, heads, dh).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, s, heads, dh).transpose(0, 2, 1, 3)
+    o = ref.softmax_attention_ref(qh, kh, vh)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    want = o @ dense_of(p.wo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_vanilla_layer_shape():
+    p = M.VanillaButterflyParams.init(64, seed=8)
+    x = rand((1, 32, 64), seed=9, scale=0.1)
+    y = M.vanilla_butterfly_layer(x, p)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()

@@ -1,0 +1,220 @@
+//! Hardware configuration of the dataflow substrate (Table I / Table III).
+//!
+//! Two presets matter for the paper's evaluation:
+//!
+//! * [`ArchConfig::full`] — the headline design: 4×4 PE mesh, SIMD32 per
+//!   PE (16 × 32 = 512 MACs, 1.02 TFLOPS fp16 at 1 GHz), 4 MB SPM,
+//!   dual-channel 25.6 GB/s DDR.
+//! * [`ArchConfig::scaled_128`] — the fair-comparison configuration of
+//!   §VI-H: MACs scaled to 128 (SIMD8), one DDR channel halved, matching
+//!   the SOTA butterfly FPGA accelerator's 204.8 GFLOPS peak.
+
+/// Function-unit kinds inside a PE (Fig. 8 decoupled units).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum UnitKind {
+    Load,
+    Flow,
+    Cal,
+    Store,
+}
+
+impl UnitKind {
+    pub const ALL: [UnitKind; 4] =
+        [UnitKind::Load, UnitKind::Flow, UnitKind::Cal, UnitKind::Store];
+
+    pub fn index(self) -> usize {
+        match self {
+            UnitKind::Load => 0,
+            UnitKind::Flow => 1,
+            UnitKind::Cal => 2,
+            UnitKind::Store => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            UnitKind::Load => "Load",
+            UnitKind::Flow => "Flow",
+            UnitKind::Cal => "Cal",
+            UnitKind::Store => "Store",
+        }
+    }
+}
+
+/// Complete architecture configuration.
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    /// PE mesh dimensions (paper: 4×4).
+    pub mesh_rows: usize,
+    pub mesh_cols: usize,
+    /// SIMD lanes per PE (32 in the full design → 512 MACs total).
+    pub simd_width: usize,
+    /// Clock frequency in Hz (1 GHz).
+    pub freq_hz: f64,
+    /// Element size in bytes (fp16 per Table I).
+    pub elem_bytes: usize,
+
+    // --- SPM (Fig. 9 multi-line design) ---
+    /// Total SPM capacity in bytes (4 MB).
+    pub spm_bytes: usize,
+    /// Interleaved banks (4).
+    pub spm_banks: usize,
+    /// Lines per bank (8).
+    pub spm_lines_per_bank: usize,
+    /// SRAM entry width in elements (SIMD16).
+    pub spm_entry_width: usize,
+    /// SPM access latency in cycles.
+    pub spm_latency: u64,
+
+    // --- NoC ---
+    /// Per-hop router latency in cycles.
+    pub noc_hop_latency: u64,
+    /// Link width in bytes/cycle.
+    pub noc_link_bytes: usize,
+
+    // --- DDR/DMA ---
+    /// Number of DDR channels (2 full, 1 scaled).
+    pub ddr_channels: usize,
+    /// Bandwidth per channel in bytes/s (25.6 GB/s).
+    pub ddr_chan_bw: f64,
+    /// DMA burst setup latency in cycles.
+    pub dma_setup: u64,
+
+    // --- Scheduling (Fig. 8) ---
+    /// Fixed issue overhead per micro-code block, cycles (arbitration +
+    /// context fetch in the controlUnit).
+    pub block_issue_overhead: u64,
+    /// Iteration contexts resident per PE (SIMD-RAM double buffering);
+    /// bounds how many DFG iterations stream concurrently.
+    pub inflight_iters: usize,
+
+    // --- Single-DFG capacity limits (§V-B) ---
+    pub max_fft_points: usize,
+    pub max_bpmm_points: usize,
+}
+
+impl ArchConfig {
+    /// The paper's full design (Table I rightmost column, 512 MACs).
+    pub fn full() -> Self {
+        ArchConfig {
+            mesh_rows: 4,
+            mesh_cols: 4,
+            simd_width: 32,
+            freq_hz: 1.0e9,
+            elem_bytes: 2,
+            spm_bytes: 4 << 20,
+            spm_banks: 4,
+            spm_lines_per_bank: 8,
+            spm_entry_width: 16,
+            spm_latency: 2,
+            noc_hop_latency: 1,
+            noc_link_bytes: 32,
+            ddr_channels: 2,
+            ddr_chan_bw: 25.6e9,
+            dma_setup: 16,
+            block_issue_overhead: 4,
+            inflight_iters: 4,
+            max_fft_points: 256,
+            max_bpmm_points: 512,
+        }
+    }
+
+    /// §VI-H fair-comparison scale-down: 128 MACs (SIMD8), half DDR.
+    pub fn scaled_128() -> Self {
+        ArchConfig {
+            simd_width: 8,
+            ddr_channels: 1,
+            ..Self::full()
+        }
+    }
+
+    /// Table IV configuration: SIMD8 PE16 (128 MACs), power 3.94 W.
+    pub fn table4() -> Self {
+        Self::scaled_128()
+    }
+
+    /// Number of PEs in the mesh.
+    pub fn num_pes(&self) -> usize {
+        self.mesh_rows * self.mesh_cols
+    }
+
+    /// Total MAC units.
+    pub fn total_macs(&self) -> usize {
+        self.num_pes() * self.simd_width
+    }
+
+    /// Peak fp16 FLOPS (MAC = 2 flops).
+    pub fn peak_flops(&self) -> f64 {
+        self.total_macs() as f64 * 2.0 * self.freq_hz
+    }
+
+    /// Aggregate DDR bandwidth (bytes/s).
+    pub fn ddr_bw(&self) -> f64 {
+        self.ddr_channels as f64 * self.ddr_chan_bw
+    }
+
+    /// DDR bytes per cycle.
+    pub fn ddr_bytes_per_cycle(&self) -> f64 {
+        self.ddr_bw() / self.freq_hz
+    }
+
+    /// Manhattan distance between two PEs on the mesh.
+    pub fn hop_distance(&self, a: usize, b: usize) -> usize {
+        let (ar, ac) = (a / self.mesh_cols, a % self.mesh_cols);
+        let (br, bc) = (b / self.mesh_cols, b % self.mesh_cols);
+        ar.abs_diff(br) + ac.abs_diff(bc)
+    }
+
+    /// Seconds for a cycle count at this clock.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz
+    }
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self::full()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_matches_table1() {
+        let c = ArchConfig::full();
+        assert_eq!(c.num_pes(), 16);
+        assert_eq!(c.total_macs(), 512);
+        // 1.02 TFLOPS fp16 (Table I): 512 MACs * 2 * 1 GHz = 1.024e12.
+        assert!((c.peak_flops() - 1.024e12).abs() < 1e9);
+        // 25.6x2 GB/s DDR.
+        assert!((c.ddr_bw() - 51.2e9).abs() < 1e6);
+        assert_eq!(c.spm_bytes, 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn scaled_config_matches_section6h() {
+        let c = ArchConfig::scaled_128();
+        assert_eq!(c.total_macs(), 128);
+        // 256 GFLOPS at 128 MACs (Table I bottom entry).
+        assert!((c.peak_flops() - 256e9).abs() < 1e6);
+        assert!((c.ddr_bw() - 25.6e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn hop_distance_mesh() {
+        let c = ArchConfig::full();
+        assert_eq!(c.hop_distance(0, 0), 0);
+        assert_eq!(c.hop_distance(0, 3), 3); // same row
+        assert_eq!(c.hop_distance(0, 15), 6); // opposite corner 4x4
+        assert_eq!(c.hop_distance(5, 6), 1);
+    }
+
+    #[test]
+    fn unit_kind_indexing() {
+        for (i, k) in UnitKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+    }
+}

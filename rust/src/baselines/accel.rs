@@ -1,0 +1,141 @@
+//! Analytical models of the accelerator baselines.
+//!
+//! The SOTA butterfly accelerator [8] (FABNet's FPGA co-design) is
+//! modelled structurally: a *single-concatenation* butterfly pipeline —
+//! one fixed chain of butterfly stages with stage-serial execution and
+//! per-stage weight streaming, without the reconfigurable multilayer
+//! data reuse our design gets from the mesh.  The paper attributes its
+//! own 1.17×/1.44-1.59× advantage exactly to that difference (§VI-H),
+//! so the model charges [8]:
+//!
+//! * MAC-array efficiency bounded by its published utilization profile
+//!   (pipeline fill/drain per stage chain, stage-serial barriers);
+//! * inter-stage intermediate traffic to on-chip buffers, with DDR
+//!   re-streaming once the working set exceeds its BRAM budget.
+//!
+//! SpAtten and DOTA end-to-end numbers are *quoted* published values
+//! (the paper quotes them too); see `workloads::platforms`.
+
+use crate::dfg::graph::KernelKind;
+use crate::workloads::platforms::Platform;
+use crate::workloads::KernelSpec;
+
+/// FPGA BRAM budget of the SOTA accelerator (Zynq-class part).
+const SOTA_BRAM_BYTES: f64 = 2.0 * 1024.0 * 1024.0;
+/// MAC efficiency of the fixed butterfly pipeline when streaming.
+const SOTA_STREAM_EFF: f64 = 0.80;
+/// Extra stage-serial overhead per butterfly stage (pipeline fill/drain
+/// and buffer turnaround), as a fraction of the stage's compute time.
+const SOTA_STAGE_OVERHEAD: f64 = 0.08;
+
+/// Result of one modelled accelerator kernel.
+#[derive(Debug, Clone)]
+pub struct AccelKernelResult {
+    pub name: String,
+    pub time_s: f64,
+    pub flops: f64,
+    pub dram_bytes: f64,
+    pub mac_utilization: f64,
+}
+
+/// The SOTA butterfly accelerator [8].
+#[derive(Debug, Clone)]
+pub struct SotaButterflyModel {
+    pub platform: Platform,
+}
+
+impl SotaButterflyModel {
+    pub fn new(platform: Platform) -> Self {
+        SotaButterflyModel { platform }
+    }
+
+    /// Run one butterfly kernel through the fixed pipeline.
+    pub fn run(&self, spec: &KernelSpec) -> AccelKernelResult {
+        let n = spec.points as f64;
+        let stages = n.log2();
+        let flops = spec.sparse_flops();
+        let compute = flops / (self.platform.peak_flops * SOTA_STREAM_EFF);
+        // Stage-serial execution: each stage pays fill/drain overhead.
+        let compute = compute * (1.0 + SOTA_STAGE_OVERHEAD * stages / 8.0);
+        // Traffic: input + output once, intermediates spill to DDR when
+        // the per-stage working set exceeds BRAM; FFT doubles planes.
+        let planes = spec.kind.planes() as f64;
+        let vec_bytes = n * 2.0 * planes;
+        let ws = vec_bytes * (spec.vectors.min(64)) as f64
+            + weight_bytes(spec.kind, spec.points);
+        let io_bytes = spec.vectors as f64 * vec_bytes * 2.0;
+        let spill = if ws > SOTA_BRAM_BYTES {
+            // Re-stream intermediates per stage chain half.
+            spec.vectors as f64 * vec_bytes * (stages / 8.0)
+        } else {
+            0.0
+        };
+        let weights = weight_bytes(spec.kind, spec.points)
+            * (spec.vectors as f64 / 256.0).max(1.0) // weight re-fetch per tile
+            ;
+        let dram_bytes = io_bytes + spill + weights;
+        let mem = dram_bytes / self.platform.bandwidth;
+        let time = compute.max(mem);
+        AccelKernelResult {
+            name: spec.name.clone(),
+            time_s: time,
+            flops,
+            dram_bytes,
+            mac_utilization: (flops / self.platform.peak_flops) / time,
+        }
+    }
+}
+
+/// Butterfly weight bytes for an n-point kernel (fp16).
+fn weight_bytes(kind: KernelKind, n: usize) -> f64 {
+    let stages = (n as f64).log2();
+    (n as f64 / 2.0) * stages * kind.weight_scalars_per_node() as f64 * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::platforms::sota_butterfly_accel;
+
+    fn spec(kind: KernelKind, points: usize, vectors: usize) -> KernelSpec {
+        KernelSpec {
+            name: "t".into(),
+            kind,
+            points,
+            vectors,
+            d_in: points,
+            d_out: points,
+            seq: points,
+        }
+    }
+
+    #[test]
+    fn utilization_is_bounded() {
+        let m = SotaButterflyModel::new(sota_butterfly_accel());
+        for n in [128usize, 256, 1024] {
+            let r = m.run(&spec(KernelKind::Fft, n, 1024));
+            assert!(r.mac_utilization > 0.0 && r.mac_utilization <= SOTA_STREAM_EFF + 0.01);
+        }
+    }
+
+    #[test]
+    fn large_working_sets_spill() {
+        // Past the BRAM budget the accelerator re-streams intermediates:
+        // DRAM traffic exceeds pure I/O; below it, traffic ≈ I/O.
+        let m = SotaButterflyModel::new(sota_butterfly_accel());
+        let io = |n: usize, v: usize| (n * 2 * 2 * v * 2) as f64;
+        let small = m.run(&spec(KernelKind::Fft, 128, 1024));
+        assert!(small.dram_bytes < 1.2 * io(128, 1024), "{}", small.dram_bytes);
+        let large = m.run(&spec(KernelKind::Fft, 16384, 1024));
+        assert!(large.dram_bytes > 1.5 * io(16384, 1024), "{}", large.dram_bytes);
+    }
+
+    #[test]
+    fn time_scales_superlinearly_past_bram() {
+        let m = SotaButterflyModel::new(sota_butterfly_accel());
+        let a = m.run(&spec(KernelKind::Bpmm, 512, 4096));
+        let b = m.run(&spec(KernelKind::Bpmm, 8192, 4096));
+        // 16x points → >16x time once spilling (flops grow ~21x here).
+        assert!(b.time_s / a.time_s > 16.0);
+    }
+}

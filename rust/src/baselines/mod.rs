@@ -1,0 +1,12 @@
+//! Analytical models of the comparison platforms.
+//!
+//! * [`gpu`] — Jetson Xavier NX / Nano: roofline execution with a
+//!   cache-hierarchy model that reproduces the butterfly's strided-access
+//!   pathology (Fig. 2's hit-rate collapse and the dense-vs-sparse
+//!   crossover of Fig. 15).
+//! * [`accel`] — the SOTA butterfly FPGA accelerator [8] and the Table-IV
+//!   ASIC baselines (SpAtten, DOTA; their end-to-end numbers are quoted
+//!   from the literature, as the paper itself does).
+
+pub mod accel;
+pub mod gpu;

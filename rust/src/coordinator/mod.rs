@@ -1,0 +1,9 @@
+//! Experiment orchestration: kernel spec → stage plan → windowed
+//! simulation → extrapolated metrics; plus the Table-IV batch-streaming
+//! driver and aggregate helpers used by every figure bench.
+
+pub mod experiment;
+pub mod streaming;
+
+pub use experiment::{run_kernel, run_kernel_with, ExperimentConfig, KernelResult};
+pub use streaming::{stream_workload, StreamResult};

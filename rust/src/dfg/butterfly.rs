@@ -1,0 +1,273 @@
+//! Multilayer butterfly DFG template (Fig. 5b / Fig. 7a) and a functional
+//! executor that proves the template's swap topology is correct.
+//!
+//! Structure for an `n`-point kernel (`s = log2 n` stages):
+//!
+//! * layer 0 — `n/2` LOAD nodes; node `k` fetches elements `2k, 2k+1`.
+//! * layers `1..=s` — `n/2` butterfly nodes; node `k` of layer `l`
+//!   computes pair `k` of stage `l-1`.
+//! * layer `s+1` — `n/2` STORE nodes.
+//!
+//! Inter-layer producers: pair `k` at stage `t` consumes the outputs of
+//! pairs `k & !2^t` and `k | 2^t` of the previous layer — one of which is
+//! `k` itself (the kept half, `COPY_I`) and the other at node distance
+//! `2^t` (the swapped half, `COPY_T`).  This is the "sequential distances
+//! of 1, 2, 4, 8, …" flowing of §III-B.
+
+use anyhow::Result;
+
+use crate::model::log2_int;
+
+use super::graph::{Dfg, Edge, EdgeKind, KernelKind, Node, NodeId, NodeOp};
+
+/// Pair index of element `e` at stage `s`: `((e >> (s+1)) << s) | (e & (2^s - 1))`.
+pub fn pair_of_element(e: usize, stage: usize) -> usize {
+    ((e >> (stage + 1)) << stage) | (e & ((1 << stage) - 1))
+}
+
+/// The two elements of pair `p` at stage `s`.
+pub fn elements_of_pair(p: usize, stage: usize) -> (usize, usize) {
+    let stride = 1usize << stage;
+    let blk = p >> stage;
+    let off = p & (stride - 1);
+    let i = blk * 2 * stride + off;
+    (i, i + stride)
+}
+
+/// Build the multilayer DFG for an `n`-point butterfly kernel.
+pub fn build_butterfly_dfg(kind: KernelKind, n: usize) -> Dfg {
+    let stages = log2_int(n);
+    let half = n / 2;
+    let layers = stages as u32 + 2; // load + stages + store
+    let mut nodes = Vec::with_capacity(half * layers as usize);
+    let mut edges = Vec::new();
+
+    let id_of = |layer: u32, index: usize| NodeId((layer * half as u32) + index as u32);
+
+    // Load layer.
+    for k in 0..half {
+        nodes.push(Node { id: id_of(0, k), layer: 0, index: k as u32, op: NodeOp::Load });
+    }
+    // Butterfly layers.
+    for s in 0..stages {
+        let layer = s as u32 + 1;
+        for k in 0..half {
+            nodes.push(Node {
+                id: id_of(layer, k),
+                layer,
+                index: k as u32,
+                op: NodeOp::Butterfly { stage: s as u32 },
+            });
+            if s == 0 {
+                // Stage 0 pairs are (2k, 2k+1): exactly load node k's fetch.
+                edges.push(Edge {
+                    from: id_of(0, k),
+                    to: id_of(layer, k),
+                    kind: EdgeKind::CopyI,
+                });
+            } else {
+                let keep = k & !(1usize << (s - 1));
+                let swap = k | (1usize << (s - 1));
+                let (local, remote) = if keep == k { (keep, swap) } else { (swap, keep) };
+                debug_assert_eq!(local, k);
+                edges.push(Edge {
+                    from: id_of(layer - 1, local),
+                    to: id_of(layer, k),
+                    kind: EdgeKind::CopyI,
+                });
+                edges.push(Edge {
+                    from: id_of(layer - 1, remote),
+                    to: id_of(layer, k),
+                    kind: EdgeKind::CopyT { node_dist: 1 << (s - 1) },
+                });
+            }
+        }
+    }
+    // Store layer: node k stores the outputs of the last stage's pair k.
+    let last = stages as u32 + 1;
+    for k in 0..half {
+        nodes.push(Node { id: id_of(last, k), layer: last, index: k as u32, op: NodeOp::Store });
+        edges.push(Edge { from: id_of(last - 1, k), to: id_of(last, k), kind: EdgeKind::CopyI });
+    }
+
+    Dfg { kind, points: n, nodes, edges, layers }
+}
+
+/// Per-stage swap distance in node indices (1, 2, 4, … between butterfly
+/// layers; 0 between load/stage0 and lastStage/store).
+pub fn swap_distance(stage: usize) -> usize {
+    if stage == 0 {
+        0
+    } else {
+        1 << (stage - 1)
+    }
+}
+
+/// Functionally execute a BPMM DFG over a vector, walking nodes in layer
+/// order and applying the stage weights — the structural proof that the
+/// multilayer reconstruction computes the same thing as the textbook
+/// in-place butterfly.
+///
+/// `weights[s][p*4..p*4+4]` is pair `p`'s 2x2 block at stage `s`.
+pub fn execute_bpmm_dfg(dfg: &Dfg, weights: &[Vec<f32>], x: &[f32]) -> Result<Vec<f32>> {
+    let n = dfg.points;
+    assert_eq!(x.len(), n);
+    let stages = log2_int(n);
+    assert_eq!(weights.len(), stages);
+    // Value state carried between layers, indexed by element position.
+    let mut vals = x.to_vec();
+    for s in 0..stages {
+        let layer = s as u32 + 1;
+        let mut next = vals.clone();
+        for node in dfg.layer_nodes(layer) {
+            let p = node.index as usize;
+            let (i, j) = elements_of_pair(p, s);
+            let w = &weights[s][p * 4..p * 4 + 4];
+            next[i] = w[0] * vals[i] + w[1] * vals[j];
+            next[j] = w[2] * vals[i] + w[3] * vals[j];
+        }
+        vals = next;
+    }
+    Ok(vals)
+}
+
+/// Functionally execute an FFT DFG: bit-reverse the input (the paper's
+/// P_N permutations folded into SPM addressing), then walk the butterfly
+/// layers applying the standard DIT twiddles.  Proves the *same* swap
+/// topology serves the complex kernel.
+pub fn execute_fft_dfg(dfg: &Dfg, x: &[crate::model::Complex]) -> Vec<crate::model::Complex> {
+    use crate::model::fft::bit_reversal_permutation;
+    use crate::model::Complex;
+    let n = dfg.points;
+    assert_eq!(x.len(), n);
+    let stages = log2_int(n);
+    let perm = bit_reversal_permutation(n);
+    let mut vals: Vec<Complex> = (0..n).map(|k| x[perm[k]]).collect();
+    for s in 0..stages {
+        let layer = s as u32 + 1;
+        let mut next = vals.clone();
+        for node in dfg.layer_nodes(layer) {
+            let (i, j) = elements_of_pair(node.index as usize, s);
+            let off = i & ((1 << s) - 1);
+            let w = Complex::from_polar(
+                1.0,
+                -std::f64::consts::PI * off as f64 / (1 << s) as f64,
+            );
+            let wb = w.mul(vals[j]);
+            next[i] = vals[i].add(wb);
+            next[j] = vals[i].sub(wb);
+        }
+        vals = next;
+    }
+    vals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::butterfly::BpmmFactors;
+    use crate::model::fft::dft_naive;
+    use crate::model::Complex;
+    use crate::util::prop::check;
+
+    #[test]
+    fn pair_element_roundtrip() {
+        for n in [4usize, 16, 64, 256] {
+            for s in 0..log2_int(n) {
+                for p in 0..n / 2 {
+                    let (i, j) = elements_of_pair(p, s);
+                    assert_eq!(j - i, 1 << s);
+                    assert_eq!(pair_of_element(i, s), p);
+                    assert_eq!(pair_of_element(j, s), p);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dfg_structure() {
+        let g = build_butterfly_dfg(KernelKind::Bpmm, 32);
+        assert_eq!(g.layers, 7); // load + 5 stages + store
+        for layer in 0..g.layers {
+            assert_eq!(g.layer_width(layer), 16);
+        }
+        g.validate_partial_order().unwrap();
+        g.validate_layer_indexing().unwrap();
+    }
+
+    #[test]
+    fn swap_distances_are_powers_of_two() {
+        let g = build_butterfly_dfg(KernelKind::Fft, 64);
+        for s in 1..log2_int(64) {
+            let layer = s as u32 + 1;
+            let mut dists: Vec<u32> = g
+                .nodes
+                .iter()
+                .filter(|n| n.layer == layer)
+                .flat_map(|n| g.in_edges(n.id))
+                .filter_map(|e| match e.kind {
+                    EdgeKind::CopyT { node_dist } => Some(node_dist),
+                    _ => None,
+                })
+                .collect();
+            dists.dedup();
+            assert_eq!(dists, vec![1 << (s - 1)]);
+        }
+    }
+
+    #[test]
+    fn every_butterfly_node_has_local_and_remote_input() {
+        let g = build_butterfly_dfg(KernelKind::Bpmm, 64);
+        for node in g.nodes.iter().filter(|n| {
+            matches!(n.op, NodeOp::Butterfly { stage } if stage > 0)
+        }) {
+            let ins: Vec<_> = g.in_edges(node.id).collect();
+            assert_eq!(ins.len(), 2);
+            let locals = ins.iter().filter(|e| e.kind == EdgeKind::CopyI).count();
+            assert_eq!(locals, 1, "node {:?}", node.id);
+        }
+    }
+
+    #[test]
+    fn functional_execution_matches_reference() {
+        check("dfg-bpmm-functional", 30, |rng| {
+            let n = rng.pow2(4, 128);
+            let f = BpmmFactors::random(n, rng);
+            let x = rng.normal_vec(n);
+            let g = build_butterfly_dfg(KernelKind::Bpmm, n);
+            let got = execute_bpmm_dfg(&g, &f.stages, &x).unwrap();
+            let mut want = x.clone();
+            f.apply(&mut want);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn fft_dfg_computes_the_dft() {
+        check("dfg-fft-functional", 20, |rng| {
+            let n = rng.pow2(4, 256);
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let g = build_butterfly_dfg(KernelKind::Fft, n);
+            let got = execute_fft_dfg(&g, &x);
+            let want = dft_naive(&x);
+            for (a, b) in got.iter().zip(&want) {
+                assert!(a.sub(*b).abs() < 1e-7 * n as f64, "{a:?} vs {b:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn node_and_edge_counts() {
+        let n = 128;
+        let g = build_butterfly_dfg(KernelKind::Bpmm, n);
+        let s = log2_int(n);
+        assert_eq!(g.nodes.len(), (n / 2) * (s + 2));
+        // Edges: stage0 has 1 in-edge per node, stages 1..s have 2, store 1.
+        let want_edges = (n / 2) * (1 + 2 * (s - 1) + 1);
+        assert_eq!(g.edges.len(), want_edges);
+        assert_eq!(g.butterfly_node_count(), (n / 2) * s);
+    }
+}

@@ -1,0 +1,220 @@
+//! Layer-tagged dataflow-graph IR.
+//!
+//! The key structural idea of the paper (§III-B): the butterfly's mutual
+//! element swap violates DFG partial ordering, so nodes are *extended into
+//! layers* and every edge goes from layer `l` to layer `l+1` — either a
+//! local `COPY_I` (producer and consumer land on the same PE) or a remote
+//! `COPY_T` (they don't).  Locality is decided by the mapping, but the
+//! *node distance* is a graph property recorded on the edge.
+
+use anyhow::{bail, Result};
+
+/// Kernel family a DFG implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Real-valued butterfly-pattern matrix multiply (linear layers).
+    Bpmm,
+    /// Complex radix-2 FFT stage chain (attention mixing).
+    Fft,
+}
+
+impl KernelKind {
+    /// Scalars per element (complex carries re+im planes).
+    pub fn planes(self) -> usize {
+        match self {
+            KernelKind::Bpmm => 1,
+            KernelKind::Fft => 2,
+        }
+    }
+
+    /// Compute slots per butterfly node per lane (see DESIGN.md cost
+    /// model): BPMM 2x2 block = 4 FMA; FFT complex butterfly = complex
+    /// multiply (4 mul + 2 add) + two complex adds (4 add) = 10 slots.
+    pub fn ops_per_node(self) -> u64 {
+        match self {
+            KernelKind::Bpmm => 4,
+            KernelKind::Fft => 10,
+        }
+    }
+
+    /// Weight scalars fetched per node per stage (BPMM: the 2x2 block;
+    /// FFT: one complex twiddle).
+    pub fn weight_scalars_per_node(self) -> u64 {
+        match self {
+            KernelKind::Bpmm => 4,
+            KernelKind::Fft => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Bpmm => "BPMM",
+            KernelKind::Fft => "FFT",
+        }
+    }
+}
+
+/// Node identifier (index into `Dfg::nodes`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// What a node does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeOp {
+    /// Fetch two adjacent input elements from SPM (layer 0).
+    Load,
+    /// One 2x2 butterfly at `stage`, on pair index `pair`.
+    Butterfly { stage: u32 },
+    /// Element-wise twiddle multiply (between Fig. 9 stage DFGs).
+    Twiddle,
+    /// Write two result elements back to SPM (final layer).
+    Store,
+}
+
+/// Edge kind after the layer reconstruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Local transfer inside a PE (kept half).
+    CopyI,
+    /// Remote transfer across the NoC (swapped half); `node_dist` is the
+    /// distance in layer-node indices (1, 2, 4, ... for butterflies).
+    CopyT { node_dist: u32 },
+}
+
+/// A DFG node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    /// Layer index (0 = load layer).
+    pub layer: u32,
+    /// Position within the layer (pair index for butterfly layers).
+    pub index: u32,
+    pub op: NodeOp,
+}
+
+/// An edge between consecutive layers.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub kind: EdgeKind,
+}
+
+/// A multilayer dataflow graph.
+#[derive(Debug, Clone)]
+pub struct Dfg {
+    pub kind: KernelKind,
+    /// Vector length this DFG transforms.
+    pub points: usize,
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    /// Number of layers (load + butterfly stages + store).
+    pub layers: u32,
+}
+
+impl Dfg {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    /// Nodes of one layer, ordered by index.
+    pub fn layer_nodes(&self, layer: u32) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(move |n| n.layer == layer)
+    }
+
+    pub fn layer_width(&self, layer: u32) -> usize {
+        self.layer_nodes(layer).count()
+    }
+
+    /// Incoming edges of a node.
+    pub fn in_edges(&self, id: NodeId) -> impl Iterator<Item = &Edge> {
+        self.edges.iter().filter(move |e| e.to == id)
+    }
+
+    /// Outgoing edges of a node.
+    pub fn out_edges(&self, id: NodeId) -> impl Iterator<Item = &Edge> {
+        self.edges.iter().filter(move |e| e.from == id)
+    }
+
+    /// Validate the partial-order invariant (Fig. 5b): every edge spans
+    /// exactly one layer, forward.  This is the property the multilayer
+    /// reconstruction exists to establish.
+    pub fn validate_partial_order(&self) -> Result<()> {
+        for e in &self.edges {
+            let from = self.node(e.from);
+            let to = self.node(e.to);
+            if to.layer != from.layer + 1 {
+                bail!(
+                    "edge {:?}->{:?} spans layers {}->{} (must be +1)",
+                    e.from,
+                    e.to,
+                    from.layer,
+                    to.layer
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate that node indices within each layer are dense [0, width).
+    pub fn validate_layer_indexing(&self) -> Result<()> {
+        for layer in 0..self.layers {
+            let mut idx: Vec<u32> = self.layer_nodes(layer).map(|n| n.index).collect();
+            idx.sort_unstable();
+            for (want, got) in idx.iter().enumerate() {
+                if *got != want as u32 {
+                    bail!("layer {layer} indices not dense: {idx:?}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total butterfly compute nodes (excludes load/store/twiddle).
+    pub fn butterfly_node_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, NodeOp::Butterfly { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Dfg {
+        // load(0) -> bf(0) with one edge.
+        let nodes = vec![
+            Node { id: NodeId(0), layer: 0, index: 0, op: NodeOp::Load },
+            Node {
+                id: NodeId(1),
+                layer: 1,
+                index: 0,
+                op: NodeOp::Butterfly { stage: 0 },
+            },
+        ];
+        let edges = vec![Edge { from: NodeId(0), to: NodeId(1), kind: EdgeKind::CopyI }];
+        Dfg { kind: KernelKind::Bpmm, points: 2, nodes, edges, layers: 2 }
+    }
+
+    #[test]
+    fn partial_order_ok() {
+        tiny_graph().validate_partial_order().unwrap();
+    }
+
+    #[test]
+    fn partial_order_violation_detected() {
+        let mut g = tiny_graph();
+        // Same-layer edge (the Fig. 5a incoordination).
+        g.edges.push(Edge { from: NodeId(1), to: NodeId(1), kind: EdgeKind::CopyI });
+        assert!(g.validate_partial_order().is_err());
+    }
+
+    #[test]
+    fn kernel_kind_parameters() {
+        assert_eq!(KernelKind::Bpmm.planes(), 1);
+        assert_eq!(KernelKind::Fft.planes(), 2);
+        assert!(KernelKind::Fft.ops_per_node() > KernelKind::Bpmm.ops_per_node());
+    }
+}

@@ -1,0 +1,182 @@
+//! Node→PE mapping (Fig. 7b/c): balanced round-robin with wrap-back.
+//!
+//! Layer node `k` is assigned to PE `k mod P`.  Consequences the paper
+//! relies on:
+//!
+//! * every layer spreads evenly over the array (workload balance);
+//! * a stage with node swap distance `d = 2^t` becomes a PE exchange
+//!   between `p` and `p XOR d` when `d < P` — using disjoint mesh links
+//!   per stage in both directions ("all vertical and horizontal data
+//!   paths in full throughput");
+//! * when `d` is a multiple of `P` the partner wraps back to the same PE
+//!   (`PE1 pairs with PE17 % 16 = PE1`) and the transfer is local — later
+//!   stages need no NoC traffic at all.
+
+use crate::arch::ArchConfig;
+
+use super::butterfly::swap_distance;
+use super::graph::Dfg;
+
+/// A mapping of one DFG onto the PE array.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    /// Number of PEs.
+    pub num_pes: usize,
+    /// Width of each layer in nodes (uniform for butterfly DFGs).
+    pub layer_width: usize,
+}
+
+impl Mapping {
+    /// Round-robin mapping of a butterfly DFG.
+    pub fn round_robin(dfg: &Dfg, arch: &ArchConfig) -> Self {
+        Mapping { num_pes: arch.num_pes(), layer_width: dfg.layer_width(0) }
+    }
+
+    /// PE of layer-node `k`.
+    pub fn pe_of(&self, node_index: usize) -> usize {
+        node_index % self.num_pes
+    }
+
+    /// Nodes of a layer hosted by PE `p`.
+    pub fn nodes_on_pe(&self, p: usize) -> usize {
+        let full = self.layer_width / self.num_pes;
+        let rem = self.layer_width % self.num_pes;
+        full + usize::from(p < rem)
+    }
+
+    /// Max nodes across PEs (the per-layer block size).
+    pub fn max_nodes_per_pe(&self) -> usize {
+        self.layer_width.div_ceil(self.num_pes)
+    }
+
+    /// Number of PEs that host at least one node.
+    pub fn active_pes(&self) -> usize {
+        self.layer_width.min(self.num_pes)
+    }
+
+    /// Partner PE for the swap into butterfly stage `stage` (None if the
+    /// exchange is PE-local: stage 0, or distance wraps to a multiple of
+    /// P, or distance below the per-PE node block... with round-robin the
+    /// rule is exact: partner = p XOR (d mod' P)).
+    pub fn partner_pe(&self, p: usize, stage: usize) -> Option<usize> {
+        let d = swap_distance(stage);
+        if d == 0 {
+            return None;
+        }
+        if d % self.num_pes == 0 {
+            // Wrap-back: distance is a multiple of P → same PE.
+            return None;
+        }
+        if d >= self.num_pes {
+            // Power-of-two distance above P that is not a multiple of P
+            // cannot happen (both are powers of two), but guard anyway.
+            return None;
+        }
+        Some(p ^ d)
+    }
+
+    /// NoC hop count for the swap into `stage` from PE `p` (0 if local).
+    pub fn swap_hops(&self, p: usize, stage: usize, arch: &ArchConfig) -> usize {
+        match self.partner_pe(p, stage) {
+            Some(q) => arch.hop_distance(p, q),
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::butterfly::build_butterfly_dfg;
+    use crate::dfg::graph::KernelKind;
+    use crate::util::prop::check;
+
+    fn mapping(n: usize) -> (Mapping, ArchConfig) {
+        let arch = ArchConfig::full();
+        let dfg = build_butterfly_dfg(KernelKind::Bpmm, n);
+        (Mapping::round_robin(&dfg, &arch), arch)
+    }
+
+    #[test]
+    fn paper_32_point_example() {
+        // 32 points on 4x4: one node per PE per layer (Fig. 7b).
+        let (m, _) = mapping(32);
+        assert_eq!(m.layer_width, 16);
+        for p in 0..16 {
+            assert_eq!(m.nodes_on_pe(p), 1);
+        }
+        // Stage swap partners: distances 1,2,4,8 then wrap to local.
+        assert_eq!(m.partner_pe(0, 1), Some(1));
+        assert_eq!(m.partner_pe(0, 2), Some(2));
+        assert_eq!(m.partner_pe(0, 3), Some(4));
+        assert_eq!(m.partner_pe(0, 4), Some(8));
+        assert_eq!(m.partner_pe(1, 5), None); // PE1 ↔ PE17 % 16 = PE1
+    }
+
+    #[test]
+    fn balance_invariant() {
+        check("mapping-balance", 50, |rng| {
+            let n = rng.pow2(4, 1 << 10);
+            let (m, _) = mapping(n);
+            let min = (0..16).map(|p| m.nodes_on_pe(p)).min().unwrap();
+            let max = (0..16).map(|p| m.nodes_on_pe(p)).max().unwrap();
+            assert!(max - min <= 1, "unbalanced: {min}..{max}");
+            let total: usize = (0..16).map(|p| m.nodes_on_pe(p)).sum();
+            assert_eq!(total, m.layer_width);
+        });
+    }
+
+    #[test]
+    fn partner_is_symmetric() {
+        let (m, _) = mapping(256);
+        for stage in 1..8 {
+            for p in 0..16 {
+                if let Some(q) = m.partner_pe(p, stage) {
+                    assert_eq!(m.partner_pe(q, stage), Some(p), "stage {stage}");
+                    assert_ne!(p, q);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn late_stages_are_local() {
+        let (m, arch) = mapping(1 << 9); // 512 points, stages up to 8
+        // Stage 5: d = 16 = P → local.  Stages 6+: d = 32, 64 → local.
+        for stage in 5..9 {
+            for p in 0..16 {
+                assert_eq!(m.swap_hops(p, stage, &arch), 0, "stage {stage}");
+            }
+        }
+        // Early stages are remote.
+        assert!(m.swap_hops(0, 1, &arch) > 0);
+    }
+
+    #[test]
+    fn stage_links_are_disjoint_across_pairs() {
+        // Each stage's exchange partitions PEs into disjoint pairs.
+        let (m, _) = mapping(512);
+        for stage in 1..5 {
+            let mut used = vec![false; 16];
+            for p in 0..16 {
+                if used[p] {
+                    continue;
+                }
+                if let Some(q) = m.partner_pe(p, stage) {
+                    assert!(!used[q]);
+                    used[p] = true;
+                    used[q] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_dfg_leaves_pes_idle() {
+        // 16-point kernel: 8 pairs < 16 PEs (the Fig. 14 shallow-stage
+        // underutilization mechanism).
+        let (m, _) = mapping(16);
+        assert_eq!(m.active_pes(), 8);
+        assert_eq!(m.nodes_on_pe(15), 0);
+    }
+}

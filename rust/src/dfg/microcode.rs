@@ -1,0 +1,499 @@
+//! Lowering a stage DFG to per-PE micro-code blocks (Fig. 8).
+//!
+//! Tensor workloads have "explicit computational certainty", so the
+//! instructions of one DFG iteration on one PE are grouped into
+//! sequential *Micro Code Blocks*, one per function unit episode:
+//!
+//! * `LOAD`  (layer 0)        — fetch the PE's input elements from SPM;
+//! * `WLOAD` (per stage)      — fetch the stage's weights/twiddles
+//!   (broadcast across SIMD lanes);
+//! * `CAL`   (per stage)      — the PE's butterfly nodes of that layer;
+//! * `FLOW`  (between stages) — the swapped halves travelling to the
+//!   partner PE over the mesh (skipped when the wrap-back rule makes the
+//!   exchange local);
+//! * `STORE` (final layer)    — results back to SPM.
+//!
+//! Each block carries the `{layer, iter}` priority bit-string of the
+//! paper's block scheduler and its dependence edges; the cycle-level
+//! simulator turns the raw quantities into time.
+
+use crate::arch::{ArchConfig, UnitKind};
+use crate::model::log2_int;
+
+use super::graph::KernelKind;
+use super::mapping::Mapping;
+use super::stages::StageDfg;
+
+/// Block identifier (index into `Program::blocks`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+/// One coarse-grained micro-code block.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub pe: u16,
+    pub unit: UnitKind,
+    /// Priority major: layer index within the stage DFG.
+    pub layer: u16,
+    /// Priority minor: DFG iteration index.
+    pub iter: u32,
+    /// Lane-scaled scalars moved (load/store inputs, flow payload): one
+    /// per SIMD lane per element-plane.
+    pub scalars_wide: u64,
+    /// Broadcast scalars (weights/twiddles — lane-invariant).
+    pub scalars_bcast: u64,
+    /// Compute slots per lane (CAL blocks).
+    pub ops: u64,
+    /// Mesh hops to the destination (FLOW blocks).
+    pub noc_hops: u16,
+    /// Destination PE (FLOW blocks).
+    pub dest_pe: Option<u16>,
+    /// Blocks that must complete first.
+    pub deps: Vec<BlockId>,
+    /// Marks the last block of an iteration (iteration-completion probe).
+    pub completes_iter: bool,
+}
+
+/// Metadata the simulator needs alongside the blocks.
+#[derive(Debug, Clone)]
+pub struct ProgramMeta {
+    pub kind: KernelKind,
+    pub points: usize,
+    /// DFG iterations in this program (window).
+    pub iters: usize,
+    /// Input bytes DMA must deliver per iteration (gates its LOAD blocks).
+    pub dma_in_bytes_per_iter: u64,
+    /// Output bytes DMA drains per iteration.
+    pub dma_out_bytes_per_iter: u64,
+    /// One-time weight streaming before the stage starts (0 if resident).
+    pub weight_dma_bytes: u64,
+    /// PEs hosting at least one node.
+    pub active_pes: usize,
+    /// Butterfly layers in the DFG.
+    pub stages: usize,
+}
+
+/// A lowered, simulatable program (one stage DFG × `iters` iterations).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub meta: ProgramMeta,
+    pub blocks: Vec<Block>,
+}
+
+/// Per-PE slot layout used to wire dependencies.
+#[derive(Clone, Copy)]
+enum Slot {
+    Load,
+    WLoad(usize),
+    Cal(usize),
+    Flow(usize),
+    Store,
+}
+
+/// Lower one stage DFG into a windowed program of `iters` iterations.
+///
+/// `stage.sub_iters` and batching are already folded into `iters` by the
+/// coordinator (`iters = ceil(vectors × sub_iters / simd_width)`, clipped
+/// to the simulation window).
+pub fn lower_stage(stage: &StageDfg, arch: &ArchConfig, iters: usize) -> Program {
+    lower_stage_packed(stage, arch, iters, 1)
+}
+
+/// Like [`lower_stage`] but packing `pack` independent DFG *instances*
+/// into each iteration: every PE hosts `pack ×` the nodes per layer,
+/// with identical swap-partner patterns (instances are element-wise
+/// independent).  This is how shallow stage DFGs (a 32-point column
+/// stage of a Fig. 9 division) amortize the per-block issue overheads —
+/// the paper's "pour adequate graph iterations into the multilayer DFG".
+pub fn lower_stage_packed(
+    stage: &StageDfg,
+    arch: &ArchConfig,
+    iters: usize,
+    pack: usize,
+) -> Program {
+    let pack = pack.max(1) as u64;
+    let n = stage.points;
+    let s = log2_int(n);
+    let kind = stage.kind;
+    let planes = kind.planes() as u64;
+    let dfg = super::butterfly::build_butterfly_dfg(kind, n);
+    let map = Mapping::round_robin(&dfg, arch);
+    let num_pes = arch.num_pes();
+    let w = arch.simd_width as u64;
+
+    // Slot index layout per (iter, pe): Load, then per stage t in 0..s:
+    // WLoad(t), Cal(t), Flow(t) [only t < s-1 and remote], then Store.
+    let slots_per_pe = 1 + 3 * s + 1;
+    let slot_index = |slot: Slot| -> usize {
+        match slot {
+            Slot::Load => 0,
+            Slot::WLoad(t) => 1 + 3 * t,
+            Slot::Cal(t) => 2 + 3 * t,
+            Slot::Flow(t) => 3 + 3 * t,
+            Slot::Store => 1 + 3 * s,
+        }
+    };
+    // block id table: (iter, pe, slot) -> Option<BlockId>
+    let mut table: Vec<Option<BlockId>> = vec![None; iters * num_pes * slots_per_pe];
+    let t_idx = |iter: usize, pe: usize, slot: Slot| -> usize {
+        (iter * num_pes + pe) * slots_per_pe + slot_index(slot)
+    };
+
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut push =
+        |table: &mut Vec<Option<BlockId>>, iter: usize, pe: usize, slot: Slot, b: Block| {
+            let id = BlockId(blocks.len() as u32);
+            table[t_idx(iter, pe, slot)] = Some(id);
+            blocks.push(b);
+            id
+        };
+
+    let twiddle = stage.twiddle_before;
+    let inflight = arch.inflight_iters.max(1);
+    // Generation is layer-major within each iteration so that cross-PE
+    // FLOW dependencies always reference already-created blocks.
+    for iter in 0..iters {
+        // LOAD layer: 2 input elements per node × planes (lane-scaled).
+        // Buffer recycling bounds in-flight iterations: iteration i's
+        // input buffers are freed by iteration i-inflight's STORE.
+        for pe in 0..num_pes {
+            let npe = map.nodes_on_pe(pe) as u64 * pack;
+            if npe == 0 {
+                continue;
+            }
+            let mut deps = Vec::new();
+            if iter >= inflight {
+                if let Some(sid) = table[t_idx(iter - inflight, pe, Slot::Store)] {
+                    deps.push(sid);
+                }
+            }
+            push(
+                &mut table,
+                iter,
+                pe,
+                Slot::Load,
+                Block {
+                    pe: pe as u16,
+                    unit: UnitKind::Load,
+                    layer: 0,
+                    iter: iter as u32,
+                    scalars_wide: 2 * npe * planes,
+                    scalars_bcast: 0,
+                    ops: 0,
+                    noc_hops: 0,
+                    dest_pe: None,
+                    deps,
+                    completes_iter: false,
+                },
+            );
+        }
+        for t in 0..s {
+            let layer = t as u16 + 1;
+            for pe in 0..num_pes {
+                let npe = map.nodes_on_pe(pe) as u64 * pack;
+                if npe == 0 {
+                    continue;
+                }
+                // WLOAD: stage weights are *pre-stored* in the PE
+                // (§III-B) — fetched once, on the first iteration only.
+                // The first stage additionally carries the inter-stage
+                // twiddle factors when present.
+                if iter == 0 {
+                    let mut wsc = kind.weight_scalars_per_node() * npe;
+                    if t == 0 && twiddle {
+                        wsc += 2 * 2 * npe; // one complex factor per element
+                    }
+                    push(
+                        &mut table,
+                        iter,
+                        pe,
+                        Slot::WLoad(t),
+                        Block {
+                            pe: pe as u16,
+                            unit: UnitKind::Load,
+                            layer,
+                            iter: iter as u32,
+                            scalars_wide: 0,
+                            scalars_bcast: wsc,
+                            ops: 0,
+                            noc_hops: 0,
+                            dest_pe: None,
+                            deps: vec![],
+                            completes_iter: false,
+                        },
+                    );
+                }
+                // CAL: the PE's butterflies of this stage (+ twiddle ewise).
+                let mut ops = kind.ops_per_node() * npe;
+                if t == 0 && twiddle {
+                    ops += 6 * 2 * npe; // complex multiply per element
+                }
+                let mut deps = Vec::new();
+                if let Some(wid) = table[t_idx(0, pe, Slot::WLoad(t))] {
+                    if iter == 0 {
+                        deps.push(wid);
+                    }
+                }
+                if t == 0 {
+                    deps.push(table[t_idx(iter, pe, Slot::Load)].unwrap());
+                } else {
+                    deps.push(table[t_idx(iter, pe, Slot::Cal(t - 1))].unwrap());
+                    // Swapped half arrives from the partner's FLOW(t-1).
+                    if let Some(q) = map.partner_pe(pe, t) {
+                        if let Some(fid) = table[t_idx(iter, q, Slot::Flow(t - 1))] {
+                            deps.push(fid);
+                        }
+                    }
+                }
+                push(
+                    &mut table,
+                    iter,
+                    pe,
+                    Slot::Cal(t),
+                    Block {
+                        pe: pe as u16,
+                        unit: UnitKind::Cal,
+                        layer,
+                        iter: iter as u32,
+                        scalars_wide: 0,
+                        scalars_bcast: 0,
+                        ops,
+                        noc_hops: 0,
+                        dest_pe: None,
+                        deps,
+                        completes_iter: false,
+                    },
+                );
+            }
+            // FLOW into stage t+1 (if the exchange is remote), after all
+            // of this layer's CAL blocks exist.
+            if t + 1 < s {
+                for pe in 0..num_pes {
+                    let npe = map.nodes_on_pe(pe) as u64 * pack;
+                    if npe == 0 {
+                        continue;
+                    }
+                    if let Some(q) = map.partner_pe(pe, t + 1) {
+                        let hops = arch.hop_distance(pe, q) as u16;
+                        let deps = vec![table[t_idx(iter, pe, Slot::Cal(t))].unwrap()];
+                        push(
+                            &mut table,
+                            iter,
+                            pe,
+                            Slot::Flow(t),
+                            Block {
+                                pe: pe as u16,
+                                unit: UnitKind::Flow,
+                                layer,
+                                iter: iter as u32,
+                                scalars_wide: npe * planes,
+                                scalars_bcast: 0,
+                                ops: 0,
+                                noc_hops: hops,
+                                dest_pe: Some(q as u16),
+                                deps,
+                                completes_iter: false,
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        // STORE the final stage outputs.
+        for pe in 0..num_pes {
+            let npe = map.nodes_on_pe(pe) as u64 * pack;
+            if npe == 0 {
+                continue;
+            }
+            let store_deps = vec![table[t_idx(iter, pe, Slot::Cal(s - 1))].unwrap()];
+            push(
+                &mut table,
+                iter,
+                pe,
+                Slot::Store,
+                Block {
+                    pe: pe as u16,
+                    unit: UnitKind::Store,
+                    layer: s as u16 + 1,
+                    iter: iter as u32,
+                    scalars_wide: 2 * npe * planes,
+                    scalars_bcast: 0,
+                    ops: 0,
+                    noc_hops: 0,
+                    dest_pe: None,
+                    deps: store_deps,
+                    completes_iter: true,
+                },
+            );
+        }
+    }
+
+    let elem = arch.elem_bytes as u64;
+    let vec_bytes = (n as u64) * planes * w * elem * pack;
+    let weight_dma = if stage.weights_from_ddr {
+        (n as u64 / 2)
+            * s as u64
+            * kind.weight_scalars_per_node()
+            * elem
+    } else {
+        0
+    };
+    Program {
+        meta: ProgramMeta {
+            kind,
+            points: n,
+            iters,
+            dma_in_bytes_per_iter: vec_bytes,
+            dma_out_bytes_per_iter: vec_bytes,
+            weight_dma_bytes: weight_dma,
+            active_pes: map.active_pes(),
+            stages: s,
+        },
+        blocks,
+    }
+}
+
+impl Program {
+    /// Sanity invariants: deps point backwards in priority space and the
+    /// block set is an acyclic layered graph.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, b) in self.blocks.iter().enumerate() {
+            for d in &b.deps {
+                let dep = &self.blocks[d.0 as usize];
+                anyhow::ensure!(
+                    (dep.iter, dep.layer) <= (b.iter, b.layer),
+                    "block {i} (iter {}, layer {}) depends on future block {:?} \
+                     (iter {}, layer {})",
+                    b.iter,
+                    b.layer,
+                    d,
+                    dep.iter,
+                    dep.layer
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Aggregate compute ops (per lane) across all CAL blocks.
+    pub fn total_ops(&self) -> u64 {
+        self.blocks.iter().map(|b| b.ops).sum()
+    }
+
+    /// Aggregate lane-scaled SPM scalars.
+    pub fn total_spm_scalars(&self) -> u64 {
+        self.blocks
+            .iter()
+            .filter(|b| matches!(b.unit, UnitKind::Load | UnitKind::Store))
+            .map(|b| b.scalars_wide)
+            .sum()
+    }
+
+    /// Aggregate lane-scaled NoC scalars.
+    pub fn total_noc_scalars(&self) -> u64 {
+        self.blocks
+            .iter()
+            .filter(|b| b.unit == UnitKind::Flow)
+            .map(|b| b.scalars_wide)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::stages::StageDfg;
+
+    fn stage(kind: KernelKind, points: usize) -> StageDfg {
+        StageDfg { kind, points, sub_iters: 1, twiddle_before: false, weights_from_ddr: false }
+    }
+
+    #[test]
+    fn block_counts_32_points() {
+        let arch = ArchConfig::full();
+        let p = lower_stage(&stage(KernelKind::Bpmm, 32), &arch, 2);
+        p.validate().unwrap();
+        // 32 points, 16 PEs, 1 node/PE/layer, s=5 stages.
+        // Iter 0: 1 LOAD + 5 WLOAD (weights pre-stored once) + 5 CAL +
+        // 4 FLOW (stages 1..4, distances 1,2,4,8) + 1 STORE = 16.
+        // Later iters skip WLOAD: 11.
+        assert_eq!(p.blocks.len(), 16 * 16 + 16 * 11);
+        assert_eq!(p.meta.active_pes, 16);
+    }
+
+    #[test]
+    fn wrapback_suppresses_late_flows() {
+        let arch = ArchConfig::full();
+        // 512 points: s=9; flows into stages 1..8, but stages 5..=8 have
+        // d ∈ {16,32,64,128} ≥ P → local (no FLOW blocks).
+        let p = lower_stage(&stage(KernelKind::Bpmm, 512), &arch, 1);
+        let flows = p.blocks.iter().filter(|b| b.unit == UnitKind::Flow).count();
+        assert_eq!(flows, 16 * 4); // stages 1..4 remote only
+    }
+
+    #[test]
+    fn fft_doubles_flow_payload() {
+        let arch = ArchConfig::full();
+        let pb = lower_stage(&stage(KernelKind::Bpmm, 64), &arch, 1);
+        let pf = lower_stage(&stage(KernelKind::Fft, 64), &arch, 1);
+        assert_eq!(pf.total_noc_scalars(), 2 * pb.total_noc_scalars());
+        assert_eq!(pf.total_spm_scalars(), 2 * pb.total_spm_scalars());
+    }
+
+    #[test]
+    fn twiddle_layer_adds_ops_and_factors() {
+        let arch = ArchConfig::full();
+        let mut st = stage(KernelKind::Fft, 64);
+        let base = lower_stage(&st, &arch, 1);
+        st.twiddle_before = true;
+        let tw = lower_stage(&st, &arch, 1);
+        assert!(tw.total_ops() > base.total_ops());
+    }
+
+    #[test]
+    fn cal_deps_include_partner_flow() {
+        let arch = ArchConfig::full();
+        let p = lower_stage(&stage(KernelKind::Bpmm, 32), &arch, 1);
+        p.validate().unwrap();
+        // Find a CAL block at layer 2 (stage 1, remote swap distance 1):
+        // it must depend on a FLOW block on the partner PE.
+        let cal = p
+            .blocks
+            .iter()
+            .find(|b| b.unit == UnitKind::Cal && b.layer == 2 && b.pe == 0)
+            .unwrap();
+        let has_flow_dep = cal.deps.iter().any(|d| {
+            let dep = &p.blocks[d.0 as usize];
+            dep.unit == UnitKind::Flow && dep.pe == 1
+        });
+        assert!(has_flow_dep);
+    }
+
+    #[test]
+    fn store_completes_iteration() {
+        let arch = ArchConfig::full();
+        let p = lower_stage(&stage(KernelKind::Fft, 128), &arch, 3);
+        let completers: Vec<_> =
+            p.blocks.iter().filter(|b| b.completes_iter).collect();
+        assert_eq!(completers.len(), 3 * 16);
+        assert!(completers.iter().all(|b| b.unit == UnitKind::Store));
+    }
+
+    #[test]
+    fn ddr_weights_flagged() {
+        let arch = ArchConfig::full();
+        let mut st = stage(KernelKind::Bpmm, 256);
+        st.weights_from_ddr = true;
+        let p = lower_stage(&st, &arch, 1);
+        assert!(p.meta.weight_dma_bytes > 0);
+    }
+
+    #[test]
+    fn total_ops_matches_nodes() {
+        let arch = ArchConfig::full();
+        let n = 256;
+        let p = lower_stage(&stage(KernelKind::Bpmm, n), &arch, 4);
+        // 4 iters × (n/2 nodes × log2 n stages × 4 ops).
+        assert_eq!(p.total_ops(), 4 * (n as u64 / 2) * 8 * 4);
+    }
+}

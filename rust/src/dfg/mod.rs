@@ -1,0 +1,30 @@
+//! The paper's compiler stack: butterfly kernels → multilayer DFGs →
+//! PE-array mapping → micro-code blocks.
+//!
+//! * [`graph`] — layer-tagged DFG IR with the partial-order invariant of
+//!   Fig. 5b (edges only cross consecutive layers).
+//! * [`butterfly`] — the multilayer butterfly DFG template (Fig. 5b/7a):
+//!   load layer, `log2 n` butterfly layers with swap distances 1, 2, 4,…
+//!   and a store layer; plus a functional executor used to *prove* the
+//!   template computes the right answer.
+//! * [`stages`] — multi-stage Cooley-Tukey division planning (Fig. 9):
+//!   splits scales beyond the single-DFG limit into column/twiddle/row
+//!   stage DFGs with barriers, recursively for 64K-class vectors.
+//! * [`slicing`] — BPMM weight slicing for unequal hidden sizes (Fig. 10).
+//! * [`mapping`] — balanced round-robin node→PE assignment (Fig. 7b/c)
+//!   with the wrap-back rule (distance ≥ #PEs stays local).
+//! * [`microcode`] — lowering to per-PE coarse-grained code blocks
+//!   {Load, Flow, Cal, Store} tagged with `{layer, iter}` priorities
+//!   (Fig. 8), ready for the cycle-level simulator.
+
+pub mod butterfly;
+pub mod graph;
+pub mod mapping;
+pub mod microcode;
+pub mod slicing;
+pub mod stages;
+
+pub use graph::{Dfg, EdgeKind, KernelKind, Node, NodeId, NodeOp};
+pub use mapping::Mapping;
+pub use microcode::{Block, BlockId, Program, ProgramMeta};
+pub use stages::{KernelPlan, StageDfg};

@@ -1,0 +1,133 @@
+//! BPMM weight-matrix slicing for unequal input/output hidden sizes
+//! (Fig. 10).
+//!
+//! A linear layer `d_in → d_out` whose sizes differ is sliced into
+//! `k = max/min` square butterfly pieces of scale `m = min(d_in, d_out)`:
+//! larger input ⇒ slice `x` and **sum** the piece products; larger output
+//! ⇒ run `k` factor sets over the same `x` and **concatenate**.
+
+use anyhow::{bail, Result};
+
+use crate::model::log2_int;
+
+/// How piece results combine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Combine {
+    /// d_in > d_out: piece outputs are accumulated.
+    Sum,
+    /// d_in < d_out: piece outputs are concatenated.
+    Concat,
+    /// d_in == d_out: single piece.
+    Single,
+}
+
+/// A slicing plan for one BPMM linear layer.
+#[derive(Debug, Clone)]
+pub struct SlicePlan {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Butterfly scale of each piece.
+    pub piece_points: usize,
+    /// Number of pieces (factor sets).
+    pub pieces: usize,
+    pub combine: Combine,
+}
+
+impl SlicePlan {
+    /// Build the plan; both sizes must be powers of two.
+    pub fn new(d_in: usize, d_out: usize) -> Result<Self> {
+        if !d_in.is_power_of_two() || !d_out.is_power_of_two() {
+            bail!("hidden sizes must be powers of two: {d_in} -> {d_out}");
+        }
+        let m = d_in.min(d_out);
+        let k = d_in.max(d_out) / m;
+        let combine = if d_in == d_out {
+            Combine::Single
+        } else if d_in > d_out {
+            Combine::Sum
+        } else {
+            Combine::Concat
+        };
+        Ok(SlicePlan { d_in, d_out, piece_points: m, pieces: k, combine })
+    }
+
+    /// Butterfly-node evaluations per input row: pieces × (m/2) log2 m.
+    pub fn nodes_per_row(&self) -> usize {
+        self.pieces * (self.piece_points / 2) * log2_int(self.piece_points)
+    }
+
+    /// Extra element-wise accumulate ops per row (Sum combine).
+    pub fn reduce_ops_per_row(&self) -> usize {
+        match self.combine {
+            Combine::Sum => (self.pieces - 1) * self.d_out,
+            _ => 0,
+        }
+    }
+
+    /// Sparse parameter count (vs the dense d_in*d_out).
+    pub fn param_count(&self) -> usize {
+        self.pieces * 2 * self.piece_points * log2_int(self.piece_points)
+    }
+
+    /// Compression ratio against the dense layer.
+    pub fn compression(&self) -> f64 {
+        (self.d_in * self.d_out) as f64 / self.param_count() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn square_layer_single_piece() {
+        let p = SlicePlan::new(256, 256).unwrap();
+        assert_eq!(p.pieces, 1);
+        assert_eq!(p.combine, Combine::Single);
+        assert_eq!(p.piece_points, 256);
+    }
+
+    #[test]
+    fn shrinking_layer_sums() {
+        // Fig. 10 top: d_in 1024 > d_out 256 ⇒ 4 pieces summed.
+        let p = SlicePlan::new(1024, 256).unwrap();
+        assert_eq!(p.pieces, 4);
+        assert_eq!(p.combine, Combine::Sum);
+        assert_eq!(p.reduce_ops_per_row(), 3 * 256);
+    }
+
+    #[test]
+    fn expanding_layer_concats() {
+        // Fig. 10 bottom: FFN expansion 256 → 1024 ⇒ 4 pieces concat.
+        let p = SlicePlan::new(256, 1024).unwrap();
+        assert_eq!(p.pieces, 4);
+        assert_eq!(p.combine, Combine::Concat);
+        assert_eq!(p.reduce_ops_per_row(), 0);
+    }
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        assert!(SlicePlan::new(100, 256).is_err());
+    }
+
+    #[test]
+    fn params_always_compress() {
+        check("slice-params-compress", 100, |rng| {
+            let d_in = rng.pow2(64, 4096);
+            let d_out = rng.pow2(64, 4096);
+            let p = SlicePlan::new(d_in, d_out).unwrap();
+            assert!(
+                p.param_count() < d_in * d_out,
+                "{d_in}x{d_out}: {} !< dense",
+                p.param_count()
+            );
+            // Output coverage: concat pieces tile d_out exactly.
+            match p.combine {
+                Combine::Concat => assert_eq!(p.pieces * p.piece_points, d_out),
+                Combine::Sum => assert_eq!(p.pieces * p.piece_points, d_in),
+                Combine::Single => assert_eq!(p.piece_points, d_in),
+            }
+        });
+    }
+}

@@ -1,0 +1,338 @@
+//! Multi-stage Cooley-Tukey division planning (Fig. 9 / §V-B).
+//!
+//! A kernel over `n` points that exceeds the single-DFG capacity
+//! (256 FFT / 512 BPMM) is reshaped into an `r × c` matrix and executed
+//! as: column-stage DFG (scale `r`, `c` sub-iterations per vector), a
+//! synchronization barrier, an element-wise twiddle layer (FFT only),
+//! then a row-stage DFG (scale `c`, `r` sub-iterations).  For scales
+//! whose working set exceeds the SPM (the 64K example), the division
+//! recurses on the larger factor, producing a ≥3-stage plan like the
+//! paper's BERT-AT-all execution (1K-hidden FFT + two 256-point stages).
+
+use anyhow::{bail, Result};
+
+use crate::arch::ArchConfig;
+use crate::model::log2_int;
+
+use super::graph::KernelKind;
+
+/// One stage of a kernel plan: a single-DFG butterfly of `points`,
+/// executed `sub_iters` times per logical vector.
+#[derive(Debug, Clone)]
+pub struct StageDfg {
+    pub kind: KernelKind,
+    pub points: usize,
+    /// Sub-iterations of this stage per input vector (matrix columns or
+    /// rows of the reshape).
+    pub sub_iters: usize,
+    /// Whether an element-wise twiddle layer precedes this stage (FFT
+    /// inter-stage factors; never set for BPMM).
+    pub twiddle_before: bool,
+    /// Whether this stage's weights/twiddles must be re-streamed from DDR
+    /// (working set exceeded SPM residency).
+    pub weights_from_ddr: bool,
+}
+
+/// A full execution plan for one kernel invocation.
+#[derive(Debug, Clone)]
+pub struct KernelPlan {
+    pub kind: KernelKind,
+    /// Total transform length.
+    pub n: usize,
+    pub stages: Vec<StageDfg>,
+    /// Logical vectors per invocation (batch × heads × rows …).
+    pub vectors: usize,
+}
+
+impl KernelPlan {
+    /// Total butterfly stages across the plan (must equal log2 n).
+    pub fn total_depth(&self) -> usize {
+        self.stages.iter().map(|s| log2_int(s.points)).sum()
+    }
+
+    /// Total butterfly-node evaluations per vector: (n/2) log2 n.
+    pub fn nodes_per_vector(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| s.sub_iters * (s.points / 2) * log2_int(s.points))
+            .sum()
+    }
+
+    /// MAC-relevant FLOPs per vector (2 flops per MAC slot).
+    pub fn flops_per_vector(&self) -> f64 {
+        let per_node = self.kind.ops_per_node() as f64 * 2.0;
+        self.nodes_per_vector() as f64 * per_node
+    }
+
+    /// Weight bytes of the whole plan (per the paper's 64K example: a 64K
+    /// butterfly's sparsity weights occupy 8.4 MB at fp16).
+    pub fn weight_bytes(&self, elem_bytes: usize) -> usize {
+        self.stages
+            .iter()
+            .map(|s| {
+                s.sub_iters
+                    * (s.points / 2)
+                    * log2_int(s.points)
+                    * self.kind.weight_scalars_per_node() as usize
+                    * elem_bytes
+            })
+            .sum()
+    }
+}
+
+/// Single-DFG capacity for a kernel kind (§V-B).
+pub fn max_points(kind: KernelKind, arch: &ArchConfig) -> usize {
+    match kind {
+        KernelKind::Fft => arch.max_fft_points,
+        KernelKind::Bpmm => arch.max_bpmm_points,
+    }
+}
+
+/// The balanced division the paper's Fig. 14 sweep converges to:
+/// `r = 2^ceil(log2(n)/2)` clipped to the capacity limit.
+pub fn balanced_division(n: usize, cap: usize) -> (usize, usize) {
+    let stages = log2_int(n);
+    let mut r = 1usize << ((stages + 1) / 2);
+    let mut c = n / r;
+    while r > cap {
+        r /= 2;
+        c *= 2;
+    }
+    while c > cap {
+        c /= 2;
+        r *= 2;
+    }
+    assert_eq!(r * c, n);
+    (r, c)
+}
+
+/// Enumerate all power-of-two divisions of `n` with both factors within
+/// `[min_factor, cap]` (the Fig. 14 sweep space).
+pub fn enumerate_divisions(n: usize, min_factor: usize, cap: usize) -> Vec<(usize, usize)> {
+    let stages = log2_int(n);
+    let mut out = Vec::new();
+    for rb in 1..stages {
+        let r = 1usize << rb;
+        let c = n >> rb;
+        if r >= min_factor && c >= min_factor && r <= cap && c <= cap {
+            out.push((r, c));
+        }
+    }
+    out
+}
+
+/// Build a kernel plan for `n` points and `vectors` logical vectors.
+///
+/// `division`: optional explicit (r, c) split for two-stage plans (used
+/// by the Fig. 14 sweep); `None` picks the balanced division and recurses
+/// as needed.
+pub fn plan_kernel(
+    kind: KernelKind,
+    n: usize,
+    vectors: usize,
+    arch: &ArchConfig,
+    division: Option<(usize, usize)>,
+) -> Result<KernelPlan> {
+    if !n.is_power_of_two() || n < 2 {
+        bail!("kernel points {n} must be a power of two >= 2");
+    }
+    let cap = max_points(kind, arch);
+    let mut stages = Vec::new();
+    build_stages(kind, n, 1, arch, cap, division, &mut stages)?;
+    // Mark DDR-resident weights: if the total working set (weights +
+    // one vector in/out) exceeds SPM, later stages stream from DDR.
+    let plan = KernelPlan { kind, n, stages, vectors };
+    let mut plan = plan;
+    let ws = plan.weight_bytes(arch.elem_bytes)
+        + 2 * n * kind.planes() * arch.elem_bytes;
+    if ws > arch.spm_bytes {
+        for s in plan.stages.iter_mut().skip(1) {
+            s.weights_from_ddr = true;
+        }
+    }
+    Ok(plan)
+}
+
+fn build_stages(
+    kind: KernelKind,
+    n: usize,
+    outer_iters: usize,
+    arch: &ArchConfig,
+    cap: usize,
+    division: Option<(usize, usize)>,
+    out: &mut Vec<StageDfg>,
+) -> Result<()> {
+    if n <= cap && division.is_none() {
+        out.push(StageDfg {
+            kind,
+            points: n,
+            sub_iters: outer_iters,
+            twiddle_before: false,
+            weights_from_ddr: false,
+        });
+        return Ok(());
+    }
+    let (r, c) = match division {
+        Some((r, c)) => {
+            if r * c != n {
+                bail!("division {r}x{c} != {n}");
+            }
+            (r, c)
+        }
+        None => balanced_division(n, cap),
+    };
+    if r > cap || c > cap {
+        // Recurse on the oversized factor (the 64K→1K×(256×256) case).
+        if r > cap {
+            build_stages(kind, r, outer_iters * c, arch, cap, None, out)?;
+        } else {
+            out.push(StageDfg {
+                kind,
+                points: r,
+                sub_iters: outer_iters * c,
+                twiddle_before: false,
+                weights_from_ddr: false,
+            });
+        }
+        let twiddle = kind == KernelKind::Fft;
+        if c > cap {
+            let mark = out.len();
+            build_stages(kind, c, outer_iters * r, arch, cap, None, out)?;
+            if twiddle {
+                out[mark].twiddle_before = true;
+            }
+        } else {
+            out.push(StageDfg {
+                kind,
+                points: c,
+                sub_iters: outer_iters * r,
+                twiddle_before: twiddle,
+                weights_from_ddr: false,
+            });
+        }
+        return Ok(());
+    }
+    // Plain two-stage split: column DFG (scale r, c iters), row DFG.
+    out.push(StageDfg {
+        kind,
+        points: r,
+        sub_iters: outer_iters * c,
+        twiddle_before: false,
+        weights_from_ddr: false,
+    });
+    out.push(StageDfg {
+        kind,
+        points: c,
+        sub_iters: outer_iters * r,
+        twiddle_before: kind == KernelKind::Fft,
+        weights_from_ddr: false,
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::full()
+    }
+
+    #[test]
+    fn small_kernel_is_single_stage() {
+        let p = plan_kernel(KernelKind::Fft, 256, 10, &arch(), None).unwrap();
+        assert_eq!(p.stages.len(), 1);
+        assert_eq!(p.stages[0].points, 256);
+        assert_eq!(p.total_depth(), 8);
+    }
+
+    #[test]
+    fn paper_8192_example_division() {
+        // Fig. 9: 8192 → 128 × 64 (BPMM capacity 512 ⇒ balanced 128x64).
+        let p = plan_kernel(KernelKind::Bpmm, 8192, 1, &arch(), None).unwrap();
+        assert_eq!(p.stages.len(), 2);
+        assert_eq!((p.stages[0].points, p.stages[1].points), (128, 64));
+        assert_eq!(p.stages[0].sub_iters, 64); // 64 columns of scale-128
+        assert_eq!(p.stages[1].sub_iters, 128);
+        assert!(!p.stages[0].twiddle_before);
+        assert!(!p.stages[1].twiddle_before); // BPMM: no twiddle layer
+        assert_eq!(p.total_depth(), 13);
+    }
+
+    #[test]
+    fn fft_gets_twiddle_layer() {
+        let p = plan_kernel(KernelKind::Fft, 1024, 1, &arch(), None).unwrap();
+        assert_eq!(p.stages.len(), 2);
+        assert!(p.stages[1].twiddle_before);
+    }
+
+    #[test]
+    fn paper_64k_fft_division() {
+        // §V-B: "the 64K vector can be reshaped as a 256 × 256 matrix",
+        // both within the FFT cap, with weights/twiddles swapping between
+        // SPM and DDR as needed.
+        let p = plan_kernel(KernelKind::Fft, 64 * 1024, 1, &arch(), None).unwrap();
+        assert_eq!(p.stages.len(), 2);
+        assert!(p.stages.iter().all(|s| s.points == 256));
+        assert_eq!(p.total_depth(), 16);
+    }
+
+    #[test]
+    fn weight_bytes_64k_exceeds_spm() {
+        // Paper: "a 64K vector whose sparsity weights occupy 8.4MB
+        // storage, while the SPM capacity is 4MB" (full-depth butterfly:
+        // (n/2)·16 stages·4 scalars·2 B = 8 MB).  Our two-stage Monarch
+        // factoring halves the per-element depth (4 MB of weights), but
+        // together with activations it still exceeds SPM, so the plan
+        // must flag DDR weight streaming.
+        let full_depth_bytes = (64 * 1024 / 2) * 16 * 4 * 4; // fp32 master weights
+        assert!(full_depth_bytes > arch().spm_bytes);
+        let p = plan_kernel(KernelKind::Bpmm, 64 * 1024, 1, &arch(), None).unwrap();
+        let wb = p.weight_bytes(2);
+        assert!(wb + 2 * 64 * 1024 * 2 > arch().spm_bytes);
+        assert!(
+            p.stages.iter().skip(1).any(|s| s.weights_from_ddr),
+            "64K BPMM plan must stream weights from DDR"
+        );
+    }
+
+    #[test]
+    fn explicit_division_respected() {
+        let p =
+            plan_kernel(KernelKind::Bpmm, 2048, 1, &arch(), Some((32, 64))).unwrap();
+        assert_eq!((p.stages[0].points, p.stages[1].points), (32, 64));
+        assert!(plan_kernel(KernelKind::Bpmm, 2048, 1, &arch(), Some((32, 32))).is_err());
+    }
+
+    #[test]
+    fn enumerate_divisions_covers_fig14_space() {
+        let divs = enumerate_divisions(2048, 16, 512);
+        assert!(divs.contains(&(32, 64)));
+        assert!(divs.contains(&(64, 32)));
+        assert!(divs.contains(&(16, 128)));
+        for (r, c) in divs {
+            assert_eq!(r * c, 2048);
+        }
+    }
+
+    #[test]
+    fn plan_depth_invariant() {
+        check("plan-depth-is-log2n", 50, |rng| {
+            let n = rng.pow2(2, 1 << 16);
+            let kind = if rng.chance(0.5) { KernelKind::Fft } else { KernelKind::Bpmm };
+            let p = plan_kernel(kind, n, 1, &ArchConfig::full(), None).unwrap();
+            assert_eq!(p.total_depth(), log2_int(n));
+            // Node count conservation: (n/2) log2 n butterflies per vector.
+            assert_eq!(p.nodes_per_vector(), n / 2 * log2_int(n));
+        });
+    }
+
+    #[test]
+    fn balanced_division_examples() {
+        // Fig. 14 best divisions: 2k→32x64, 4k→64x64, 8k→128x64.
+        assert_eq!(balanced_division(2048, 512), (64, 32)); // or 32x64 mirror
+        assert_eq!(balanced_division(4096, 512), (64, 64));
+        assert_eq!(balanced_division(8192, 512), (128, 64));
+    }
+}

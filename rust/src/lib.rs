@@ -1,0 +1,48 @@
+//! # butterfly-dataflow
+//!
+//! Reproduction of *"Multilayer Dataflow: Orchestrate Butterfly Sparsity to
+//! Accelerate Attention Computation"* (Wu et al., 2024): a reconfigurable
+//! coarse-grained dataflow architecture (4×4 PE mesh, decoupled
+//! {Load, Flow, Cal, Store} function units, multi-bank/multi-line SPM)
+//! executing butterfly-sparse attention kernels (BPMM linear layers and
+//! FFT attention mixing) as *multilayer dataflow graphs*.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — self-contained infrastructure: CLI parsing, JSON, a
+//!   property-test harness, statistics (the offline vendor set has no
+//!   clap/serde/criterion/proptest — see DESIGN.md).
+//! * [`model`] — exact numeric references for butterfly matrices, FFT and
+//!   attention, used as oracles by tests and by the functional examples.
+//! * [`arch`] — hardware configuration (Table I / Table III parameters).
+//! * [`dfg`] — the paper's compiler: multilayer butterfly DFG templates
+//!   (Fig. 5b/7), multi-stage Cooley-Tukey division (Fig. 9), BPMM weight
+//!   slicing (Fig. 10), PE-array mapping and micro-code block generation
+//!   (Fig. 8).
+//! * [`sim`] — deterministic cycle-level discrete-event simulator of the
+//!   dataflow substrate: PEs with decoupled units and coarse-grained
+//!   block scheduling, mesh NoC, multi-line SPM, DMA/DDR.
+//! * [`baselines`] — analytical models of the comparison platforms
+//!   (Jetson Xavier NX / Nano roofline + cache hierarchy; SOTA butterfly
+//!   FPGA accelerator; SpAtten; DOTA).
+//! * [`energy`] — the Table III power/area model, activity-scaled.
+//! * [`workloads`] — the paper's benchmark suite (ViT, BERT, FABNet,
+//!   one-layer vanilla transformer) as kernel enumerations.
+//! * [`runtime`] — PJRT loader/executor for the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text via the `xla` crate).
+//! * [`coordinator`] — experiment orchestration: workload → DFG plan →
+//!   simulation → report; the batch-streaming driver of Table IV.
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod dfg;
+pub mod energy;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,306 @@
+//! `bfdf` — the butterfly-dataflow command-line launcher.
+//!
+//! Subcommands cover interactive use of every layer: simulating kernels,
+//! sweeping divisions, printing the platform/energy tables, validating
+//! the AOT artifacts through PJRT, and streaming the Table-IV workload.
+
+use anyhow::Result;
+
+use butterfly_dataflow::arch::{ArchConfig, UnitKind};
+use butterfly_dataflow::coordinator::{
+    run_kernel_with, stream_workload, ExperimentConfig,
+};
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::dfg::stages::enumerate_divisions;
+use butterfly_dataflow::energy;
+use butterfly_dataflow::runtime::Runtime;
+use butterfly_dataflow::util::cli::{App, Command};
+use butterfly_dataflow::util::stats::{fmt_time, si};
+use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads::{self, platforms, KernelSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn app() -> App {
+    App::new("bfdf", "multilayer dataflow orchestration for butterfly sparsity")
+        .command(
+            Command::new("simulate", "simulate one butterfly kernel on the dataflow array")
+                .opt("kind", "fft", "kernel kind: fft | bpmm")
+                .opt("points", "256", "transform length (power of two)")
+                .opt("vectors", "8192", "independent vectors (batch x rows)")
+                .opt("window", "48", "simulation window (DFG iterations)")
+                .opt("division", "auto", "stage division RxC, e.g. 64x32, or 'auto'")
+                .opt("arch", "full", "architecture preset: full | scaled128")
+                .flag("no-multiline-spm", "ablation: single-line SPM")
+                .flag("fifo", "ablation: FIFO block scheduling"),
+        )
+        .command(
+            Command::new("sweep-divisions", "Fig. 14 sweep: CalUnit utilization per division")
+                .opt("kind", "bpmm", "kernel kind: fft | bpmm")
+                .opt("points", "4096", "transform length")
+                .opt("vectors", "8192", "independent vectors"),
+        )
+        .command(Command::new("platforms", "print the Table I platform comparison"))
+        .command(Command::new("energy-model", "print the Table III power/area model"))
+        .command(
+            Command::new("validate", "run every AOT artifact through PJRT against goldens")
+                .opt("artifacts", "artifacts", "artifact directory"),
+        )
+        .command(
+            Command::new("stream", "Table IV end-to-end vanilla-transformer streaming")
+                .opt("batch", "256", "streamed batch size")
+                .opt("arch", "scaled128", "architecture preset: full | scaled128"),
+        )
+        .command(
+            Command::new("gpu-model", "run the Jetson GPU baseline on a butterfly kernel")
+                .opt("kind", "fft", "kernel kind: fft | bpmm")
+                .opt("points", "1024", "transform length")
+                .opt("vectors", "8192", "independent vectors")
+                .opt("platform", "nx", "gpu platform: nx | nano"),
+        )
+}
+
+fn parse_kind(s: &str) -> Result<KernelKind> {
+    match s {
+        "fft" => Ok(KernelKind::Fft),
+        "bpmm" => Ok(KernelKind::Bpmm),
+        other => anyhow::bail!("unknown kernel kind '{other}' (fft | bpmm)"),
+    }
+}
+
+fn parse_arch(s: &str) -> Result<ArchConfig> {
+    match s {
+        "full" => Ok(ArchConfig::full()),
+        "scaled128" => Ok(ArchConfig::scaled_128()),
+        other => anyhow::bail!("unknown arch preset '{other}' (full | scaled128)"),
+    }
+}
+
+fn parse_division(s: &str) -> Result<Option<(usize, usize)>> {
+    if s == "auto" {
+        return Ok(None);
+    }
+    let (r, c) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("division must be RxC, e.g. 64x32"))?;
+    Ok(Some((r.parse()?, c.parse()?)))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let app = app();
+    let (cmd, m) = app.parse(args)?;
+    match cmd.as_str() {
+        "simulate" => {
+            let kind = parse_kind(m.get("kind"))?;
+            let points = m.get_usize("points")?;
+            let vectors = m.get_usize("vectors")?;
+            let spec = KernelSpec {
+                name: format!("{}-{}", kind.name(), points),
+                kind,
+                points,
+                vectors,
+                d_in: points,
+                d_out: points,
+                seq: points,
+            };
+            let cfg = ExperimentConfig {
+                arch: parse_arch(m.get("arch"))?,
+                window: m.get_usize("window")?,
+                sim: butterfly_dataflow::sim::SimOptions {
+                    no_multiline_spm: m.flag("no-multiline-spm"),
+                    fifo_scheduling: m.flag("fifo"),
+                },
+            };
+            let r = run_kernel_with(&spec, &cfg, parse_division(m.get("division"))?)?;
+            let mut t = Table::new(
+                &format!("simulate {} ({} vectors)", r.name, vectors),
+                &["metric", "value"],
+            );
+            t.row(&["cycles".into(), format!("{:.0}", r.cycles)]);
+            t.row(&["time".into(), fmt_time(r.time_s)]);
+            t.row(&["stages".into(), format!("{:?}",
+                r.plan.stages.iter().map(|s| s.points).collect::<Vec<_>>())]);
+            for k in UnitKind::ALL {
+                t.row(&[format!("util.{}", k.name()), format!("{:.1}%", 100.0 * r.util_of(k))]);
+            }
+            t.row(&["spm requirement".into(), format!("{:.2}%", 100.0 * r.spm_requirement)]);
+            t.row(&["flops".into(), si(r.flops)]);
+            t.row(&["flops efficiency".into(), format!("{:.1}%", 100.0 * r.flops_efficiency)]);
+            t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
+            t.row(&["energy".into(), format!("{:.4} J", r.energy_j)]);
+            t.row(&["ddr traffic".into(), format!("{}B", si(r.dma_bytes))]);
+            t.print();
+        }
+        "sweep-divisions" => {
+            let kind = parse_kind(m.get("kind"))?;
+            let points = m.get_usize("points")?;
+            let vectors = m.get_usize("vectors")?;
+            let cfg = ExperimentConfig::default();
+            let cap = match kind {
+                KernelKind::Fft => cfg.arch.max_fft_points,
+                KernelKind::Bpmm => cfg.arch.max_bpmm_points,
+            };
+            let mut t = Table::new(
+                &format!("Fig.14 division sweep: {} {}", kind.name(), points),
+                &["division", "cycles", "cal util", "load util", "flow util"],
+            );
+            for (r, c) in enumerate_divisions(points, 16, cap) {
+                let spec = KernelSpec {
+                    name: format!("{}-{points}-{r}x{c}", kind.name()),
+                    kind,
+                    points,
+                    vectors,
+                    d_in: points,
+                    d_out: points,
+                    seq: points,
+                };
+                let res = run_kernel_with(&spec, &cfg, Some((r, c)))?;
+                t.row(&[
+                    format!("{r}x{c}"),
+                    format!("{:.0}", res.cycles),
+                    format!("{:.2}%", 100.0 * res.util_of(UnitKind::Cal)),
+                    format!("{:.2}%", 100.0 * res.util_of(UnitKind::Load)),
+                    format!("{:.2}%", 100.0 * res.util_of(UnitKind::Flow)),
+                ]);
+            }
+            t.print();
+        }
+        "platforms" => {
+            let mut t = Table::new(
+                "Table I: platform comparison",
+                &["platform", "freq", "peak fp16", "bandwidth", "tech", "power"],
+            );
+            let ours = ArchConfig::full();
+            for p in [
+                platforms::jetson_nano(),
+                platforms::sota_butterfly_accel(),
+                platforms::jetson_xavier_nx(),
+            ] {
+                t.row(&[
+                    p.name.to_string(),
+                    format!("{:.0} MHz", p.freq_hz / 1e6),
+                    format!("{}FLOPS", si(p.peak_flops)),
+                    format!("{}B/s", si(p.bandwidth)),
+                    format!("{} nm", p.technology_nm),
+                    format!("{:.2} W", p.power_w),
+                ]);
+            }
+            t.row(&[
+                "Multilayer Dataflow (ours)".into(),
+                format!("{:.0} MHz", ours.freq_hz / 1e6),
+                format!("{}FLOPS", si(ours.peak_flops())),
+                format!("{}B/s", si(ours.ddr_bw())),
+                "12 nm".into(),
+                format!("{:.2} W", energy::array_power_w(&ours)),
+            ]);
+            t.print();
+        }
+        "energy-model" => {
+            let mut t = Table::new(
+                "Table III: synthesized area and power of PE unit",
+                &["unit", "area mm^2", "active mW", "share"],
+            );
+            let total = energy::pe_active_mw();
+            for r in energy::table3_rows() {
+                t.row(&[
+                    r.name.to_string(),
+                    format!("{:.3}", r.area_mm2),
+                    format!("{:.2}", r.active_mw),
+                    format!("{:.2}%", 100.0 * r.active_mw / total),
+                ]);
+            }
+            t.row(&[
+                "Total (single PE)".into(),
+                "0.985".into(),
+                format!("{total:.2}"),
+                "100%".into(),
+            ]);
+            t.print();
+            println!(
+                "array power: full {:.2} W, scaled128 {:.2} W",
+                energy::array_power_w(&ArchConfig::full()),
+                energy::array_power_w(&ArchConfig::scaled_128()),
+            );
+        }
+        "validate" => {
+            let mut rt = Runtime::open(m.get("artifacts"))?;
+            println!("PJRT platform: {}", rt.platform());
+            let names = rt.artifact_names();
+            let mut t = Table::new(
+                "artifact validation (PJRT vs python goldens)",
+                &["artifact", "input", "output", "max |err|", "status"],
+            );
+            let dir = rt.dir.clone();
+            for name in names {
+                let model = rt.load(&name)?;
+                let err = model.validate_golden(&dir)?;
+                let ok = err < 1e-3;
+                t.row(&[
+                    name.clone(),
+                    format!("{:?}", model.meta.input_shape),
+                    format!("{:?}", model.meta.output_shape),
+                    format!("{err:.2e}"),
+                    if ok { "OK" } else { "FAIL" }.to_string(),
+                ]);
+                anyhow::ensure!(ok, "artifact {name} exceeded tolerance: {err}");
+            }
+            t.print();
+        }
+        "stream" => {
+            let batch = m.get_usize("batch")?;
+            let cfg = ExperimentConfig {
+                arch: parse_arch(m.get("arch"))?,
+                ..Default::default()
+            };
+            let r = stream_workload(&workloads::vanilla_kernels(batch), batch, &cfg)?;
+            let mut t = Table::new(
+                "Table IV (our side): 1-layer vanilla transformer, batch streamed",
+                &["metric", "value"],
+            );
+            t.row(&["batch".into(), format!("{batch}")]);
+            t.row(&["batch time".into(), fmt_time(r.batch_time_s)]);
+            t.row(&["latency".into(), format!("{:.2} ms", r.latency_ms)]);
+            t.row(&["throughput".into(), format!("{:.1} pred/s", r.throughput)]);
+            t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
+            t.row(&["energy eff.".into(), format!("{:.1} pred/J", r.energy_eff)]);
+            t.print();
+        }
+        "gpu-model" => {
+            let kind = parse_kind(m.get("kind"))?;
+            let points = m.get_usize("points")?;
+            let vectors = m.get_usize("vectors")?;
+            let platform = match m.get("platform") {
+                "nx" => platforms::jetson_xavier_nx(),
+                "nano" => platforms::jetson_nano(),
+                other => anyhow::bail!("unknown platform '{other}'"),
+            };
+            let gpu = butterfly_dataflow::baselines::gpu::GpuModel::new(platform);
+            let spec = KernelSpec {
+                name: format!("{}-{}", kind.name(), points),
+                kind,
+                points,
+                vectors,
+                d_in: points,
+                d_out: points,
+                seq: points,
+            };
+            let r = gpu.butterfly(&spec);
+            let mut t = Table::new(&format!("GPU model: {}", r.name), &["metric", "value"]);
+            t.row(&["time".into(), fmt_time(r.time_s)]);
+            t.row(&["L1 hit".into(), format!("{:.1}%", 100.0 * r.l1_hit)]);
+            t.row(&["L2 hit".into(), format!("{:.1}%", 100.0 * r.l2_hit)]);
+            t.row(&["L1 requirement".into(), format!("{:.1}%", 100.0 * r.l1_req)]);
+            t.row(&["L2 requirement".into(), format!("{:.1}%", 100.0 * r.l2_req)]);
+            t.row(&["DRAM traffic".into(), format!("{}B", si(r.dram_bytes))]);
+            t.print();
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+    Ok(())
+}

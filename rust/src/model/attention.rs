@@ -1,0 +1,229 @@
+//! Attention numerics: dense softmax attention and FNet (2D-FFT) mixing.
+//!
+//! Used by the functional examples to cross-check the PJRT-executed
+//! artifacts and by the workload generators to produce realistic traffic.
+
+use super::butterfly::BpmmFactors;
+use super::fft::fft2d_real;
+
+/// Row-major (rows, cols) matrix helper.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// self (r x k) @ other (k x c).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// self (r x k) @ other^T (c x k).
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            for j in 0..other.rows {
+                let mut acc = 0.0f32;
+                for k in 0..self.cols {
+                    acc += self.at(i, k) * other.at(j, k);
+                }
+                out.data[i * other.rows + j] = acc;
+            }
+        }
+        out
+    }
+}
+
+/// Numerically-stable softmax over each row, in place.
+pub fn softmax_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Dense softmax(Q K^T / sqrt(d)) V for a single head.
+pub fn softmax_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    let d = q.cols as f32;
+    let mut scores = q.matmul_t(k);
+    for s in scores.data.iter_mut() {
+        *s /= d.sqrt();
+    }
+    softmax_rows(&mut scores);
+    scores.matmul(v)
+}
+
+/// FNet token mixing: Re(FFT2(x)) over a (seq, hidden) matrix.
+pub fn fnet_mixing(x: &Mat) -> Mat {
+    let spec = fft2d_real(&x.data, x.rows, x.cols);
+    Mat::from_vec(
+        x.rows,
+        x.cols,
+        spec.into_iter().map(|c| c.re as f32).collect(),
+    )
+}
+
+/// Apply a BPMM linear layer to every row of `x` (square case).
+pub fn bpmm_linear(x: &Mat, factors: &BpmmFactors) -> Mat {
+    assert_eq!(x.cols, factors.n);
+    let mut out = x.clone();
+    for i in 0..out.rows {
+        factors.apply(out.row_mut(i));
+    }
+    out
+}
+
+/// LayerNorm over rows (eps 1e-5), in place.
+pub fn layer_norm_rows(m: &mut Mat) {
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        let n = row.len() as f32;
+        let mean: f32 = row.iter().sum::<f32>() / n;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(r, c, rng.normal_vec(r * c))
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = rand_mat(5, 9, 1);
+        softmax_rows(&mut m);
+        for i in 0..5 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(i).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn attention_of_identical_tokens_is_average() {
+        // If all value rows are equal, attention returns that row.
+        let q = rand_mat(4, 8, 2);
+        let k = rand_mat(4, 8, 3);
+        let mut v = Mat::zeros(4, 8);
+        for i in 0..4 {
+            for j in 0..8 {
+                v.data[i * 8 + j] = j as f32;
+            }
+        }
+        let o = softmax_attention(&q, &k, &v);
+        for i in 0..4 {
+            for j in 0..8 {
+                assert!((o.at(i, j) - j as f32).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn fnet_mixing_of_zero_is_zero() {
+        let x = Mat::zeros(8, 16);
+        let y = fnet_mixing(&x);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fnet_dc_term() {
+        // Mixing output at (0,0) equals the sum of all elements.
+        let x = rand_mat(8, 8, 5);
+        let y = fnet_mixing(&x);
+        let sum: f32 = x.data.iter().sum();
+        assert!((y.at(0, 0) - sum).abs() < 1e-2);
+    }
+
+    #[test]
+    fn bpmm_linear_identity() {
+        let x = rand_mat(3, 16, 6);
+        let f = BpmmFactors::identity(16);
+        let y = bpmm_linear(&x, &f);
+        assert_eq!(x.data, y.data);
+    }
+
+    #[test]
+    fn layer_norm_moments() {
+        let mut m = rand_mat(4, 64, 7);
+        layer_norm_rows(&mut m);
+        for i in 0..4 {
+            let row = m.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul() {
+        let a = rand_mat(3, 5, 8);
+        let b = rand_mat(4, 5, 9);
+        // a @ b^T via matmul with explicit transpose.
+        let mut bt = Mat::zeros(5, 4);
+        for i in 0..4 {
+            for j in 0..5 {
+                bt.data[j * 4 + i] = b.at(i, j);
+            }
+        }
+        let want = a.matmul(&bt);
+        let got = a.matmul_t(&b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

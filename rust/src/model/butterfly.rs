@@ -1,0 +1,290 @@
+//! Butterfly matrices and BPMM (real-valued), matching ref.py layouts.
+
+use crate::util::rng::Rng;
+
+use super::log2_int;
+
+/// Index arrays (i, j) of the `n/2` pairs of a butterfly stage.
+pub fn stage_pair_indices(n: usize, stage: usize) -> Vec<(usize, usize)> {
+    let stride = 1usize << stage;
+    let blocks = n / (2 * stride);
+    let mut out = Vec::with_capacity(n / 2);
+    for blk in 0..blocks {
+        for off in 0..stride {
+            let i = blk * 2 * stride + off;
+            out.push((i, i + stride));
+        }
+    }
+    out
+}
+
+/// A full BPMM factor set: `log2(n)` stages of `(n/2, 4)` weights.
+#[derive(Debug, Clone)]
+pub struct BpmmFactors {
+    pub n: usize,
+    /// `stages[s][p*4..p*4+4]` = 2x2 block of pair `p` at stage `s`.
+    pub stages: Vec<Vec<f32>>,
+}
+
+impl BpmmFactors {
+    /// Identity factors (each stage is the identity matrix).
+    pub fn identity(n: usize) -> Self {
+        let stages = log2_int(n);
+        let mut sv = Vec::with_capacity(stages);
+        for _ in 0..stages {
+            let mut w = vec![0.0f32; n / 2 * 4];
+            for p in 0..n / 2 {
+                w[p * 4] = 1.0;
+                w[p * 4 + 3] = 1.0;
+            }
+            sv.push(w);
+        }
+        BpmmFactors { n, stages: sv }
+    }
+
+    /// Random factors biased toward identity (well-conditioned product),
+    /// mirroring `ref.random_bpmm_factors`.
+    pub fn random(n: usize, rng: &mut Rng) -> Self {
+        let stages = log2_int(n);
+        let mut sv = Vec::with_capacity(stages);
+        for _ in 0..stages {
+            let mut w = vec![0.0f32; n / 2 * 4];
+            for p in 0..n / 2 {
+                for k in 0..4 {
+                    let ident = if k == 0 || k == 3 { 0.5 } else { 0.0 };
+                    w[p * 4 + k] = (rng.normal() * 0.5) as f32 + ident;
+                }
+            }
+            sv.push(w);
+        }
+        BpmmFactors { n, stages: sv }
+    }
+
+    /// Number of stages (log2 n).
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Non-zero parameter count: 2 n log2 n.
+    pub fn param_count(&self) -> usize {
+        self.stages.len() * self.n * 2
+    }
+
+    /// Apply one stage in place to a single vector.
+    pub fn apply_stage(&self, x: &mut [f32], stage: usize) {
+        debug_assert_eq!(x.len(), self.n);
+        let w = &self.stages[stage];
+        for (p, (i, j)) in stage_pair_indices(self.n, stage).into_iter().enumerate() {
+            let (a, b) = (x[i], x[j]);
+            x[i] = w[p * 4] * a + w[p * 4 + 1] * b;
+            x[j] = w[p * 4 + 2] * a + w[p * 4 + 3] * b;
+        }
+    }
+
+    /// Apply the full BPMM to a single vector in place.
+    pub fn apply(&self, x: &mut [f32]) {
+        for s in 0..self.stages.len() {
+            self.apply_stage(x, s);
+        }
+    }
+
+    /// Apply to a batch laid out row-major `(batch, n)`.
+    pub fn apply_batch(&self, x: &mut [f32]) {
+        assert_eq!(x.len() % self.n, 0);
+        for row in x.chunks_mut(self.n) {
+            self.apply(row);
+        }
+    }
+
+    /// Materialize one stage as a dense row-major `(n, n)` matrix.
+    pub fn stage_dense(&self, stage: usize) -> Vec<f32> {
+        let n = self.n;
+        let w = &self.stages[stage];
+        let mut m = vec![0.0f32; n * n];
+        for (p, (i, j)) in stage_pair_indices(n, stage).into_iter().enumerate() {
+            m[i * n + i] = w[p * 4];
+            m[i * n + j] = w[p * 4 + 1];
+            m[j * n + i] = w[p * 4 + 2];
+            m[j * n + j] = w[p * 4 + 3];
+        }
+        m
+    }
+
+    /// Materialize the whole product as a dense matrix (tests only).
+    pub fn dense(&self) -> Vec<f32> {
+        let n = self.n;
+        let mut acc = vec![0.0f32; n * n];
+        for i in 0..n {
+            acc[i * n + i] = 1.0;
+        }
+        for s in 0..self.stages.len() {
+            let b = self.stage_dense(s);
+            acc = matmul(&b, &acc, n);
+        }
+        acc
+    }
+}
+
+/// Row-major square matmul (test helper).
+pub fn matmul(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Dense mat-vec y = M x (row-major).
+pub fn matvec(m: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &m[i * n..(i + 1) * n];
+        y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+    }
+    y
+}
+
+/// Two-stage (Fig. 9 / Monarch-like) BPMM for scales beyond the single-DFG
+/// limit: per-column scale-r factor sets, then per-row scale-c sets.
+#[derive(Debug, Clone)]
+pub struct StagedBpmm {
+    pub r: usize,
+    pub c: usize,
+    pub col: Vec<BpmmFactors>, // len c, each scale r
+    pub row: Vec<BpmmFactors>, // len r, each scale c
+}
+
+impl StagedBpmm {
+    pub fn random(n: usize, division: (usize, usize), rng: &mut Rng) -> Self {
+        let (r, c) = division;
+        assert_eq!(r * c, n, "division {r}x{c} != {n}");
+        StagedBpmm {
+            r,
+            c,
+            col: (0..c).map(|_| BpmmFactors::random(r, rng)).collect(),
+            row: (0..r).map(|_| BpmmFactors::random(c, rng)).collect(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.r * self.c
+    }
+
+    /// Apply to a single vector of length r*c (viewed as A[r][c] row-major).
+    pub fn apply(&self, x: &mut [f32]) {
+        let (r, c) = (self.r, self.c);
+        assert_eq!(x.len(), r * c);
+        // Column stage.
+        let mut colbuf = vec![0.0f32; r];
+        for j in 0..c {
+            for i in 0..r {
+                colbuf[i] = x[i * c + j];
+            }
+            self.col[j].apply(&mut colbuf);
+            for i in 0..r {
+                x[i * c + j] = colbuf[i];
+            }
+        }
+        // Row stage.
+        for i in 0..r {
+            self.row[i].apply(&mut x[i * c..(i + 1) * c]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_factors_are_identity() {
+        let f = BpmmFactors::identity(16);
+        let mut x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let orig = x.clone();
+        f.apply(&mut x);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn stage_pairs_partition_elements() {
+        for n in [4usize, 16, 64] {
+            for s in 0..log2_int_local(n) {
+                let pairs = stage_pair_indices(n, s);
+                let mut seen = vec![false; n];
+                for (i, j) in pairs {
+                    assert_eq!(j - i, 1 << s);
+                    assert!(!seen[i] && !seen[j]);
+                    seen[i] = true;
+                    seen[j] = true;
+                }
+                assert!(seen.into_iter().all(|b| b));
+            }
+        }
+    }
+
+    fn log2_int_local(n: usize) -> usize {
+        n.trailing_zeros() as usize
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Rng::new(3);
+        let f = BpmmFactors::random(32, &mut rng);
+        let x: Vec<f32> = rng.normal_vec(32);
+        let mut got = x.clone();
+        f.apply(&mut got);
+        let want = matvec(&f.dense(), &x, 32);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn stage_dense_has_two_nnz_per_row() {
+        let mut rng = Rng::new(5);
+        let f = BpmmFactors::random(16, &mut rng);
+        for s in 0..f.depth() {
+            let m = f.stage_dense(s);
+            for i in 0..16 {
+                let nnz = m[i * 16..(i + 1) * 16].iter().filter(|v| **v != 0.0).count();
+                assert_eq!(nnz, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn param_count_is_nlogn() {
+        let f = BpmmFactors::identity(256);
+        assert_eq!(f.param_count(), 2 * 256 * 8);
+    }
+
+    #[test]
+    fn staged_matches_naive_composition() {
+        let mut rng = Rng::new(7);
+        let st = StagedBpmm::random(64, (8, 8), &mut rng);
+        let x = rng.normal_vec(64);
+        let mut got = x.clone();
+        st.apply(&mut got);
+        // Naive: columns then rows via copies.
+        let mut a = x.clone();
+        for j in 0..8 {
+            let mut col: Vec<f32> = (0..8).map(|i| a[i * 8 + j]).collect();
+            st.col[j].apply(&mut col);
+            for i in 0..8 {
+                a[i * 8 + j] = col[i];
+            }
+        }
+        for i in 0..8 {
+            st.row[i].apply(&mut a[i * 8..(i + 1) * 8]);
+        }
+        assert_eq!(got, a);
+    }
+}

@@ -1,0 +1,304 @@
+//! Radix-2 Cooley-Tukey FFT (reference numerics + the four-step
+//! decomposition the Fig. 9 stage division executes).
+
+use super::log2_int;
+
+/// Minimal complex number (the vendor set has no `num-complex`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Self {
+        Complex { re, im }
+    }
+
+    pub fn from_polar(r: f64, theta: f64) -> Self {
+        Complex { re: r * theta.cos(), im: r * theta.sin() }
+    }
+
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+
+    pub fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    pub fn scale(self, s: f64) -> Complex {
+        Complex::new(self.re * s, self.im * s)
+    }
+
+    pub fn conj(self) -> Complex {
+        Complex::new(self.re, -self.im)
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// Bit-reversal permutation: `perm[k] = bitrev(k, log2 n)`.
+pub fn bit_reversal_permutation(n: usize) -> Vec<usize> {
+    let bits = log2_int(n);
+    (0..n)
+        .map(|k| {
+            let mut r = 0usize;
+            for b in 0..bits {
+                if k & (1 << b) != 0 {
+                    r |= 1 << (bits - 1 - b);
+                }
+            }
+            r
+        })
+        .collect()
+}
+
+/// In-place DIT radix-2 FFT over `x` (length power of two).
+pub fn fft_in_place(x: &mut [Complex]) {
+    let n = x.len();
+    let stages = log2_int(n);
+    // Bit-reversal reorder.
+    let perm = bit_reversal_permutation(n);
+    for k in 0..n {
+        if perm[k] > k {
+            x.swap(k, perm[k]);
+        }
+    }
+    // Butterfly stages: stage s pairs i with i + 2^s.
+    for s in 0..stages {
+        let stride = 1usize << s;
+        let blocks = n / (2 * stride);
+        for blk in 0..blocks {
+            for off in 0..stride {
+                let i = blk * 2 * stride + off;
+                let j = i + stride;
+                let w = Complex::from_polar(
+                    1.0,
+                    -std::f64::consts::PI * off as f64 / stride as f64,
+                );
+                let wb = w.mul(x[j]);
+                let t = x[i];
+                x[i] = t.add(wb);
+                x[j] = t.sub(wb);
+            }
+        }
+    }
+}
+
+/// Forward DFT of a real slice; returns complex spectrum.
+pub fn fft_real(x: &[f32]) -> Vec<Complex> {
+    let mut buf: Vec<Complex> =
+        x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
+    fft_in_place(&mut buf);
+    buf
+}
+
+/// Inverse FFT (in place).
+pub fn ifft_in_place(x: &mut [Complex]) {
+    let n = x.len() as f64;
+    for v in x.iter_mut() {
+        *v = v.conj();
+    }
+    fft_in_place(x);
+    for v in x.iter_mut() {
+        *v = v.conj().scale(1.0 / n);
+    }
+}
+
+/// Naive O(n^2) DFT (ground truth in tests).
+pub fn dft_naive(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = Complex::ZERO;
+            for (j, &v) in x.iter().enumerate() {
+                let w = Complex::from_polar(
+                    1.0,
+                    -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64,
+                );
+                acc = acc.add(w.mul(v));
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Four-step Cooley-Tukey FFT with an explicit (n1, n2) division —
+/// numerically identical to `fft_in_place` but structured exactly like the
+/// paper's Fig. 9 execution (row FFTs, twiddle layer, column FFTs).
+///
+/// Decomposition (matches `model.fft_staged` in Python):
+///   A[a][b] = x[a + n1*b];  Y[a] = FFT_n2(A[a]);  Y[a][k2] *= w_n^(a*k2);
+///   Z[:,k2] = FFT_n1(Y[:,k2]);  X[n2*k1 + k2] = Z[k1][k2].
+pub fn fft_four_step(x: &[Complex], n1: usize, n2: usize) -> Vec<Complex> {
+    let n = x.len();
+    assert_eq!(n1 * n2, n, "division {n1}x{n2} != {n}");
+    // A[a][b] = x[a + n1*b], row-major (n1, n2).
+    let mut a = vec![Complex::ZERO; n];
+    for ai in 0..n1 {
+        for b in 0..n2 {
+            a[ai * n2 + b] = x[ai + n1 * b];
+        }
+    }
+    // Row FFTs (length n2) — the paper's DFG1 iterations.
+    for row in a.chunks_mut(n2) {
+        fft_in_place(row);
+    }
+    // Twiddle layer (element-wise, the Fig. 9 step 3).
+    for ai in 0..n1 {
+        for k2 in 0..n2 {
+            let w = Complex::from_polar(
+                1.0,
+                -2.0 * std::f64::consts::PI * (ai * k2) as f64 / n as f64,
+            );
+            a[ai * n2 + k2] = a[ai * n2 + k2].mul(w);
+        }
+    }
+    // Column FFTs (length n1) — DFG2.
+    let mut col = vec![Complex::ZERO; n1];
+    for k2 in 0..n2 {
+        for ai in 0..n1 {
+            col[ai] = a[ai * n2 + k2];
+        }
+        fft_in_place(&mut col);
+        for k1 in 0..n1 {
+            a[k1 * n2 + k2] = col[k1];
+        }
+    }
+    // Row-major flatten is already X[n2*k1 + k2].
+    a
+}
+
+/// 2D FFT over a (rows, cols) real matrix — FNet mixing spectrum.
+pub fn fft2d_real(x: &[f32], rows: usize, cols: usize) -> Vec<Complex> {
+    assert_eq!(x.len(), rows * cols);
+    let mut buf: Vec<Complex> =
+        x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
+    for row in buf.chunks_mut(cols) {
+        fft_in_place(row);
+    }
+    let mut col = vec![Complex::ZERO; rows];
+    for j in 0..cols {
+        for i in 0..rows {
+            col[i] = buf[i * cols + j];
+        }
+        fft_in_place(&mut col);
+        for i in 0..rows {
+            buf[i * cols + j] = col[i];
+        }
+    }
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_complex(n: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn assert_close(a: &[Complex], b: &[Complex], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                x.sub(*y).abs() < tol,
+                "{x:?} vs {y:?} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        for n in [2usize, 8, 32, 128] {
+            let x = rand_complex(n, n as u64);
+            let mut got = x.clone();
+            fft_in_place(&mut got);
+            let want = dft_naive(&x);
+            assert_close(&got, &want, 1e-8 * n as f64);
+        }
+    }
+
+    #[test]
+    fn ifft_roundtrip() {
+        let x = rand_complex(64, 9);
+        let mut y = x.clone();
+        fft_in_place(&mut y);
+        ifft_in_place(&mut y);
+        assert_close(&y, &x, 1e-10);
+    }
+
+    #[test]
+    fn four_step_matches_direct() {
+        for (n1, n2) in [(4usize, 8usize), (8, 8), (16, 4), (2, 64)] {
+            let n = n1 * n2;
+            let x = rand_complex(n, (n1 * 1000 + n2) as u64);
+            let got = fft_four_step(&x, n1, n2);
+            let mut want = x.clone();
+            fft_in_place(&mut want);
+            assert_close(&got, &want, 1e-8 * n as f64);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let x = rand_complex(128, 11);
+        let mut y = x.clone();
+        fft_in_place(&mut y);
+        let et: f64 = x.iter().map(|c| c.abs() * c.abs()).sum();
+        let ef: f64 = y.iter().map(|c| c.abs() * c.abs()).sum::<f64>() / 128.0;
+        assert!((et - ef).abs() / et < 1e-10);
+    }
+
+    #[test]
+    fn dc_bin_is_sum() {
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let spec = fft_real(&x);
+        let sum: f64 = x.iter().map(|&v| v as f64).sum();
+        assert!((spec[0].re - sum).abs() < 1e-9);
+        assert!(spec[0].im.abs() < 1e-9);
+    }
+
+    #[test]
+    fn fft2d_separable() {
+        // FFT2 of an outer product is the outer product of FFTs.
+        let r: Vec<f32> = vec![1.0, -2.0, 0.5, 3.0];
+        let c: Vec<f32> = vec![2.0, 1.0, -1.0, 0.0, 4.0, -0.5, 1.5, 2.5];
+        let mut m = vec![0.0f32; 4 * 8];
+        for i in 0..4 {
+            for j in 0..8 {
+                m[i * 8 + j] = r[i] * c[j];
+            }
+        }
+        let got = fft2d_real(&m, 4, 8);
+        let fr = fft_real(&r);
+        let fc = fft_real(&c);
+        for i in 0..4 {
+            for j in 0..8 {
+                let want = fr[i].mul(fc[j]);
+                assert!(got[i * 8 + j].sub(want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn bit_reversal_involution() {
+        for n in [2usize, 16, 256] {
+            let p = bit_reversal_permutation(n);
+            for k in 0..n {
+                assert_eq!(p[p[k]], k);
+            }
+        }
+    }
+}

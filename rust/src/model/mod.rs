@@ -1,0 +1,19 @@
+//! Exact numeric reference implementations (Rust-side oracle).
+//!
+//! These mirror `python/compile/kernels/ref.py` with the *same layout
+//! conventions* (stage `s` pairs `i` with `i + 2^s`; stage weights are
+//! `(n/2, 4)` blocks `[w0 w1; w2 w3]`), so the simulator's functional
+//! checks, the runtime's golden tests and the Python oracles all agree.
+
+pub mod attention;
+pub mod butterfly;
+pub mod fft;
+
+pub use butterfly::{BpmmFactors, StagedBpmm};
+pub use fft::Complex;
+
+/// log2 of an exact power of two.
+pub fn log2_int(n: usize) -> usize {
+    assert!(n.is_power_of_two() && n > 0, "{n} is not a positive power of two");
+    n.trailing_zeros() as usize
+}

@@ -1,0 +1,159 @@
+//! PJRT runtime: load and execute the AOT artifacts.
+//!
+//! `python/compile/aot.py` lowers each model variant to HLO *text* (the
+//! interchange format xla_extension 0.5.1 accepts; serialized protos from
+//! jax ≥ 0.5 carry 64-bit ids it rejects).  This module loads the text,
+//! compiles it once on the PJRT CPU client, caches the executable, and
+//! runs it from the Rust hot path — Python never executes at runtime.
+
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+pub use tensor::Tensor;
+
+/// Metadata of one artifact (from `<name>.meta.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub output_mean: f64,
+    pub output_l2: f64,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            Ok(j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect())
+        };
+        Ok(ArtifactMeta {
+            name: j.req_str("name")?.to_string(),
+            input_shape: shape("input_shape")?,
+            output_shape: shape("output_shape")?,
+            output_mean: j.req_f64("output_mean")?,
+            output_l2: j.req_f64("output_l2")?,
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute on one input tensor; returns the output tensor.
+    pub fn run(&self, input: &Tensor) -> Result<Tensor> {
+        if input.shape != self.meta.input_shape {
+            bail!(
+                "input shape {:?} != artifact '{}' expects {:?}",
+                input.shape,
+                self.meta.name,
+                self.meta.input_shape
+            );
+        }
+        let dims: Vec<i64> = input.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&input.data)
+            .reshape(&dims)
+            .context("reshape input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        Ok(Tensor { shape: self.meta.output_shape.clone(), data })
+    }
+
+    /// Validate against the golden input/output pair shipped with the
+    /// artifact; returns the max abs error *relative to the golden RMS*
+    /// (XLA fusion reorders f32 reductions, so bit-exactness is not the
+    /// contract — scale-relative closeness is).
+    pub fn validate_golden(&self, dir: &Path) -> Result<f32> {
+        let input = tensor::read_f32_tensor(&dir.join(format!("{}.in.f32t", self.meta.name)))?;
+        let want = tensor::read_f32_tensor(&dir.join(format!("{}.out.f32t", self.meta.name)))?;
+        let got = self.run(&input)?;
+        if got.shape != want.shape {
+            bail!("golden shape mismatch: {:?} vs {:?}", got.shape, want.shape);
+        }
+        let max_err = got.max_abs_diff(&want);
+        let rms = (want.l2() / (want.len() as f64).sqrt()).max(1e-30) as f32;
+        Ok(max_err / rms)
+    }
+}
+
+/// Artifact directory: PJRT client + executable cache.
+pub struct Runtime {
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    cache: HashMap<String, ArtifactMeta>,
+    exes: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let parsed = json::parse(&text)?;
+        let mut cache = HashMap::new();
+        for item in parsed
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest is not an array"))?
+        {
+            let meta = ArtifactMeta::from_json(item)?;
+            cache.insert(meta.name.clone(), meta);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { dir, client, cache, exes: HashMap::new() })
+    }
+
+    /// Names of available artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.cache.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.cache.get(name)
+    }
+
+    /// Load (compile) an artifact, memoized.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.exes.contains_key(name) {
+            let meta = self
+                .cache
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.exes.insert(name.to_string(), LoadedModel { meta, exe });
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Platform name of the PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,125 @@
+//! The `.f32t` tensor format shared with `python/compile/aot.py`:
+//! `u32 ndim, u32 dims[ndim], f32 data[prod(dims)]`, little-endian.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", shape, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Read a `.f32t` file.
+pub fn read_f32_tensor(path: &Path) -> Result<Tensor> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let ndim = u32::from_le_bytes(u32buf) as usize;
+    if ndim > 8 {
+        bail!("implausible ndim {ndim} in {path:?}");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        f.read_exact(&mut u32buf)?;
+        shape.push(u32::from_le_bytes(u32buf) as usize);
+    }
+    let n: usize = shape.iter().product();
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)
+        .with_context(|| format!("short data in {path:?} (want {n} f32)"))?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor { shape, data })
+}
+
+/// Write a `.f32t` file (round-trip/testing).
+pub fn write_f32_tensor(path: &Path, t: &Tensor) -> Result<()> {
+    use std::io::Write;
+    let mut out = Vec::with_capacity(4 + 4 * t.shape.len() + 4 * t.data.len());
+    out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for &v in &t.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-9, 7.25]).unwrap();
+        let dir = std::env::temp_dir().join("bfdf_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.f32t");
+        write_f32_tensor(&p, &t).unwrap();
+        let back = read_f32_tensor(&p).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(vec![2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::new(vec![4], vec![3.0, 4.0, 0.0, 0.0]).unwrap();
+        assert!((t.l2() - 5.0).abs() < 1e-12);
+        assert!((t.mean() - 1.75).abs() < 1e-12);
+    }
+}

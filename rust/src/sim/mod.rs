@@ -1,0 +1,19 @@
+//! Deterministic cycle-level discrete-event simulator of the dataflow
+//! substrate.
+//!
+//! The simulated machine is the paper's Fig. 6/8 design: a mesh of PEs,
+//! each with four *decoupled* function units {Load, Flow, Cal, Store} fed
+//! by a coarse-grained block scheduler (smallest `{layer, iter}` priority
+//! string first), a shared multi-bank SPM with a fixed number of SIMD16
+//! ports, a mesh NoC with per-link occupancy and XY routing, and a DMA
+//! engine streaming iteration data from DDR.
+//!
+//! [`engine`] runs one lowered [`crate::dfg::Program`]; [`result`] is the
+//! collected statistics.  Multi-stage plans, windowed extrapolation and
+//! figure-level metrics live in [`crate::coordinator`].
+
+pub mod engine;
+pub mod result;
+
+pub use engine::{simulate, SimOptions};
+pub use result::SimStats;

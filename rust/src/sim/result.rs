@@ -1,0 +1,58 @@
+//! Simulation statistics.
+
+use crate::arch::UnitKind;
+
+/// Statistics of one simulated program (one stage DFG × window iters).
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Total simulated cycles (makespan).
+    pub cycles: u64,
+    /// Busy cycles per unit kind, summed over PEs.
+    pub unit_busy: [u64; 4],
+    /// Busy cycles per unit kind *per PE* (pe-major).
+    pub unit_busy_per_pe: Vec<[u64; 4]>,
+    /// Scalars served by the SPM (lane-scaled + broadcast).
+    pub spm_scalars: u64,
+    /// Scalars moved over the NoC (lane-scaled).
+    pub noc_scalars: u64,
+    /// Cycles SPM ports were busy (for port-utilization metrics).
+    pub spm_port_busy: u64,
+    /// Bytes streamed by DMA (in + out + weights).
+    pub dma_bytes: u64,
+    /// Completion time of each DFG iteration (cycles).
+    pub iter_done: Vec<u64>,
+    /// Blocks executed.
+    pub blocks_run: u64,
+    /// PEs that hosted work.
+    pub active_pes: usize,
+}
+
+impl SimStats {
+    /// Utilization of a unit kind over *active* PEs (the paper reports
+    /// per-design utilization; idle PEs of a shallow DFG count against
+    /// it via `active_pes` vs the full array in the caller).
+    pub fn utilization(&self, kind: UnitKind, num_pes: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.unit_busy[kind.index()] as f64 / (self.cycles as f64 * num_pes as f64)
+    }
+
+    /// Steady-state cycles per iteration, measured over the second half
+    /// of the window (used for extrapolation beyond the window).
+    pub fn steady_cycles_per_iter(&self) -> f64 {
+        let n = self.iter_done.len();
+        if n < 2 {
+            return self.cycles as f64;
+        }
+        let half = n / 2;
+        let span = self.iter_done[n - 1].saturating_sub(self.iter_done[half - 1]);
+        let iters = (n - half) as f64;
+        if span == 0 {
+            // Fully parallel window: fall back to makespan/iters.
+            self.cycles as f64 / n as f64
+        } else {
+            span as f64 / iters
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Declarative command-line parsing (clap substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments, plus generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One option specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: String,
+    pub help: String,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// A subcommand specification.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(String, String)>, // (name, help)
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.to_string(), about: about.to_string(), ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req_opt(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    fn usage(&self, prog: &str) -> String {
+        let mut out = format!("{} {} — {}\n\nOptions:\n", prog, self.name, self.about);
+        for p in &self.positionals {
+            out.push_str(&format!("  <{}>  {}\n", p.0, p.1));
+        }
+        for o in &self.opts {
+            let default = match (&o.default, o.is_flag) {
+                (_, true) => " (flag)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            out.push_str(&format!("  --{}  {}{}\n", o.name, o.help, default));
+        }
+        out
+    }
+
+    /// Parse this command's arguments.
+    pub fn parse(&self, prog: &str, args: &[String]) -> Result<Matches> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positionals: Vec<String> = Vec::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage(prog));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let (key, inline) = match name.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", self.usage(prog)))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    flags.insert(key, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("option --{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(&o.name) {
+                bail!("missing required option --{}\n\n{}", o.name, self.usage(prog));
+            }
+        }
+        if positionals.len() > self.positionals.len() {
+            bail!("unexpected positional arguments: {positionals:?}");
+        }
+        Ok(Matches { values, flags, positionals })
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow!("--{name} expects an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow!("--{name} expects a number, got '{}'", self.get(name)))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+/// A multi-command CLI application.
+pub struct App {
+    pub prog: String,
+    pub about: String,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(prog: &str, about: &str) -> Self {
+        App { prog: prog.to_string(), about: about.to_string(), commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nCommands:\n", self.prog, self.about);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<16} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun with '<command> --help' for command options.\n");
+        out
+    }
+
+    /// Dispatch on argv; returns (command name, matches).
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Matches)> {
+        let cmd_name = argv
+            .first()
+            .filter(|a| !a.starts_with('-'))
+            .ok_or_else(|| anyhow!("{}", self.usage()))?;
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| &c.name == cmd_name)
+            .ok_or_else(|| anyhow!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+        let m = cmd.parse(&self.prog, &argv[1..])?;
+        Ok((cmd_name.clone(), m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let c = Command::new("run", "run a thing")
+            .opt("n", "256", "points")
+            .flag("verbose", "chatty");
+        let m = c.parse("prog", &args(&["--n", "512"])).unwrap();
+        assert_eq!(m.get_usize("n").unwrap(), 512);
+        assert!(!m.flag("verbose"));
+        let m = c.parse("prog", &args(&["--verbose"])).unwrap();
+        assert_eq!(m.get_usize("n").unwrap(), 256);
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let c = Command::new("run", "").opt("scale", "1", "");
+        let m = c.parse("prog", &args(&["--scale=8"])).unwrap();
+        assert_eq!(m.get_usize("scale").unwrap(), 8);
+    }
+
+    #[test]
+    fn missing_required() {
+        let c = Command::new("run", "").req_opt("input", "path");
+        assert!(c.parse("prog", &args(&[])).is_err());
+        let m = c.parse("prog", &args(&["--input", "x.txt"])).unwrap();
+        assert_eq!(m.get("input"), "x.txt");
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let c = Command::new("run", "");
+        assert!(c.parse("prog", &args(&["--wat"])).is_err());
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App::new("bfdf", "test app")
+            .command(Command::new("sim", "simulate").opt("n", "64", ""))
+            .command(Command::new("bench", "benchmark"));
+        let (name, m) = app.parse(&args(&["sim", "--n", "128"])).unwrap();
+        assert_eq!(name, "sim");
+        assert_eq!(m.get_usize("n").unwrap(), 128);
+        assert!(app.parse(&args(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let c = Command::new("load", "").positional("path", "artifact");
+        let m = c.parse("prog", &args(&["a.hlo.txt"])).unwrap();
+        assert_eq!(m.positional(0), Some("a.hlo.txt"));
+    }
+}

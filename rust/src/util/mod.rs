@@ -1,0 +1,15 @@
+//! Self-contained infrastructure.
+//!
+//! The offline crate set has no clap/serde/criterion/proptest, so this
+//! module provides the minimal equivalents the rest of the crate needs:
+//! [`cli`] (declarative argument parsing), [`json`] (writer + small
+//! parser), [`prop`] (seeded randomized property harness), [`rng`]
+//! (xorshift64*), [`stats`] (summary statistics) and [`table`]
+//! (fixed-width text tables for the figure/table reports).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,88 @@
+//! Seeded randomized property-test harness (proptest substitute).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libstdc++ rpath the xla crate
+//! // needs; the same property runs as a unit test below.)
+//! use butterfly_dataflow::util::prop::check;
+//! check("addition commutes", 200, |rng| {
+//!     let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets an independent, deterministic RNG derived from the
+//! property name and the case index, so a failing case is replayable by
+//! name+index without shrinking machinery.  On panic the harness reports
+//! the case index and reraises.
+
+use super::rng::Rng;
+
+/// Derive a per-case seed from the property name and case index.
+fn case_seed(name: &str, case: u64) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Run `f` for `cases` independent seeded cases.  Panics (with the case
+/// index in the message) on the first failing case.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u64, f: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(case_seed(name, case));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property '{name}' failed at case {case}/{cases}: {msg}");
+        }
+    }
+}
+
+/// Like [`check`] but the closure returns `Result`, for properties that
+/// want `?`-style plumbing instead of asserts.
+pub fn check_result<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> anyhow::Result<()>,
+{
+    check(name, cases, |rng| {
+        if let Err(e) = f(rng) {
+            panic!("{e:#}");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let v = rng.below(10);
+            assert!(v < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_reports_case() {
+        check("always-false", 5, |_| {
+            assert!(false, "nope");
+        });
+    }
+
+    #[test]
+    fn case_seeds_differ() {
+        assert_ne!(case_seed("a", 0), case_seed("a", 1));
+        assert_ne!(case_seed("a", 0), case_seed("b", 0));
+    }
+}

@@ -1,0 +1,332 @@
+//! The paper's benchmark suite as kernel enumerations.
+//!
+//! Three benchmark families (Table I bottom):
+//!
+//! * **ViT / BERT attention kernels** (Fig. 2/15/16): the BPMM-sparse
+//!   linear kernels `AT-to_qkv` and `FFN-L1/L2`, and the 2D-FFT-sparse
+//!   whole-attention kernel `AT-all`, across sequence scales.
+//! * **FABNet-Base transformer** (Fig. 17): 2D-FFT attention + BPMM FFN
+//!   blocks at sequence scales 128..1K.
+//! * **One-layer vanilla transformer** (Table IV): 1K sequence, 1K
+//!   hidden, 2D-FFT attention + two BPMM FFN layers, batch-256 streamed.
+
+pub mod platforms;
+
+use crate::dfg::graph::KernelKind;
+
+/// One attention kernel instance to run (sparse, on our design) or its
+/// dense original (on the GPU baseline).
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    /// Display name, e.g. "VIT-AT-to_qkv".
+    pub name: String,
+    pub kind: KernelKind,
+    /// Transform length per vector (hidden size for BPMM; the FFT runs
+    /// of `AT-all` are enumerated as separate specs per axis).
+    pub points: usize,
+    /// Independent vectors: batch × heads × rows.
+    pub vectors: usize,
+    /// Input/output hidden sizes of the original dense layer (for the
+    /// dense-GPU comparison and the Fig. 10 slicing factor).
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Sequence length (drives the GPU cache model working set).
+    pub seq: usize,
+}
+
+impl KernelSpec {
+    /// Dense FLOPs of the original kernel this sparse kernel replaces
+    /// (matmul: 2 × rows × d_in × d_out).
+    pub fn dense_flops(&self) -> f64 {
+        2.0 * self.vectors as f64 * self.d_in as f64 * self.d_out as f64
+    }
+
+    /// Sparse butterfly FLOPs (2 ops per MAC slot; see KernelKind).
+    pub fn sparse_flops(&self) -> f64 {
+        let n = self.points as f64;
+        let stages = (self.points as f64).log2();
+        let slices = (self.d_in.max(self.d_out) / self.d_in.min(self.d_out)) as f64;
+        self.vectors as f64
+            * slices
+            * (n / 2.0)
+            * stages
+            * self.kind.ops_per_node() as f64
+            * 2.0
+    }
+
+    /// Bytes touched per vector on a cache-based machine (input + output
+    /// + weights once per vector re-walk).
+    pub fn sparse_bytes(&self, elem_bytes: usize) -> f64 {
+        let n = self.points as f64;
+        let stages = n.log2();
+        // Each stage rewrites the whole vector; weights are 2-per-row.
+        self.vectors as f64 * (stages + 2.0) * n * elem_bytes as f64
+    }
+}
+
+/// The paper's model families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelFamily {
+    Vit,
+    Bert,
+    FabNet,
+    Vanilla,
+}
+
+impl ModelFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelFamily::Vit => "VIT",
+            ModelFamily::Bert => "BERT",
+            ModelFamily::FabNet => "FABNet",
+            ModelFamily::Vanilla => "Vanilla",
+        }
+    }
+}
+
+/// ViT kernels at the paper's scales (Fig. 15a: seq 256, hidden 768-ish;
+/// we use the power-of-two 1024/256/512 the butterfly requires).
+pub fn vit_kernels(batch: usize) -> Vec<KernelSpec> {
+    let seq = 256;
+    let hidden = 512;
+    let mut v = Vec::new();
+    // AT-to_qkv: three hidden→hidden BPMM projections folded into one spec
+    // (3× vectors).
+    v.push(KernelSpec {
+        name: "VIT-AT-to_qkv".into(),
+        kind: KernelKind::Bpmm,
+        points: hidden,
+        vectors: 3 * batch * seq,
+        d_in: hidden,
+        d_out: hidden,
+        seq,
+    });
+    // FFN-L1 (expand 4x) and FFN-L2 (shrink 4x).
+    v.push(KernelSpec {
+        name: "VIT-FFN-L1".into(),
+        kind: KernelKind::Bpmm,
+        points: hidden,
+        vectors: 4 * batch * seq,
+        d_in: hidden,
+        d_out: 4 * hidden,
+        seq,
+    });
+    v.push(KernelSpec {
+        name: "VIT-FFN-L2".into(),
+        kind: KernelKind::Bpmm,
+        points: hidden,
+        vectors: 4 * batch * seq,
+        d_in: 4 * hidden,
+        d_out: hidden,
+        seq,
+    });
+    // AT-all: 2D FFT = seq-axis FFTs (hidden of them) + hidden-axis FFTs
+    // (seq of them) per batch item; enumerate as one spec per axis.
+    v.push(KernelSpec {
+        name: "VIT-AT-all-hidden".into(),
+        kind: KernelKind::Fft,
+        points: hidden,
+        vectors: batch * seq,
+        d_in: hidden,
+        d_out: hidden,
+        seq,
+    });
+    v.push(KernelSpec {
+        name: "VIT-AT-all-seq".into(),
+        kind: KernelKind::Fft,
+        points: seq,
+        vectors: batch * hidden,
+        d_in: seq,
+        d_out: seq,
+        seq,
+    });
+    v
+}
+
+/// BERT kernels across the paper's large sequence scales (§VI-F runs up
+/// to 64K sequences at 1K hidden).
+pub fn bert_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
+    let hidden = 1024;
+    vec![
+        KernelSpec {
+            name: format!("BERT-AT-to_qkv-{}", scale_name(seq)),
+            kind: KernelKind::Bpmm,
+            points: hidden,
+            vectors: 3 * batch * seq,
+            d_in: hidden,
+            d_out: hidden,
+            seq,
+        },
+        KernelSpec {
+            name: format!("BERT-FFN-L1-{}", scale_name(seq)),
+            kind: KernelKind::Bpmm,
+            points: hidden,
+            vectors: 4 * batch * seq,
+            d_in: hidden,
+            d_out: 4 * hidden,
+            seq,
+        },
+        KernelSpec {
+            name: format!("BERT-AT-all-hidden-{}", scale_name(seq)),
+            kind: KernelKind::Fft,
+            points: hidden,
+            vectors: batch * seq,
+            d_in: hidden,
+            d_out: hidden,
+            seq,
+        },
+        KernelSpec {
+            name: format!("BERT-AT-all-seq-{}", scale_name(seq)),
+            kind: KernelKind::Fft,
+            points: seq,
+            vectors: batch * hidden,
+            d_in: seq,
+            d_out: seq,
+            seq,
+        },
+    ]
+}
+
+/// FABNet-Base block kernels at one sequence scale (Fig. 17): 2D-FFT
+/// attention + BPMM FFN (hidden 256, expand 2x per [8]).
+pub fn fabnet_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
+    let hidden = 256;
+    vec![
+        KernelSpec {
+            name: format!("FABNet-{}-ATT-hidden", seq),
+            kind: KernelKind::Fft,
+            points: hidden,
+            vectors: batch * seq,
+            d_in: hidden,
+            d_out: hidden,
+            seq,
+        },
+        KernelSpec {
+            name: format!("FABNet-{}-ATT-seq", seq),
+            kind: KernelKind::Fft,
+            points: seq,
+            vectors: batch * hidden,
+            d_in: seq,
+            d_out: seq,
+            seq,
+        },
+        KernelSpec {
+            name: format!("FABNet-{}-FFN-L1", seq),
+            kind: KernelKind::Bpmm,
+            points: hidden,
+            vectors: 2 * batch * seq,
+            d_in: hidden,
+            d_out: 2 * hidden,
+            seq,
+        },
+        KernelSpec {
+            name: format!("FABNet-{}-FFN-L2", seq),
+            kind: KernelKind::Bpmm,
+            points: hidden,
+            vectors: 2 * batch * seq,
+            d_in: 2 * hidden,
+            d_out: hidden,
+            seq,
+        },
+    ]
+}
+
+/// Table-IV one-layer vanilla transformer: 1K seq, 1K hidden, 2D-FFT
+/// attention + two BPMM FFN layers.
+pub fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
+    let (seq, hidden) = (1024, 1024);
+    vec![
+        KernelSpec {
+            name: "Vanilla-ATT-hidden".into(),
+            kind: KernelKind::Fft,
+            points: hidden,
+            vectors: batch * seq,
+            d_in: hidden,
+            d_out: hidden,
+            seq,
+        },
+        KernelSpec {
+            name: "Vanilla-ATT-seq".into(),
+            kind: KernelKind::Fft,
+            points: seq,
+            vectors: batch * hidden,
+            d_in: seq,
+            d_out: seq,
+            seq,
+        },
+        KernelSpec {
+            name: "Vanilla-FFN-L1".into(),
+            kind: KernelKind::Bpmm,
+            points: hidden,
+            vectors: 2 * batch * seq,
+            d_in: hidden,
+            d_out: 2 * hidden,
+            seq,
+        },
+        KernelSpec {
+            name: "Vanilla-FFN-L2".into(),
+            kind: KernelKind::Bpmm,
+            points: hidden,
+            vectors: 2 * batch * seq,
+            d_in: 2 * hidden,
+            d_out: hidden,
+            seq,
+        },
+    ]
+}
+
+/// Short scale label (512, 1k, 64k ...).
+pub fn scale_name(n: usize) -> String {
+    if n >= 1024 && n % 1024 == 0 {
+        format!("{}k", n / 1024)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_kernel_set_shape() {
+        let ks = vit_kernels(8);
+        assert_eq!(ks.len(), 5);
+        assert!(ks.iter().any(|k| k.name.contains("to_qkv")));
+        assert!(ks.iter().any(|k| k.kind == KernelKind::Fft));
+    }
+
+    #[test]
+    fn sparse_flops_below_dense() {
+        for k in vit_kernels(8).iter().chain(bert_kernels(1, 4096).iter()) {
+            assert!(
+                k.sparse_flops() < k.dense_flops(),
+                "{}: sparse {} !< dense {}",
+                k.name,
+                k.sparse_flops(),
+                k.dense_flops()
+            );
+        }
+    }
+
+    #[test]
+    fn bert_64k_uses_long_sequence() {
+        let ks = bert_kernels(1, 64 * 1024);
+        let at_seq = ks.iter().find(|k| k.name.contains("AT-all-seq")).unwrap();
+        assert_eq!(at_seq.points, 64 * 1024);
+    }
+
+    #[test]
+    fn scale_names() {
+        assert_eq!(scale_name(512), "512");
+        assert_eq!(scale_name(1024), "1k");
+        assert_eq!(scale_name(65536), "64k");
+    }
+
+    #[test]
+    fn vanilla_matches_table4_shape() {
+        let ks = vanilla_kernels(256);
+        assert_eq!(ks.len(), 4);
+        assert!(ks.iter().all(|k| k.seq == 1024));
+    }
+}

@@ -1,0 +1,161 @@
+//! Comparison platform configurations (Table I).
+
+/// A comparison platform's headline parameters.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: &'static str,
+    pub freq_hz: f64,
+    /// Peak fp16 FLOPS of the unit used in each comparison.
+    pub peak_flops: f64,
+    /// Secondary peak (tensor cores on NX), if any.
+    pub peak_flops_tensor: Option<f64>,
+    pub bandwidth: f64,
+    pub technology_nm: u32,
+    pub power_w: f64,
+    /// L1 / L2 cache sizes (bytes) for the cache model (GPU platforms).
+    pub l1_bytes: Option<usize>,
+    pub l2_bytes: Option<usize>,
+}
+
+/// NVIDIA Jetson Xavier NX (Table I): 1.69 TFLOPS CUDA, 11 TFLOPS tensor,
+/// 59.71 GB/s, 15 W.  Volta iGPU: 48 KiB L1 per SM (6 SMs), 512 KiB L2.
+pub fn jetson_xavier_nx() -> Platform {
+    Platform {
+        name: "Jetson Xavier NX",
+        freq_hz: 1.1e9,
+        peak_flops: 1.69e12,
+        peak_flops_tensor: Some(11.0e12),
+        bandwidth: 59.71e9,
+        technology_nm: 12,
+        power_w: 15.0,
+        l1_bytes: Some(6 * 48 * 1024),
+        l2_bytes: Some(512 * 1024),
+    }
+}
+
+/// NVIDIA Jetson Nano (Table I): 471.6 GFLOPS fp16, 25.6 GB/s, 10 W.
+/// Maxwell iGPU: 64 KiB L1-ish per SM (1 SM pair), 256 KiB L2.
+pub fn jetson_nano() -> Platform {
+    Platform {
+        name: "Jetson Nano",
+        freq_hz: 0.921e9,
+        peak_flops: 471.6e9,
+        peak_flops_tensor: None,
+        bandwidth: 25.6e9,
+        technology_nm: 20,
+        power_w: 10.0,
+        l1_bytes: Some(64 * 1024),
+        l2_bytes: Some(256 * 1024),
+    }
+}
+
+/// SOTA butterfly accelerator [8] (FPGA): 204.8 GFLOPS (512 MACs @
+/// 200 MHz), 21.3 GB/s, 11.355 W.
+pub fn sota_butterfly_accel() -> Platform {
+    Platform {
+        name: "SOTA Butterfly Acc (FPGA)",
+        freq_hz: 200e6,
+        peak_flops: 204.8e9,
+        peak_flops_tensor: None,
+        bandwidth: 21.3e9,
+        technology_nm: 28,
+        power_w: 11.355,
+        l1_bytes: None,
+        l2_bytes: None,
+    }
+}
+
+/// SpAtten (Table IV): ASIC 40 nm, 1 GHz, 128 MACs, 1.06 W.
+pub fn spatten() -> Platform {
+    Platform {
+        name: "SpAtten",
+        freq_hz: 1e9,
+        peak_flops: 128.0 * 2.0 * 1e9,
+        peak_flops_tensor: None,
+        bandwidth: 64e9,
+        technology_nm: 40,
+        power_w: 1.06,
+        l1_bytes: None,
+        l2_bytes: None,
+    }
+}
+
+/// DOTA (Table IV): ASIC 22 nm, 0.858 W.
+pub fn dota() -> Platform {
+    Platform {
+        name: "DOTA",
+        freq_hz: 1e9,
+        peak_flops: 128.0 * 2.0 * 1e9,
+        peak_flops_tensor: None,
+        bandwidth: 64e9,
+        technology_nm: 22,
+        power_w: 0.858,
+        l1_bytes: None,
+        l2_bytes: None,
+    }
+}
+
+/// Published Table-IV end-to-end numbers quoted for the baselines (the
+/// paper itself quotes them from [8]).
+#[derive(Debug, Clone)]
+pub struct PublishedTable4 {
+    pub name: &'static str,
+    pub latency_ms: f64,
+    pub throughput_pred_s: f64,
+    pub power_w: f64,
+    pub energy_eff_pred_j: f64,
+}
+
+pub fn table4_published() -> Vec<PublishedTable4> {
+    vec![
+        PublishedTable4 {
+            name: "SpAtten",
+            latency_ms: 48.8,
+            throughput_pred_s: 20.49,
+            power_w: 1.06,
+            energy_eff_pred_j: 19.33,
+        },
+        PublishedTable4 {
+            name: "DOTA",
+            latency_ms: 34.1,
+            throughput_pred_s: 29.32,
+            power_w: 0.858,
+            energy_eff_pred_j: 34.18,
+        },
+        PublishedTable4 {
+            name: "SOTA Acc",
+            latency_ms: 2.4,
+            throughput_pred_s: 416.66,
+            power_w: 11.355,
+            energy_eff_pred_j: 36.69,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_parameters() {
+        let nx = jetson_xavier_nx();
+        assert!((nx.peak_flops - 1.69e12).abs() < 1e9);
+        assert_eq!(nx.peak_flops_tensor, Some(11.0e12));
+        let nano = jetson_nano();
+        assert!((nano.peak_flops - 471.6e9).abs() < 1e6);
+        let sota = sota_butterfly_accel();
+        assert!((sota.peak_flops - 204.8e9).abs() < 1e6);
+        assert!((sota.power_w - 11.355).abs() < 1e-9);
+    }
+
+    #[test]
+    fn published_table4_rows() {
+        let rows = table4_published();
+        assert_eq!(rows.len(), 3);
+        // Throughput ≈ 1000/latency (batch-1 predictions/s).
+        for r in &rows {
+            let implied = 1000.0 / r.latency_ms;
+            assert!((implied - r.throughput_pred_s).abs() / implied < 0.05, "{}", r.name);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Runtime/PJRT integration: load the AOT artifacts and check the
+//! numerics against both the Python goldens and the Rust-side numeric
+//! models.  Skipped (with a message) when `artifacts/` has not been
+//! built — run `make artifacts` first.
+
+use std::path::Path;
+
+use butterfly_dataflow::model::attention::{fnet_mixing, Mat};
+use butterfly_dataflow::runtime::{tensor::read_f32_tensor, Runtime, Tensor};
+use butterfly_dataflow::util::rng::Rng;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn all_artifacts_validate_against_goldens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let names = rt.artifact_names();
+    assert!(names.len() >= 4, "expected at least 4 artifacts: {names:?}");
+    let dirp = rt.dir.clone();
+    for name in names {
+        let model = rt.load(&name).unwrap();
+        let err = model.validate_golden(&dirp).unwrap();
+        assert!(err < 1e-2, "{name}: rel err {err}");
+    }
+}
+
+#[test]
+fn fft_artifact_matches_rust_fft_oracle() {
+    // The PJRT-executed Pallas FFT must agree with the independent
+    // Rust Cooley-Tukey implementation on fresh random inputs — the
+    // strongest cross-language, cross-layer consistency check.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let model = rt.load("fft_b64_n256").unwrap();
+    let (b, n) = (64usize, 256usize);
+    let mut rng = Rng::new(99);
+    let x = Tensor::new(vec![b, n], rng.normal_vec(b * n)).unwrap();
+    let y = model.run(&x).unwrap();
+    for row in 0..b {
+        let spec = butterfly_dataflow::model::fft::fft_real(&x.data[row * n..(row + 1) * n]);
+        for k in 0..n {
+            let got = y.data[row * n + k] as f64;
+            let want = spec[k].re;
+            assert!(
+                (got - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "row {row} bin {k}: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fnet_block_artifact_runs_fresh_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let model = rt.load("fnet_block_b4_s256_h256").unwrap();
+    let shape = model.meta.input_shape.clone();
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(3);
+    let x = Tensor::new(shape.clone(), rng.normal_vec(n)).unwrap();
+    let y = model.run(&x).unwrap();
+    assert_eq!(y.shape, model.meta.output_shape);
+    assert!(y.data.iter().all(|v| v.is_finite()));
+    // Determinism of the compiled executable.
+    let y2 = model.run(&x).unwrap();
+    assert_eq!(y.data, y2.data);
+}
+
+#[test]
+fn golden_inputs_are_readable_and_shaped() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).unwrap();
+    for name in rt.artifact_names() {
+        let meta = rt.meta(&name).unwrap().clone();
+        let input =
+            read_f32_tensor(&rt.dir.join(format!("{name}.in.f32t"))).unwrap();
+        assert_eq!(input.shape, meta.input_shape, "{name}");
+        let out = read_f32_tensor(&rt.dir.join(format!("{name}.out.f32t"))).unwrap();
+        assert_eq!(out.shape, meta.output_shape, "{name}");
+        // Manifest checksums match the golden file.
+        assert!(
+            (out.l2() - meta.output_l2).abs() / meta.output_l2.max(1e-9) < 1e-4,
+            "{name}: l2 {} vs manifest {}",
+            out.l2(),
+            meta.output_l2
+        );
+    }
+}
+
+#[test]
+fn rust_fnet_mixing_sanity_against_model() {
+    // Pure Rust-side consistency (no artifacts needed, but grouped here
+    // as part of the numerics chain): fnet mixing DC term.
+    let mut rng = Rng::new(1);
+    let x = Mat::from_vec(16, 32, rng.normal_vec(16 * 32));
+    let y = fnet_mixing(&x);
+    let sum: f32 = x.data.iter().sum();
+    assert!((y.at(0, 0) - sum).abs() < 1e-2 * (1.0 + sum.abs()));
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    let model = rt.load("bpmm_b64_n256").unwrap();
+    let bad = Tensor::zeros(vec![2, 2]);
+    assert!(model.run(&bad).is_err());
+}
+
+#[test]
+fn runtime_open_fails_cleanly_without_manifest() {
+    let err = match Runtime::open("/nonexistent-artifacts-dir") {
+        Ok(_) => panic!("open should fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
