@@ -13,7 +13,7 @@
 mod common;
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
-use butterfly_dataflow::coordinator::{run_kernel, ExperimentConfig};
+use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::microcode::lower_stage_packed;
 use butterfly_dataflow::dfg::stages::StageDfg;
@@ -29,25 +29,18 @@ fn main() {
         "ablation: multi-line SPM and block scheduling",
         &["kernel", "baseline cycles", "single-line SPM", "FIFO issue"],
     );
+    let base_sess = common::session();
+    let noml_sess = Session::builder()
+        .sim(SimOptions { no_multiline_spm: true, ..Default::default() })
+        .build();
+    let fifo_sess = Session::builder()
+        .sim(SimOptions { fifo_scheduling: true, ..Default::default() })
+        .build();
     for (kind, points) in [(KernelKind::Bpmm, 4096), (KernelKind::Fft, 2048)] {
         let s = common::spec(kind, points, 32 * 1024, points);
-        let base = run_kernel(&s, &ExperimentConfig::default()).unwrap();
-        let noml = run_kernel(
-            &s,
-            &ExperimentConfig {
-                sim: SimOptions { no_multiline_spm: true, ..Default::default() },
-                ..Default::default()
-            },
-        )
-        .unwrap();
-        let fifo = run_kernel(
-            &s,
-            &ExperimentConfig {
-                sim: SimOptions { fifo_scheduling: true, ..Default::default() },
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let base = base_sess.run(&s).unwrap();
+        let noml = noml_sess.run(&s).unwrap();
+        let fifo = fifo_sess.run(&s).unwrap();
         t.row(&[
             s.name.clone(),
             format!("{:.0}", base.cycles),

@@ -5,15 +5,30 @@
 //! output); see DESIGN.md's experiment index.  They are deterministic
 //! analysis programs (`harness = false`), not statistical timers — the
 //! wall-clock benchmark of the simulator itself is `perf_simulator`.
+//!
+//! Benches share one [`Session`] per configuration so kernels with
+//! common stage DFGs (sweep points, repeated workload layers) reuse the
+//! lowered programs instead of re-simulating them.
 
 #![allow(dead_code)]
 
-use butterfly_dataflow::coordinator::ExperimentConfig;
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::{ExperimentConfig, Session};
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::workloads::KernelSpec;
 
 pub fn cfg() -> ExperimentConfig {
     ExperimentConfig::default()
+}
+
+/// A default (full-arch) session.
+pub fn session() -> Session {
+    Session::builder().build()
+}
+
+/// The §VI-H fair-comparison session (128 MACs, one DDR channel).
+pub fn scaled_session() -> Session {
+    Session::builder().arch(ArchConfig::scaled_128()).build()
 }
 
 pub fn spec(kind: KernelKind, points: usize, vectors: usize, seq: usize) -> KernelSpec {

@@ -9,14 +9,13 @@
 mod common;
 
 use butterfly_dataflow::baselines::gpu::GpuModel;
-use butterfly_dataflow::coordinator::run_kernel;
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads::platforms;
 
 fn main() {
     let nx = GpuModel::new(platforms::jetson_xavier_nx());
-    let cfg = common::cfg();
+    let sess = common::session();
     let mut t = Table::new(
         "Fig.12 accessing requirement: GPU cache vs multilayer-dataflow SPM",
         &["scale", "kind", "NX L1 req", "NX L2 req", "our SPM req"],
@@ -27,7 +26,7 @@ fn main() {
             let vectors = batch * 64; // rows per transform batch
             let s = common::spec(kind, points, vectors, points);
             let gpu = nx.butterfly(&s);
-            let ours = run_kernel(&s, &cfg).expect("sim");
+            let ours = sess.run(&s).expect("sim");
             t.row(&[
                 format!("{points}"),
                 kind.name().to_string(),

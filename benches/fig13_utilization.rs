@@ -10,12 +10,11 @@
 mod common;
 
 use butterfly_dataflow::arch::UnitKind;
-use butterfly_dataflow::coordinator::run_kernel;
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::util::table::Table;
 
 fn main() {
-    let cfg = common::cfg();
+    let sess = common::session();
     let mut flow_fft_acc = Vec::new();
     for (panel, kind) in [("(a) FFT on attention", KernelKind::Fft),
                           ("(b) BPMM on linear layers", KernelKind::Bpmm)] {
@@ -25,7 +24,7 @@ fn main() {
         );
         for points in [256usize, 512, 1024, 2048, 4096, 8192] {
             let s = common::spec(kind, points, 64 * 1024 * 1024 / points, points);
-            let r = run_kernel(&s, &cfg).expect("sim");
+            let r = sess.run(&s).expect("sim");
             if kind == KernelKind::Fft {
                 flow_fft_acc.push(r.util_of(UnitKind::Flow));
             }

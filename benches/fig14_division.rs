@@ -9,17 +9,16 @@
 mod common;
 
 use butterfly_dataflow::arch::UnitKind;
-use butterfly_dataflow::coordinator::run_kernel_with;
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
 use butterfly_dataflow::util::table::Table;
 
 fn main() {
-    let cfg = common::cfg();
+    let sess = common::session();
     for kind in [KernelKind::Bpmm, KernelKind::Fft] {
         let cap = match kind {
-            KernelKind::Fft => cfg.arch.max_fft_points,
-            KernelKind::Bpmm => cfg.arch.max_bpmm_points,
+            KernelKind::Fft => sess.arch().max_fft_points,
+            KernelKind::Bpmm => sess.arch().max_bpmm_points,
         };
         for points in [2048usize, 4096, 8192] {
             let mut t = Table::new(
@@ -29,7 +28,7 @@ fn main() {
             let mut best = (String::new(), 0.0f64);
             for (r, c) in enumerate_divisions(points, 16, cap) {
                 let s = common::spec(kind, points, 16 * 1024, points);
-                let res = run_kernel_with(&s, &cfg, Some((r, c))).expect("sim");
+                let res = sess.run_with(&s, Some((r, c))).expect("sim");
                 let cal = res.util_of(UnitKind::Cal);
                 if cal > best.1 {
                     best = (format!("{r}x{c}"), cal);

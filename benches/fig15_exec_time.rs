@@ -11,7 +11,7 @@
 mod common;
 
 use butterfly_dataflow::baselines::gpu::GpuModel;
-use butterfly_dataflow::coordinator::{run_kernel, ExperimentConfig};
+use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::util::stats::{fmt_time, geomean};
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads::{self, platforms, KernelSpec};
@@ -26,7 +26,7 @@ struct Row {
 fn run_family(
     name: &str,
     kernels: &[KernelSpec],
-    cfg: &ExperimentConfig,
+    sess: &Session,
     nx: &GpuModel,
 ) -> Vec<Row> {
     let mut rows = Vec::new();
@@ -36,8 +36,8 @@ fn run_family(
         if spec.name.contains("AT-all-hidden") {
             // Fold the 2D-FFT axis pair; dense counterpart = attention.
             let pair = kernels[i + 1].clone();
-            let ours = run_kernel(&spec, cfg).unwrap().time_s
-                + run_kernel(&pair, cfg).unwrap().time_s;
+            let ours = sess.run(&spec).unwrap().time_s
+                + sess.run(&pair).unwrap().time_s;
             let b = spec.vectors / spec.seq;
             // Feasibility: the dense score matrix must fit device memory
             // (NX: 8 GB shared) — 64K sequences cannot run densely at all.
@@ -58,7 +58,7 @@ fn run_family(
             i += 2;
             continue;
         }
-        let ours = run_kernel(&spec, cfg).unwrap().time_s;
+        let ours = sess.run(&spec).unwrap().time_s;
         let dense = nx
             .dense_matmul(&spec.name, spec.vectors, spec.d_in, spec.d_out, true)
             .time_s;
@@ -71,7 +71,7 @@ fn run_family(
 }
 
 fn main() {
-    let cfg = common::cfg();
+    let sess = common::session();
     let nx = GpuModel::new(platforms::jetson_xavier_nx());
     let mut t = Table::new(
         "Fig.15 execution time: NX dense(tensor) / NX butterfly(cuda) / ours",
@@ -79,12 +79,12 @@ fn main() {
           "speedup dense", "speedup cuda"],
     );
     let mut all = Vec::new();
-    all.extend(run_family("VIT", &workloads::vit_kernels(128), &cfg, &nx));
+    all.extend(run_family("VIT", &workloads::vit_kernels(128), &sess, &nx));
     for seq in [4096usize, 16 * 1024, 64 * 1024] {
         all.extend(run_family(
             &format!("BERT-{seq}"),
             &workloads::bert_kernels(1, seq),
-            &cfg,
+            &sess,
             &nx,
         ));
     }

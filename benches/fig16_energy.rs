@@ -9,13 +9,12 @@
 mod common;
 
 use butterfly_dataflow::baselines::gpu::GpuModel;
-use butterfly_dataflow::coordinator::run_kernel;
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads::platforms;
 
 fn main() {
-    let cfg = common::cfg();
+    let sess = common::session();
     let platform = platforms::jetson_xavier_nx();
     let gpu_power = platform.power_w;
     let nx = GpuModel::new(platform);
@@ -28,7 +27,7 @@ fn main() {
     for kind in [KernelKind::Fft, KernelKind::Bpmm] {
         for points in [512usize, 1024, 4096] {
             let s = common::spec(kind, points, batch * 1024, points);
-            let ours = run_kernel(&s, &cfg).expect("sim");
+            let ours = sess.run(&s).expect("sim");
             let dense =
                 nx.dense_matmul(&s.name, s.vectors, s.d_in, s.d_out, true);
             let cuda = nx.butterfly(&s);

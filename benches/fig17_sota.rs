@@ -9,16 +9,14 @@
 #[path = "common.rs"]
 mod common;
 
-use butterfly_dataflow::arch::ArchConfig;
 use butterfly_dataflow::baselines::accel::SotaButterflyModel;
 use butterfly_dataflow::baselines::gpu::GpuModel;
-use butterfly_dataflow::coordinator::{run_kernel, ExperimentConfig};
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads::{self, platforms};
 
 fn main() {
     // §VI-H fair comparison: 128 MACs, half the DDR.
-    let cfg = ExperimentConfig { arch: ArchConfig::scaled_128(), ..Default::default() };
+    let sess = common::scaled_session();
     let sota = SotaButterflyModel::new(platforms::sota_butterfly_accel());
     let nano = GpuModel::new(platforms::jetson_nano());
 
@@ -33,7 +31,7 @@ fn main() {
         let mut sota_t = 0.0;
         let mut nano_t = 0.0;
         for k in &kernels {
-            ours_t += run_kernel(k, &cfg).expect("sim").time_s;
+            ours_t += sess.run(k).expect("sim").time_s;
             sota_t += sota.run(k).time_s;
             // Nano runs the same butterfly kernels on its CUDA cores.
             nano_t += nano.butterfly(k).time_s;

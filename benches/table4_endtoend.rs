@@ -14,14 +14,14 @@
 mod common;
 
 use butterfly_dataflow::arch::ArchConfig;
-use butterfly_dataflow::coordinator::{stream_workload, ExperimentConfig};
+use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads::{platforms, vanilla_kernels};
 
 fn main() {
-    let cfg = ExperimentConfig { arch: ArchConfig::table4(), ..Default::default() };
+    let sess = Session::builder().arch(ArchConfig::table4()).build();
     let batch = 256;
-    let ours = stream_workload(&vanilla_kernels(batch), batch, &cfg).expect("sim");
+    let ours = sess.stream(&vanilla_kernels(batch), batch).expect("sim");
 
     let mut t = Table::new(
         "Table IV: end-to-end latency and energy (1-layer vanilla transformer 1K/1K)",

@@ -12,14 +12,14 @@
 //! ```
 
 use butterfly_dataflow::baselines::gpu::GpuModel;
-use butterfly_dataflow::coordinator::{run_kernel, ExperimentConfig};
+use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::util::stats::fmt_time;
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads::{platforms, scale_name, KernelSpec};
 
 fn main() -> anyhow::Result<()> {
-    let cfg = ExperimentConfig::default();
+    let session = Session::builder().build();
     let nx = GpuModel::new(platforms::jetson_xavier_nx());
     let hidden = 1024;
 
@@ -47,8 +47,10 @@ fn main() -> anyhow::Result<()> {
             d_out: seq,
             seq,
         };
-        let rh = run_kernel(&hid_spec, &cfg)?;
-        let rs = run_kernel(&seq_spec, &cfg)?;
+        // The two FFT axes are independent kernels: fan them out.
+        let mut rr = session.run_many(&[hid_spec.clone(), seq_spec.clone()])?;
+        let rs = rr.pop().expect("seq result");
+        let rh = rr.pop().expect("hidden result");
         let ours = rh.time_s + rs.time_s;
         let cuda = nx.butterfly(&hid_spec).time_s + nx.butterfly(&seq_spec).time_s;
         let plan: Vec<usize> = rs.plan.stages.iter().map(|s| s.points).collect();

@@ -14,24 +14,31 @@
 //!    achieve, next to the paper's Table-IV metrics.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example fabnet_e2e
+//! cargo run --release --example fabnet_e2e
 //! ```
+//!
+//! The serving path (step 2) needs the prebuilt `artifacts/` directory
+//! *and* a binary compiled with the `pjrt` feature (which requires
+//! adding the `xla` crate — see Cargo.toml).  When either is missing
+//! the example reports why, skips the serving table, and still runs
+//! the simulated-ASIC section, which has no external dependencies.
 
 use std::time::Instant;
 
 use butterfly_dataflow::arch::ArchConfig;
-use butterfly_dataflow::coordinator::{stream_workload, ExperimentConfig};
+use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::runtime::{Runtime, Tensor};
 use butterfly_dataflow::util::rng::Rng;
 use butterfly_dataflow::util::stats::{fmt_time, Summary};
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads;
 
-fn main() -> anyhow::Result<()> {
+/// The functional serving path: PJRT-compiled artifact, golden
+/// validation, then a batched request stream with host latencies.
+fn serve_via_pjrt() -> anyhow::Result<()> {
     let mut rt = Runtime::open("artifacts")?;
     println!("PJRT platform: {}", rt.platform());
 
-    // --- Functional serving path (real numerics through PJRT) ---
     let name = "fnet_block_b4_s256_h256";
     let dir = rt.dir.clone();
     let model = rt.load(name)?;
@@ -67,12 +74,20 @@ fn main() -> anyhow::Result<()> {
         format!("{:.1} seq/s", (requests * batch) as f64 / wall)]);
     t.row(&["output checksum".into(), format!("{checksum:.4}")]);
     t.print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Functional serving path (real numerics through PJRT) ---
+    if let Err(e) = serve_via_pjrt() {
+        println!("skipping host serving path: {e:#}");
+    }
 
     // --- Simulated ASIC timing for the same workload class ---
-    let seq = 256;
     let sim_batch = 256;
-    let cfg = ExperimentConfig { arch: ArchConfig::scaled_128(), ..Default::default() };
-    let r = stream_workload(&workloads::fabnet_kernels(sim_batch, seq), sim_batch, &cfg)?;
+    let suite = workloads::find_suite("fabnet-256")?;
+    let session = Session::builder().arch(ArchConfig::scaled_128()).build();
+    let r = session.stream(&suite.kernels(sim_batch), sim_batch)?;
     let mut t = Table::new(
         "simulated dataflow ASIC (scaled128, FABNet-256 block, batch-256 streamed)",
         &["metric", "value"],

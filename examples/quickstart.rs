@@ -7,7 +7,7 @@
 //! ```
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
-use butterfly_dataflow::coordinator::{run_kernel, ExperimentConfig};
+use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::util::stats::{fmt_time, si};
 use butterfly_dataflow::workloads::KernelSpec;
@@ -37,8 +37,8 @@ fn main() -> anyhow::Result<()> {
         seq: 256,
     };
 
-    let cfg = ExperimentConfig { arch, ..Default::default() };
-    let r = run_kernel(&spec, &cfg)?;
+    let session = Session::builder().arch(arch).build();
+    let r = session.run(&spec)?;
 
     println!("\nkernel {}:", r.name);
     println!("  stage plan      : {:?} points",

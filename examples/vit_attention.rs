@@ -11,13 +11,13 @@
 //! ```
 
 use butterfly_dataflow::baselines::gpu::GpuModel;
-use butterfly_dataflow::coordinator::{run_kernel, ExperimentConfig};
+use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::util::stats::{fmt_time, geomean};
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads::{self, platforms};
 
 fn main() -> anyhow::Result<()> {
-    let cfg = ExperimentConfig::default();
+    let session = Session::builder().build();
     let nx = GpuModel::new(platforms::jetson_xavier_nx());
 
     let mut table = Table::new(
@@ -38,8 +38,8 @@ fn main() -> anyhow::Result<()> {
         let spec = kernels[i].clone();
         if spec.name.contains("AT-all-hidden") {
             let pair = kernels[i + 1].clone();
-            let ours_h = run_kernel(&spec, &cfg)?;
-            let ours_s = run_kernel(&pair, &cfg)?;
+            let ours_h = session.run(&spec)?;
+            let ours_s = session.run(&pair)?;
             let ours_t = ours_h.time_s + ours_s.time_s;
             let b = spec.vectors / spec.seq; // batch items
             let name = spec.name.replace("-hidden", "");
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
             i += 2;
             continue;
         }
-        let ours = run_kernel(&spec, &cfg)?;
+        let ours = session.run(&spec)?;
         // Dense original on tensor cores (what the kernel replaces).
         let rows = spec.vectors;
         let dense = nx.dense_matmul(&spec.name, rows, spec.d_in, spec.d_out, true);

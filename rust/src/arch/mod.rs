@@ -169,6 +169,13 @@ impl ArchConfig {
     pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
         cycles as f64 / self.freq_hz
     }
+
+    /// Deterministic configuration signature covering every field; two
+    /// configs with equal signatures plan, lower and simulate
+    /// identically, so the coordinator's plan cache keys on it.
+    pub fn signature(&self) -> String {
+        format!("{self:?}")
+    }
 }
 
 impl Default for ArchConfig {

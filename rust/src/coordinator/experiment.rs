@@ -1,4 +1,4 @@
-//! Kernel-level experiment runner.
+//! Kernel-level experiment configuration and results.
 //!
 //! A kernel's iteration population is usually far larger than what needs
 //! cycle-accurate treatment (batch 128 × seq 64K ⇒ millions of DFG
@@ -8,17 +8,19 @@
 //! iteration rate — the standard software-pipelining argument.  The
 //! window default (48) is over 4× the deepest pipeline in the design;
 //! `window_sensitivity` tests in `rust/tests/` verify the extrapolation.
+//!
+//! The execution engine lives in [`super::session`]: a [`Session`]
+//! plans, lowers and simulates kernels with plan caching and parallel
+//! fan-out.  The free functions here are deprecated one-shot wrappers
+//! kept for source compatibility — each call builds a throwaway session,
+//! so nothing is reused across calls.
 
 use crate::arch::{ArchConfig, UnitKind};
-use crate::dfg::stages::{plan_kernel, KernelPlan};
-use crate::dfg::microcode::lower_stage_packed;
-
-/// Packing target: keep at least this many butterfly nodes per PE per
-/// layer so fixed block overheads stay amortized.
-const TARGET_NODES_PER_PE: usize = 8;
-use crate::energy;
-use crate::sim::{simulate, SimOptions, SimStats};
+use crate::dfg::stages::KernelPlan;
+use crate::sim::SimOptions;
 use crate::workloads::KernelSpec;
+
+use super::session::Session;
 
 /// Configuration for experiment runs.
 #[derive(Debug, Clone)]
@@ -67,117 +69,33 @@ pub struct KernelResult {
     pub plan: KernelPlan,
 }
 
+impl KernelResult {
+    pub fn util_of(&self, kind: UnitKind) -> f64 {
+        self.util[kind.index()]
+    }
+}
+
 /// Run a kernel with the default balanced division.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a `coordinator::Session` instead — free functions re-plan, \
+            re-lower and re-simulate every kernel from scratch"
+)]
 pub fn run_kernel(spec: &KernelSpec, cfg: &ExperimentConfig) -> anyhow::Result<KernelResult> {
-    run_kernel_with(spec, cfg, None)
+    Session::from_config(cfg).run(spec)
 }
 
 /// Run a kernel with an explicit stage division (the Fig. 14 sweep).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a `coordinator::Session` and call `run_with` instead"
+)]
 pub fn run_kernel_with(
     spec: &KernelSpec,
     cfg: &ExperimentConfig,
     division: Option<(usize, usize)>,
 ) -> anyhow::Result<KernelResult> {
-    let arch = &cfg.arch;
-    let plan = plan_kernel(spec.kind, spec.points, spec.vectors, arch, division)?;
-    let w = arch.simd_width;
-
-    let mut total_cycles = 0.0f64;
-    let mut busy = [0.0f64; 4];
-    let mut spm_scalars = 0.0f64;
-    let mut noc_scalars = 0.0f64;
-    let mut dma_bytes = 0.0f64;
-    let mut ops_total = 0.0f64;
-
-    for stage in &plan.stages {
-        let instances = spec.vectors.saturating_mul(stage.sub_iters);
-        // Instance packing: shallow stage DFGs (few nodes per PE) pack
-        // several independent instances per iteration so block issue
-        // overheads amortize (§V-A streaming).
-        let base_npe = (stage.points / 2).div_ceil(arch.num_pes()).max(1);
-        let pack = (TARGET_NODES_PER_PE / base_npe)
-            .clamp(1, instances.div_ceil(w).max(1));
-        let iters_total = instances.div_ceil(w * pack).max(1);
-        let window = iters_total.min(cfg.window);
-        let program = lower_stage_packed(stage, arch, window, pack);
-        let stats = simulate(&program, arch, &cfg.sim);
-        let scale = iters_total as f64 / window as f64;
-        let stage_cycles = if iters_total > window {
-            stats.cycles as f64
-                + (iters_total - window) as f64 * stats.steady_cycles_per_iter()
-        } else {
-            stats.cycles as f64
-        };
-        total_cycles += stage_cycles;
-        // Busy time is a *rate*: extrapolate by the cycle ratio (the
-        // iteration ratio can drift ~1% from it and push utilization
-        // fractionally above 1.0).
-        let busy_scale = stage_cycles / stats.cycles.max(1) as f64;
-        for k in 0..4 {
-            busy[k] += stats.unit_busy[k] as f64 * busy_scale;
-        }
-        spm_scalars += stats.spm_scalars as f64 * scale;
-        noc_scalars += stats.noc_scalars as f64 * scale;
-        dma_bytes += stats.dma_bytes as f64 * scale;
-        ops_total += program.total_ops() as f64 * scale;
-    }
-
-    let num_pes = arch.num_pes() as f64;
-    let util = [
-        busy[0] / (total_cycles * num_pes),
-        busy[1] / (total_cycles * num_pes),
-        busy[2] / (total_cycles * num_pes),
-        busy[3] / (total_cycles * num_pes),
-    ];
-    // SPM accessing requirement (the Fig. 12 metric): fraction of the
-    // compute's operand traffic that the SPM has to serve.  Each compute
-    // slot touches ~2 operand scalars per lane; the multilayer DFG keeps
-    // most of those inside PEs / on the NoC, so the SPM share stays low
-    // (the paper reports ≤ 12.48%).
-    let operand_scalars = 2.0 * ops_total * arch.simd_width as f64;
-    let spm_requirement = spm_scalars / operand_scalars.max(1.0);
-    let link_cap = (arch.num_pes() * 4) as f64
-        * (arch.noc_link_bytes / arch.elem_bytes) as f64;
-    let noc_requirement = (noc_scalars / total_cycles) / link_cap;
-
-    let time_s = arch.cycles_to_seconds(1) * total_cycles;
-    let flops = spec.sparse_flops();
-    let flops_efficiency = flops / time_s / arch.peak_flops();
-
-    // Build an aggregate stats view for the energy model.
-    let agg = SimStats {
-        cycles: total_cycles as u64,
-        unit_busy: [
-            busy[0] as u64,
-            busy[1] as u64,
-            busy[2] as u64,
-            busy[3] as u64,
-        ],
-        ..Default::default()
-    };
-    let power_w = energy::effective_power_w(arch, &agg);
-    let energy_j = power_w * time_s;
-
-    Ok(KernelResult {
-        name: spec.name.clone(),
-        cycles: total_cycles,
-        time_s,
-        util,
-        spm_requirement,
-        noc_requirement,
-        flops,
-        flops_efficiency,
-        power_w,
-        energy_j,
-        dma_bytes,
-        plan,
-    })
-}
-
-impl KernelResult {
-    pub fn util_of(&self, kind: UnitKind) -> f64 {
-        self.util[kind.index()]
-    }
+    Session::from_config(cfg).run_with(spec, division)
 }
 
 #[cfg(test)]
@@ -197,10 +115,13 @@ mod tests {
         }
     }
 
+    fn session() -> Session {
+        Session::builder().build()
+    }
+
     #[test]
     fn basic_kernel_runs() {
-        let cfg = ExperimentConfig::default();
-        let r = run_kernel(&spec(KernelKind::Fft, 256, 4096), &cfg).unwrap();
+        let r = session().run(&spec(KernelKind::Fft, 256, 4096)).unwrap();
         assert!(r.cycles > 0.0);
         assert!(r.time_s > 0.0);
         assert!(r.flops_efficiency > 0.0 && r.flops_efficiency <= 1.0);
@@ -211,9 +132,9 @@ mod tests {
     fn cal_utilization_above_064_at_scale() {
         // §VI-D headline: calUnit > 64% for all butterfly kernels (large
         // batch, steady state).
-        let cfg = ExperimentConfig::default();
+        let s = session();
         for kind in [KernelKind::Fft, KernelKind::Bpmm] {
-            let r = run_kernel(&spec(kind, 256, 64 * 1024), &cfg).unwrap();
+            let r = s.run(&spec(kind, 256, 64 * 1024)).unwrap();
             assert!(
                 r.util_of(UnitKind::Cal) > 0.5,
                 "{} cal util {:.3}",
@@ -227,28 +148,41 @@ mod tests {
     fn spm_requirement_below_gpu_levels() {
         // Fig. 12: SPM accessing requirement below 12.48%... allow slack
         // but it must be far below the GPU's 40-70% L2 pressure.
-        let cfg = ExperimentConfig::default();
-        let r = run_kernel(&spec(KernelKind::Fft, 256, 64 * 1024), &cfg).unwrap();
+        let r = session().run(&spec(KernelKind::Fft, 256, 64 * 1024)).unwrap();
         assert!(r.spm_requirement < 0.13, "spm req {:.3}", r.spm_requirement);
     }
 
     #[test]
     fn extrapolation_scales_linearly() {
-        let cfg = ExperimentConfig::default();
-        let small = run_kernel(&spec(KernelKind::Bpmm, 256, 16 * 1024), &cfg).unwrap();
-        let large = run_kernel(&spec(KernelKind::Bpmm, 256, 64 * 1024), &cfg).unwrap();
+        let s = session();
+        let small = s.run(&spec(KernelKind::Bpmm, 256, 16 * 1024)).unwrap();
+        let large = s.run(&spec(KernelKind::Bpmm, 256, 64 * 1024)).unwrap();
         let ratio = large.cycles / small.cycles;
         assert!((ratio - 4.0).abs() < 0.4, "ratio {ratio}");
     }
 
     #[test]
     fn division_override_changes_plan() {
-        let cfg = ExperimentConfig::default();
+        let sess = session();
         let s = spec(KernelKind::Bpmm, 2048, 8192);
-        let a = run_kernel_with(&s, &cfg, Some((32, 64))).unwrap();
-        let b = run_kernel_with(&s, &cfg, Some((16, 128))).unwrap();
+        let a = sess.run_with(&s, Some((32, 64))).unwrap();
+        let b = sess.run_with(&s, Some((16, 128))).unwrap();
         assert_eq!(a.plan.stages[0].points, 32);
         assert_eq!(b.plan.stages[0].points, 16);
         assert_ne!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_delegate_to_session() {
+        // The compat surface must produce bit-identical results to the
+        // session path until it is removed.
+        let cfg = ExperimentConfig::default();
+        let s = spec(KernelKind::Fft, 512, 8192);
+        let legacy = run_kernel(&s, &cfg).unwrap();
+        let modern = Session::from_config(&cfg).run(&s).unwrap();
+        assert_eq!(legacy.cycles, modern.cycles);
+        assert_eq!(legacy.energy_j, modern.energy_j);
+        assert_eq!(legacy.util, modern.util);
     }
 }

@@ -1,9 +1,28 @@
 //! Experiment orchestration: kernel spec → stage plan → windowed
-//! simulation → extrapolated metrics; plus the Table-IV batch-streaming
-//! driver and aggregate helpers used by every figure bench.
+//! simulation → extrapolated metrics.
+//!
+//! The public surface is the [`Session`] API ([`session`]): a
+//! builder-configured, long-lived session that owns a plan cache (so
+//! repeated stage DFGs lower and simulate once), fans independent
+//! kernels across threads ([`Session::run_many`]), and streams batched
+//! workloads ([`Session::stream`], the Table-IV driver).  Results
+//! serialize through [`Report`] ([`report`]) for benches and CI.
+//!
+//! The historical one-shot free functions ([`run_kernel`],
+//! [`run_kernel_with`], [`stream_workload`]) are deprecated wrappers
+//! that build a throwaway session per call.
 
 pub mod experiment;
+pub mod report;
+pub mod session;
 pub mod streaming;
 
-pub use experiment::{run_kernel, run_kernel_with, ExperimentConfig, KernelResult};
-pub use streaming::{stream_workload, StreamResult};
+pub use experiment::{ExperimentConfig, KernelResult};
+pub use report::{Report, SweepRow};
+pub use session::{CacheStats, Session, SessionBuilder};
+pub use streaming::StreamResult;
+
+#[allow(deprecated)]
+pub use experiment::{run_kernel, run_kernel_with};
+#[allow(deprecated)]
+pub use streaming::stream_workload;

@@ -1,0 +1,217 @@
+//! Machine-readable experiment reports.
+//!
+//! Every CLI subcommand, bench and CI consumer used to scrape the text
+//! tables; [`Report`] is the structured alternative, serialized through
+//! [`crate::util::json`] (the offline vendor set has no serde).  Three
+//! variants cover the coordinator's result shapes:
+//!
+//! * [`Report::Kernel`] — one kernel simulation ([`KernelResult`]);
+//! * [`Report::Stream`] — a batched workload ([`StreamResult`]) plus the
+//!   session's cache activity;
+//! * [`Report::Sweep`]  — a division sweep (the Fig. 14 scenario).
+//!
+//! The JSON layout is stable: a top-level `"report"` discriminator plus
+//! flat snake_case metric keys matching the `KernelResult`/
+//! `StreamResult` field names.
+
+use crate::arch::UnitKind;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::experiment::KernelResult;
+use super::session::CacheStats;
+use super::streaming::StreamResult;
+
+/// One row of a division sweep.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub division: (usize, usize),
+    pub cycles: f64,
+    /// Utilization per unit kind (Load/Flow/Cal/Store).
+    pub util: [f64; 4],
+}
+
+/// A structured, serializable experiment report.
+#[derive(Debug, Clone)]
+pub enum Report {
+    /// One kernel on the dataflow design.
+    Kernel {
+        /// Architecture signature the result was produced under.
+        arch: String,
+        result: KernelResult,
+    },
+    /// A batched workload streamed end-to-end.
+    Stream {
+        arch: String,
+        /// Workload suite name (or an ad-hoc description).
+        workload: String,
+        cache: CacheStats,
+        result: StreamResult,
+    },
+    /// A stage-division sweep of one kernel.
+    Sweep {
+        arch: String,
+        kernel: String,
+        rows: Vec<SweepRow>,
+    },
+}
+
+impl Report {
+    /// Serialize to a JSON value.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Report::Kernel { arch, result } => obj(vec![
+                ("report", s("kernel")),
+                ("arch", s(arch)),
+                ("result", kernel_json(result)),
+            ]),
+            Report::Stream { arch, workload, cache, result } => obj(vec![
+                ("report", s("stream")),
+                ("arch", s(arch)),
+                ("workload", s(workload)),
+                ("cache", cache_json(cache)),
+                ("result", stream_json(result)),
+            ]),
+            Report::Sweep { arch, kernel, rows } => obj(vec![
+                ("report", s("sweep")),
+                ("arch", s(arch)),
+                ("kernel", s(kernel)),
+                ("rows", arr(rows.iter().map(sweep_row_json).collect())),
+            ]),
+        }
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+}
+
+/// JSON view of one [`KernelResult`].
+pub fn kernel_json(r: &KernelResult) -> Json {
+    obj(vec![
+        ("name", s(&r.name)),
+        ("cycles", num(r.cycles)),
+        ("time_s", num(r.time_s)),
+        (
+            "stages",
+            arr(r.plan.stages.iter().map(|st| num(st.points as f64)).collect()),
+        ),
+        ("util", util_json(&r.util)),
+        ("spm_requirement", num(r.spm_requirement)),
+        ("noc_requirement", num(r.noc_requirement)),
+        ("flops", num(r.flops)),
+        ("flops_efficiency", num(r.flops_efficiency)),
+        ("power_w", num(r.power_w)),
+        ("energy_j", num(r.energy_j)),
+        ("dma_bytes", num(r.dma_bytes)),
+    ])
+}
+
+/// JSON view of one [`StreamResult`].
+pub fn stream_json(r: &StreamResult) -> Json {
+    obj(vec![
+        ("batch", num(r.batch as f64)),
+        ("batch_time_s", num(r.batch_time_s)),
+        ("latency_ms", num(r.latency_ms)),
+        ("throughput", num(r.throughput)),
+        ("power_w", num(r.power_w)),
+        ("energy_eff", num(r.energy_eff)),
+        ("kernels", arr(r.kernels.iter().map(kernel_json).collect())),
+    ])
+}
+
+/// JSON view of a session's [`CacheStats`].
+pub fn cache_json(c: &CacheStats) -> Json {
+    obj(vec![
+        ("plan_hits", num(c.plan_hits as f64)),
+        ("plan_misses", num(c.plan_misses as f64)),
+        ("stage_hits", num(c.stage_hits as f64)),
+        ("stage_misses", num(c.stage_misses as f64)),
+        ("lowerings", num(c.lowerings as f64)),
+    ])
+}
+
+fn util_json(util: &[f64; 4]) -> Json {
+    obj(UnitKind::ALL
+        .iter()
+        .map(|k| (k.name(), num(util[k.index()])))
+        .collect())
+}
+
+fn sweep_row_json(row: &SweepRow) -> Json {
+    obj(vec![
+        ("division", s(&format!("{}x{}", row.division.0, row.division.1))),
+        ("cycles", num(row.cycles)),
+        ("util", util_json(&row.util)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Session;
+    use crate::dfg::graph::KernelKind;
+    use crate::util::json;
+    use crate::workloads::KernelSpec;
+
+    fn small_spec() -> KernelSpec {
+        KernelSpec {
+            name: "FFT-256".into(),
+            kind: KernelKind::Fft,
+            points: 256,
+            vectors: 2048,
+            d_in: 256,
+            d_out: 256,
+            seq: 256,
+        }
+    }
+
+    #[test]
+    fn kernel_report_roundtrips_through_parser() {
+        let session = Session::builder().build();
+        let result = session.run(&small_spec()).unwrap();
+        let report = Report::Kernel {
+            arch: session.arch_signature().to_string(),
+            result,
+        };
+        let text = report.render();
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed.req_str("report").unwrap(), "kernel");
+        let r = parsed.req("result").unwrap();
+        assert_eq!(r.req_str("name").unwrap(), "FFT-256");
+        assert!(r.req_f64("cycles").unwrap() > 0.0);
+        assert!(r.get("util").unwrap().get("Cal").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn stream_report_carries_cache_and_kernels() {
+        let session = Session::builder().build();
+        let ks = vec![small_spec(), small_spec()];
+        let result = session.stream(&ks, 4).unwrap();
+        let report = Report::Stream {
+            arch: session.arch_signature().to_string(),
+            workload: "test".into(),
+            cache: session.cache_stats(),
+            result,
+        };
+        let parsed = json::parse(&report.render()).unwrap();
+        assert_eq!(parsed.req_str("report").unwrap(), "stream");
+        let kernels = parsed.req("result").unwrap().get("kernels").unwrap();
+        assert_eq!(kernels.as_arr().unwrap().len(), 2);
+        // The duplicate spec must have hit the stage cache.
+        assert!(parsed.req("cache").unwrap().req_f64("stage_hits").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn sweep_report_rows() {
+        let report = Report::Sweep {
+            arch: "a".into(),
+            kernel: "BPMM-2048".into(),
+            rows: vec![SweepRow { division: (32, 64), cycles: 10.0, util: [0.1, 0.2, 0.8, 0.1] }],
+        };
+        let parsed = json::parse(&report.render()).unwrap();
+        let rows = parsed.req("rows").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req_str("division").unwrap(), "32x64");
+    }
+}

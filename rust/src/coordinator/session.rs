@@ -1,0 +1,578 @@
+//! Long-lived orchestration sessions: plan caching and parallel kernel
+//! execution.
+//!
+//! The paper's headline results come from streaming *many* kernels
+//! through one reconfigurable substrate (§V-A, Table IV): the vanilla
+//! transformer's two FFN BPMM layers lower to the *same* stage DFGs, and
+//! FABNet repeats its block at every depth.  A [`Session`] owns the
+//! architecture/simulation configuration plus a plan cache so that
+//! repeated stage DFGs are planned, lowered and simulated exactly once
+//! per session, and independent kernels fan out across threads via
+//! [`Session::run_many`] with deterministic, input-ordered results.
+//!
+//! ```no_run
+//! use butterfly_dataflow::coordinator::Session;
+//! use butterfly_dataflow::workloads;
+//!
+//! let session = Session::builder().build();
+//! let suite = workloads::find_suite("vanilla").unwrap();
+//! let report = session.stream(&suite.kernels(16), 16).unwrap();
+//! assert!(session.cache_stats().stage_hits > 0); // FFN-L1 == FFN-L2
+//! # let _ = report;
+//! ```
+//!
+//! The one-shot free functions (`run_kernel`, `run_kernel_with`,
+//! `stream_workload`) survive as `#[deprecated]` wrappers that build a
+//! throwaway session per call.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::arch::ArchConfig;
+use crate::dfg::graph::KernelKind;
+use crate::dfg::microcode::lower_stage_packed;
+use crate::dfg::stages::{plan_kernel, KernelPlan, StageDfg};
+use crate::energy;
+use crate::sim::{simulate, SimOptions, SimStats};
+use crate::workloads::KernelSpec;
+
+use super::experiment::{ExperimentConfig, KernelResult};
+use super::streaming::StreamResult;
+
+/// Packing target: keep at least this many butterfly nodes per PE per
+/// layer so fixed block overheads stay amortized (§V-A streaming).
+const TARGET_NODES_PER_PE: usize = 8;
+
+/// Builder for [`Session`].
+///
+/// Defaults mirror the historical `ExperimentConfig::default()`: the
+/// full 512-MAC architecture, default simulator options, a 48-iteration
+/// window, automatic (balanced) stage division and plan caching on.
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    arch: ArchConfig,
+    sim: SimOptions,
+    window: usize,
+    division: Option<(usize, usize)>,
+    caching: bool,
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        SessionBuilder {
+            arch: ArchConfig::full(),
+            sim: SimOptions::default(),
+            window: 48,
+            division: None,
+            caching: true,
+        }
+    }
+
+    /// Architecture preset the session simulates.
+    pub fn arch(mut self, arch: ArchConfig) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// Simulator options (ablation switches).
+    pub fn sim(mut self, sim: SimOptions) -> Self {
+        self.sim = sim;
+        self
+    }
+
+    /// Simulation window in DFG iterations per stage.
+    pub fn window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    /// Default stage division applied by [`Session::run`]
+    /// (`None` = balanced; per-call override via [`Session::run_with`]).
+    pub fn division(mut self, division: Option<(usize, usize)>) -> Self {
+        self.division = division;
+        self
+    }
+
+    /// Enable/disable the plan cache (on by default; the uncached mode
+    /// exists for cache-equivalence tests and memory-constrained runs).
+    pub fn plan_caching(mut self, on: bool) -> Self {
+        self.caching = on;
+        self
+    }
+
+    /// Start from an existing [`ExperimentConfig`].
+    pub fn config(mut self, cfg: &ExperimentConfig) -> Self {
+        self.arch = cfg.arch.clone();
+        self.sim = cfg.sim.clone();
+        self.window = cfg.window.max(1);
+        self
+    }
+
+    pub fn build(self) -> Session {
+        let arch_sig = format!("{}|{:?}|w{}", self.arch.signature(), self.sim, self.window);
+        Session {
+            cfg: ExperimentConfig { arch: self.arch, sim: self.sim, window: self.window },
+            division: self.division,
+            caching: self.caching,
+            cache: PlanCache {
+                arch_sig,
+                plans: Mutex::new(HashMap::new()),
+                stages: Mutex::new(HashMap::new()),
+            },
+            counters: Counters::default(),
+        }
+    }
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Key of a cached kernel plan: the stage decomposition depends only on
+/// the kernel kind, the transform length, the (optional) explicit
+/// division and the architecture — never on the vector count, which is
+/// re-attached per kernel.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    kind: KernelKind,
+    points: usize,
+    division: Option<(usize, usize)>,
+}
+
+/// Key of a cached stage measurement.  [`lower_stage_packed`] reads the
+/// stage's `{kind, points, twiddle_before, weights_from_ddr}` plus the
+/// window and pack factors; the architecture and simulator options are
+/// session-constant (pinned by [`PlanCache::arch_sig`]), so together
+/// these fields fully determine the lowered program and its simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct StageKey {
+    kind: KernelKind,
+    points: usize,
+    twiddle_before: bool,
+    weights_from_ddr: bool,
+    window: usize,
+    pack: usize,
+}
+
+/// One simulated stage measurement (shared across kernels via `Arc`).
+#[derive(Debug)]
+struct StageMeasure {
+    /// Compute slots (per lane) of the lowered window program.
+    ops: u64,
+    stats: SimStats,
+}
+
+/// A per-key fill cell: concurrent misses on one key coalesce behind
+/// the cell's lock, so every distinct key is computed exactly once even
+/// under [`Session::run_many`] parallelism.
+type Cell<T> = Arc<Mutex<Option<T>>>;
+
+type PlanCell = Cell<Arc<Vec<StageDfg>>>;
+type StageCell = Cell<Arc<StageMeasure>>;
+
+/// The session's memo of planned divisions and simulated stage windows.
+#[derive(Debug)]
+struct PlanCache {
+    /// Signature of the (arch, sim options, window) tuple every entry was
+    /// produced under; a session never mixes configurations.
+    arch_sig: String,
+    plans: Mutex<HashMap<PlanKey, PlanCell>>,
+    stages: Mutex<HashMap<StageKey, StageCell>>,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    stage_hits: AtomicU64,
+    stage_misses: AtomicU64,
+    lowerings: AtomicU64,
+}
+
+/// Snapshot of a session's cache activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Kernel plans served from / inserted into the cache.
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    /// Stage-window simulations served from / inserted into the cache.
+    pub stage_hits: u64,
+    pub stage_misses: u64,
+    /// Total `lower_stage_packed` invocations (equals `stage_misses`
+    /// when caching is on; counts every stage when off).
+    pub lowerings: u64,
+}
+
+/// A long-lived orchestration session.
+///
+/// Construct with [`Session::builder`]; all run methods take `&self`
+/// and are thread-safe, so one session can serve concurrent callers.
+#[derive(Debug)]
+pub struct Session {
+    cfg: ExperimentConfig,
+    division: Option<(usize, usize)>,
+    caching: bool,
+    cache: PlanCache,
+    counters: Counters,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// One-shot session equivalent to the deprecated free functions.
+    pub fn from_config(cfg: &ExperimentConfig) -> Session {
+        Session::builder().config(cfg).build()
+    }
+
+    /// The session's experiment configuration.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// The architecture this session simulates.
+    pub fn arch(&self) -> &ArchConfig {
+        &self.cfg.arch
+    }
+
+    /// Signature of the configuration all cache entries were produced
+    /// under (part of every cache key, by construction).
+    pub fn arch_signature(&self) -> &str {
+        &self.cache.arch_sig
+    }
+
+    /// Snapshot of the cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            plan_hits: self.counters.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.counters.plan_misses.load(Ordering::Relaxed),
+            stage_hits: self.counters.stage_hits.load(Ordering::Relaxed),
+            stage_misses: self.counters.stage_misses.load(Ordering::Relaxed),
+            lowerings: self.counters.lowerings.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run one kernel with the session's default division.
+    pub fn run(&self, spec: &KernelSpec) -> Result<KernelResult> {
+        self.run_with(spec, self.division)
+    }
+
+    /// Run one kernel with an explicit stage division (the Fig. 14
+    /// sweep path); `None` picks the balanced division.
+    pub fn run_with(
+        &self,
+        spec: &KernelSpec,
+        division: Option<(usize, usize)>,
+    ) -> Result<KernelResult> {
+        let plan = self.plan_for(spec, division)?;
+        self.execute(spec, &plan)
+    }
+
+    /// Run independent kernels across std threads and return results in
+    /// input order.  Results are bitwise-identical to sequential
+    /// [`Session::run`] calls: the simulator is deterministic and the
+    /// per-kernel arithmetic never depends on execution order.
+    pub fn run_many(&self, specs: &[KernelSpec]) -> Result<Vec<KernelResult>> {
+        if specs.len() <= 1 {
+            return specs.iter().map(|s| self.run(s)).collect();
+        }
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .min(specs.len());
+        let next = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, Result<KernelResult>)>> =
+            Mutex::new(Vec::with_capacity(specs.len()));
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let r = self.run(&specs[i]);
+                    done.lock().unwrap().push((i, r));
+                });
+            }
+        });
+        let mut slots: Vec<Option<Result<KernelResult>>> =
+            specs.iter().map(|_| None).collect();
+        for (i, r) in done.into_inner().unwrap() {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|r| r.expect("every index was claimed by a worker"))
+            .collect()
+    }
+
+    /// Stream a batched workload: run every kernel (in parallel), sum
+    /// the kernel times and report the Table-IV per-prediction metrics.
+    pub fn stream(&self, kernels: &[KernelSpec], batch: usize) -> Result<StreamResult> {
+        anyhow::ensure!(
+            batch > 0,
+            "stream batch must be >= 1 (got 0): per-prediction latency divides by it"
+        );
+        anyhow::ensure!(!kernels.is_empty(), "stream workload has no kernels");
+        let results = self.run_many(kernels)?;
+        let batch_time_s: f64 = results.iter().map(|r| r.time_s).sum();
+        let energy_j: f64 = results.iter().map(|r| r.energy_j).sum();
+        let power_w = if batch_time_s > 0.0 { energy_j / batch_time_s } else { 0.0 };
+        let latency_s = batch_time_s / batch as f64;
+        Ok(StreamResult {
+            kernels: results,
+            batch_time_s,
+            batch,
+            latency_ms: latency_s * 1e3,
+            throughput: 1.0 / latency_s,
+            power_w,
+            energy_eff: (batch as f64) / energy_j,
+        })
+    }
+
+    /// Plan (or recall) the stage decomposition of one kernel.
+    fn plan_for(
+        &self,
+        spec: &KernelSpec,
+        division: Option<(usize, usize)>,
+    ) -> Result<KernelPlan> {
+        if !self.caching {
+            return plan_kernel(spec.kind, spec.points, spec.vectors, &self.cfg.arch, division);
+        }
+        let key = PlanKey { kind: spec.kind, points: spec.points, division };
+        let cell = {
+            let mut map = self.cache.plans.lock().unwrap();
+            map.entry(key).or_default().clone()
+        };
+        // Holding the cell (not the map) while planning: concurrent
+        // misses on the same key wait for the first filler, other keys
+        // proceed in parallel.
+        let mut slot = cell.lock().unwrap();
+        if let Some(stages) = slot.as_ref() {
+            self.counters.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(KernelPlan {
+                kind: spec.kind,
+                n: spec.points,
+                stages: stages.as_ref().clone(),
+                vectors: spec.vectors,
+            });
+        }
+        self.counters.plan_misses.fetch_add(1, Ordering::Relaxed);
+        let plan =
+            plan_kernel(spec.kind, spec.points, spec.vectors, &self.cfg.arch, division)?;
+        *slot = Some(Arc::new(plan.stages.clone()));
+        Ok(plan)
+    }
+
+    /// Lower + simulate (or recall) one stage window.  Each distinct
+    /// [`StageKey`] is lowered exactly once per session, including under
+    /// [`Session::run_many`] parallelism (the per-key cell coalesces
+    /// concurrent misses).
+    fn measure_stage(&self, stage: &StageDfg, window: usize, pack: usize) -> Arc<StageMeasure> {
+        let lower = || {
+            self.counters.lowerings.fetch_add(1, Ordering::Relaxed);
+            let program = lower_stage_packed(stage, &self.cfg.arch, window, pack);
+            let stats = simulate(&program, &self.cfg.arch, &self.cfg.sim);
+            Arc::new(StageMeasure { ops: program.total_ops(), stats })
+        };
+        if !self.caching {
+            return lower();
+        }
+        let key = StageKey {
+            kind: stage.kind,
+            points: stage.points,
+            twiddle_before: stage.twiddle_before,
+            weights_from_ddr: stage.weights_from_ddr,
+            window,
+            pack,
+        };
+        let cell = {
+            let mut map = self.cache.stages.lock().unwrap();
+            map.entry(key).or_default().clone()
+        };
+        let mut slot = cell.lock().unwrap();
+        if let Some(m) = slot.as_ref() {
+            self.counters.stage_hits.fetch_add(1, Ordering::Relaxed);
+            return m.clone();
+        }
+        self.counters.stage_misses.fetch_add(1, Ordering::Relaxed);
+        let m = lower();
+        *slot = Some(m.clone());
+        m
+    }
+
+    /// The windowed-extrapolation experiment loop (see module docs in
+    /// [`super::experiment`] for the software-pipelining argument).
+    fn execute(&self, spec: &KernelSpec, plan: &KernelPlan) -> Result<KernelResult> {
+        let arch = &self.cfg.arch;
+        let w = arch.simd_width;
+
+        let mut total_cycles = 0.0f64;
+        let mut busy = [0.0f64; 4];
+        let mut spm_scalars = 0.0f64;
+        let mut noc_scalars = 0.0f64;
+        let mut dma_bytes = 0.0f64;
+        let mut ops_total = 0.0f64;
+
+        for stage in &plan.stages {
+            let instances = spec.vectors.saturating_mul(stage.sub_iters);
+            // Instance packing: shallow stage DFGs (few nodes per PE)
+            // pack several independent instances per iteration so block
+            // issue overheads amortize (§V-A streaming).
+            let base_npe = (stage.points / 2).div_ceil(arch.num_pes()).max(1);
+            let pack = (TARGET_NODES_PER_PE / base_npe)
+                .clamp(1, instances.div_ceil(w).max(1));
+            let iters_total = instances.div_ceil(w * pack).max(1);
+            let window = iters_total.min(self.cfg.window);
+            let m = self.measure_stage(stage, window, pack);
+            let stats = &m.stats;
+            let scale = iters_total as f64 / window as f64;
+            let stage_cycles = if iters_total > window {
+                stats.cycles as f64
+                    + (iters_total - window) as f64 * stats.steady_cycles_per_iter()
+            } else {
+                stats.cycles as f64
+            };
+            total_cycles += stage_cycles;
+            // Busy time is a *rate*: extrapolate by the cycle ratio (the
+            // iteration ratio can drift ~1% from it and push utilization
+            // fractionally above 1.0).
+            let busy_scale = stage_cycles / stats.cycles.max(1) as f64;
+            for k in 0..4 {
+                busy[k] += stats.unit_busy[k] as f64 * busy_scale;
+            }
+            spm_scalars += stats.spm_scalars as f64 * scale;
+            noc_scalars += stats.noc_scalars as f64 * scale;
+            dma_bytes += stats.dma_bytes as f64 * scale;
+            ops_total += m.ops as f64 * scale;
+        }
+
+        let num_pes = arch.num_pes() as f64;
+        let util = [
+            busy[0] / (total_cycles * num_pes),
+            busy[1] / (total_cycles * num_pes),
+            busy[2] / (total_cycles * num_pes),
+            busy[3] / (total_cycles * num_pes),
+        ];
+        // SPM accessing requirement (the Fig. 12 metric): fraction of the
+        // compute's operand traffic that the SPM has to serve.  Each
+        // compute slot touches ~2 operand scalars per lane; the
+        // multilayer DFG keeps most of those inside PEs / on the NoC, so
+        // the SPM share stays low (the paper reports <= 12.48%).
+        let operand_scalars = 2.0 * ops_total * arch.simd_width as f64;
+        let spm_requirement = spm_scalars / operand_scalars.max(1.0);
+        let link_cap = (arch.num_pes() * 4) as f64
+            * (arch.noc_link_bytes / arch.elem_bytes) as f64;
+        let noc_requirement = (noc_scalars / total_cycles) / link_cap;
+
+        let time_s = arch.cycles_to_seconds(1) * total_cycles;
+        let flops = spec.sparse_flops();
+        let flops_efficiency = flops / time_s / arch.peak_flops();
+
+        // Aggregate stats view for the energy model, carrying the
+        // extrapolated SPM/NoC/DMA activity alongside cycles and busy
+        // time so the effective-power estimate sees the whole run.
+        let agg = SimStats {
+            cycles: total_cycles as u64,
+            unit_busy: [
+                busy[0] as u64,
+                busy[1] as u64,
+                busy[2] as u64,
+                busy[3] as u64,
+            ],
+            spm_scalars: spm_scalars as u64,
+            noc_scalars: noc_scalars as u64,
+            dma_bytes: dma_bytes as u64,
+            ..Default::default()
+        };
+        let power_w = energy::effective_power_w(arch, &agg);
+        let energy_j = power_w * time_s;
+
+        Ok(KernelResult {
+            name: spec.name.clone(),
+            cycles: total_cycles,
+            time_s,
+            util,
+            spm_requirement,
+            noc_requirement,
+            flops,
+            flops_efficiency,
+            power_w,
+            energy_j,
+            dma_bytes,
+            plan: plan.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::graph::KernelKind;
+
+    fn spec(kind: KernelKind, points: usize, vectors: usize) -> KernelSpec {
+        KernelSpec {
+            name: format!("{}-{}", kind.name(), points),
+            kind,
+            points,
+            vectors,
+            d_in: points,
+            d_out: points,
+            seq: points,
+        }
+    }
+
+    #[test]
+    fn session_runs_and_caches() {
+        let session = Session::builder().build();
+        let s = spec(KernelKind::Fft, 1024, 8 * 1024);
+        let a = session.run(&s).unwrap();
+        let b = session.run(&s).unwrap();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.power_w, b.power_w);
+        let stats = session.cache_stats();
+        assert!(stats.plan_hits >= 1, "{stats:?}");
+        assert!(stats.stage_hits >= 1, "{stats:?}");
+    }
+
+    #[test]
+    fn uncached_session_matches_cached() {
+        let cached = Session::builder().build();
+        let raw = Session::builder().plan_caching(false).build();
+        let s = spec(KernelKind::Bpmm, 2048, 16 * 1024);
+        let a = cached.run(&s).unwrap();
+        let _ = cached.run(&s).unwrap(); // populate + hit
+        let b = raw.run(&s).unwrap();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(raw.cache_stats().stage_hits, 0);
+        assert_eq!(raw.cache_stats().plan_hits, 0);
+        assert!(raw.cache_stats().lowerings > 0);
+    }
+
+    #[test]
+    fn division_override_bypasses_default() {
+        let session = Session::builder().division(Some((32, 64))).build();
+        let s = spec(KernelKind::Bpmm, 2048, 8192);
+        let a = session.run(&s).unwrap();
+        let b = session.run_with(&s, Some((16, 128))).unwrap();
+        assert_eq!(a.plan.stages[0].points, 32);
+        assert_eq!(b.plan.stages[0].points, 16);
+        assert_ne!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn stream_rejects_degenerate_inputs() {
+        let session = Session::builder().build();
+        let ks = vec![spec(KernelKind::Fft, 256, 1024)];
+        assert!(session.stream(&ks, 0).is_err());
+        assert!(session.stream(&[], 8).is_err());
+        assert!(session.stream(&ks, 8).is_ok());
+    }
+}

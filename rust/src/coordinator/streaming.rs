@@ -1,17 +1,22 @@
-//! The Table-IV end-to-end batch-streaming driver.
+//! The Table-IV end-to-end batch-streaming result type.
 //!
 //! "Input sequences are supplied in batch-256 and streamed in one-by-one
 //! from DDR, which ensures the sufficient overlapping of DMA transfer and
 //! PE array computation.  The average execution time of the sequence
 //! batch is estimated as the latency result."  (§VI-H)
 //!
-//! We run every kernel of the workload through the simulator (DMA overlap
-//! is inside the engine), sum the kernel times, and report per-prediction
-//! latency, throughput, effective power and energy efficiency.
+//! The driver itself is [`super::Session::stream`]: every kernel of the
+//! workload runs through the simulator (DMA overlap is inside the
+//! engine, duplicate kernels hit the session's plan cache, independent
+//! kernels fan out across threads), the kernel times are summed, and the
+//! per-prediction latency, throughput, effective power and energy
+//! efficiency are reported.  [`stream_workload`] remains as a deprecated
+//! one-shot wrapper.
 
 use crate::workloads::KernelSpec;
 
-use super::experiment::{run_kernel, ExperimentConfig, KernelResult};
+use super::experiment::{ExperimentConfig, KernelResult};
+use super::session::Session;
 
 /// End-to-end streaming result.
 #[derive(Debug, Clone)]
@@ -33,28 +38,19 @@ pub struct StreamResult {
 }
 
 /// Stream a batched workload through the design.
+///
+/// Errors on `batch == 0` (the per-prediction metrics divide by it).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a `coordinator::Session` and call `stream` instead — \
+            sessions reuse lowered programs across kernels and runs"
+)]
 pub fn stream_workload(
     kernels: &[KernelSpec],
     batch: usize,
     cfg: &ExperimentConfig,
 ) -> anyhow::Result<StreamResult> {
-    let mut results = Vec::with_capacity(kernels.len());
-    for k in kernels {
-        results.push(run_kernel(k, cfg)?);
-    }
-    let batch_time_s: f64 = results.iter().map(|r| r.time_s).sum();
-    let energy_j: f64 = results.iter().map(|r| r.energy_j).sum();
-    let power_w = if batch_time_s > 0.0 { energy_j / batch_time_s } else { 0.0 };
-    let latency_s = batch_time_s / batch as f64;
-    Ok(StreamResult {
-        kernels: results,
-        batch_time_s,
-        batch,
-        latency_ms: latency_s * 1e3,
-        throughput: 1.0 / latency_s,
-        power_w,
-        energy_eff: (batch as f64) / energy_j,
-    })
+    Session::from_config(cfg).stream(kernels, batch)
 }
 
 #[cfg(test)]
@@ -63,14 +59,14 @@ mod tests {
     use crate::arch::ArchConfig;
     use crate::workloads::vanilla_kernels;
 
+    fn table4_session() -> Session {
+        Session::builder().arch(ArchConfig::table4()).build()
+    }
+
     #[test]
     fn table4_workload_streams() {
-        let cfg = ExperimentConfig {
-            arch: ArchConfig::table4(),
-            ..Default::default()
-        };
         // Use a reduced batch for test speed; metrics are per-prediction.
-        let r = stream_workload(&vanilla_kernels(16), 16, &cfg).unwrap();
+        let r = table4_session().stream(&vanilla_kernels(16), 16).unwrap();
         assert_eq!(r.kernels.len(), 4);
         assert!(r.latency_ms > 0.0);
         assert!((r.throughput - 1000.0 / r.latency_ms).abs() < 1e-6);
@@ -80,13 +76,29 @@ mod tests {
 
     #[test]
     fn throughput_is_batch_invariant_in_steady_state() {
-        let cfg = ExperimentConfig {
-            arch: ArchConfig::table4(),
-            ..Default::default()
-        };
-        let a = stream_workload(&vanilla_kernels(8), 8, &cfg).unwrap();
-        let b = stream_workload(&vanilla_kernels(32), 32, &cfg).unwrap();
+        let s = table4_session();
+        let a = s.stream(&vanilla_kernels(8), 8).unwrap();
+        let b = s.stream(&vanilla_kernels(32), 32).unwrap();
         let ratio = a.throughput / b.throughput;
         assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn zero_batch_is_a_descriptive_error() {
+        let err = table4_session()
+            .stream(&vanilla_kernels(1), 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("batch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_stream_wrapper_matches_session() {
+        let cfg = ExperimentConfig { arch: ArchConfig::table4(), ..Default::default() };
+        let legacy = stream_workload(&vanilla_kernels(8), 8, &cfg).unwrap();
+        let modern = Session::from_config(&cfg).stream(&vanilla_kernels(8), 8).unwrap();
+        assert_eq!(legacy.latency_ms, modern.latency_ms);
+        assert_eq!(legacy.power_w, modern.power_w);
     }
 }

@@ -60,16 +60,42 @@ pub fn array_power_w(arch: &ArchConfig) -> f64 {
 /// Idle fraction of dynamic power (clock tree + leakage at 12 nm).
 const IDLE_FRACTION: f64 = 0.35;
 
-/// Effective power (W) for a run with measured unit utilizations.
+/// Effective power (W) for a run with measured activity.
 ///
-/// The width-dependent term (FuncUnits) scales with Cal activity; the
-/// data movers (DataRouter, SIMD RAM) with Flow/Load/Store activity; the
-/// control plane is always on.
+/// The width-dependent term (FuncUnits) scales with Cal activity and the
+/// control plane is always on.  The data movers scale with *measured
+/// traffic* when the stats carry it: SIMD RAM with the SPM scalar rate
+/// over the banks' peak service rate, the routers with the NoC scalar
+/// rate plus the DMA stream (which crosses the DataRouter to reach the
+/// SPM banks) over the combined mover bandwidth.  Stats without traffic
+/// counters (unit-level micro-runs) fall back to Flow/Load/Store busy
+/// time as the activity proxy.
 pub fn effective_power_w(arch: &ArchConfig, stats: &SimStats) -> f64 {
     let n = arch.num_pes();
+    let cycles = stats.cycles.max(1) as f64;
     let cal = stats.utilization(UnitKind::Cal, n);
     let flow = stats.utilization(UnitKind::Flow, n);
     let ls = stats.utilization(UnitKind::Load, n) + stats.utilization(UnitKind::Store, n);
+    // SIMD RAM activity: scalars the SPM served per cycle over the peak
+    // service rate of all bank lines.
+    let ram_act = if stats.spm_scalars > 0 {
+        let spm_peak =
+            (arch.spm_banks * arch.spm_lines_per_bank * arch.spm_entry_width) as f64;
+        stats.spm_scalars as f64 / cycles / spm_peak
+    } else {
+        ls
+    };
+    // Router activity: NoC + DMA scalar traffic over the aggregate mover
+    // bandwidth (mesh links plus the DDR interface).
+    let router_act = if stats.noc_scalars > 0 || stats.dma_bytes > 0 {
+        let elem = arch.elem_bytes as f64;
+        let link_cap = (n * 4) as f64 * (arch.noc_link_bytes as f64 / elem);
+        let dma_cap = arch.ddr_bytes_per_cycle() / elem;
+        let moved = stats.noc_scalars as f64 + stats.dma_bytes as f64 / elem;
+        moved / cycles / (link_cap + dma_cap)
+    } else {
+        flow
+    };
     let total = array_power_w(arch);
     // Partition the array power by the Table III breakdown.
     let rows = table3_rows();
@@ -82,7 +108,7 @@ pub fn effective_power_w(arch: &ArchConfig, stats: &SimStats) -> f64 {
     let p_ram = total * frac("SIMD RAM");
     let p_ctrl = total * (frac("ControlUnit") + frac("InstBlocks"));
     let act = |p: f64, u: f64| p * (IDLE_FRACTION + (1.0 - IDLE_FRACTION) * u.min(1.0));
-    act(p_func, cal) + act(p_router, flow) + act(p_ram, ls) + p_ctrl
+    act(p_func, cal) + act(p_router, router_act) + act(p_ram, ram_act) + p_ctrl
 }
 
 /// Energy (J) for a run of `seconds` at the activity of `stats`.
@@ -127,6 +153,27 @@ mod tests {
         assert!(p_idle < p_busy);
         assert!(p_busy <= 6.95 * 1.3 + 1e-9);
         assert!(p_idle > 0.3 * 6.95 * 0.3);
+    }
+
+    #[test]
+    fn traffic_counters_raise_mover_power() {
+        // The SPM/NoC/DMA activity threaded through the aggregate stats
+        // must influence the estimate: same busy time, more data moved
+        // ⇒ more effective power.
+        let arch = ArchConfig::full();
+        let mut quiet = SimStats { cycles: 10_000, ..Default::default() };
+        quiet.unit_busy = [2_000, 2_000, 12_000, 2_000];
+        let mut busy_traffic = quiet.clone();
+        busy_traffic.spm_scalars = 10_000 * 256; // half the SPM peak rate
+        busy_traffic.noc_scalars = 10_000 * 500; // ~half the mover bandwidth
+        busy_traffic.dma_bytes = 10_000 * 25;
+        let p_quiet = effective_power_w(&arch, &quiet);
+        let p_traffic = effective_power_w(&arch, &busy_traffic);
+        assert!(
+            p_traffic > p_quiet,
+            "traffic ignored: {p_traffic} <= {p_quiet}"
+        );
+        assert!(p_traffic <= array_power_w(&arch) + 1e-9);
     }
 
     #[test]

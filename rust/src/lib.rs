@@ -29,9 +29,21 @@
 //! * [`workloads`] — the paper's benchmark suite (ViT, BERT, FABNet,
 //!   one-layer vanilla transformer) as kernel enumerations.
 //! * [`runtime`] — PJRT loader/executor for the AOT artifacts produced by
-//!   `python/compile/aot.py` (HLO text via the `xla` crate).
-//! * [`coordinator`] — experiment orchestration: workload → DFG plan →
-//!   simulation → report; the batch-streaming driver of Table IV.
+//!   `python/compile/aot.py` (HLO text via the `xla` crate; gated behind
+//!   the `pjrt` cargo feature, metadata-only stub otherwise).
+//! * [`coordinator`] — experiment orchestration around a long-lived
+//!   [`coordinator::Session`]: a builder-configured session (arch
+//!   preset, window, simulator options, division policy) owns a plan
+//!   cache keyed on `(kind, points, division, arch signature)`, so
+//!   repeated stage DFGs — the vanilla transformer's twin FFN layers,
+//!   FABNet's repeated blocks — plan, lower and simulate exactly once;
+//!   independent kernels fan out across threads via
+//!   [`coordinator::Session::run_many`] with deterministic input-order
+//!   results, and [`coordinator::Session::stream`] is the Table-IV
+//!   batch-streaming driver.  Results serialize to JSON through
+//!   [`coordinator::Report`] for benches and CI.  The old free
+//!   functions (`run_kernel`, `run_kernel_with`, `stream_workload`)
+//!   remain as deprecated one-shot wrappers.
 
 pub mod arch;
 pub mod baselines;

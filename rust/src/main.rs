@@ -2,19 +2,27 @@
 //!
 //! Subcommands cover interactive use of every layer: simulating kernels,
 //! sweeping divisions, printing the platform/energy tables, validating
-//! the AOT artifacts through PJRT, and streaming the Table-IV workload.
+//! the AOT artifacts through PJRT, and streaming any registered workload
+//! suite end-to-end (`run --workload <name>`).  All subcommands accept
+//! `--json` to emit a machine-readable [`Report`] (or an equivalent JSON
+//! document) instead of the text tables, so benches and CI can parse
+//! results without scraping.
+//!
+//! Simulation subcommands are backed by a [`Session`]: kernels sharing
+//! stage DFGs (division sweeps, workload suites with repeated layers)
+//! lower and simulate once, and workload kernels fan out across threads.
 
 use anyhow::Result;
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
-use butterfly_dataflow::coordinator::{
-    run_kernel_with, stream_workload, ExperimentConfig,
-};
+use butterfly_dataflow::coordinator::{Report, Session, SweepRow};
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
 use butterfly_dataflow::energy;
 use butterfly_dataflow::runtime::Runtime;
-use butterfly_dataflow::util::cli::{App, Command};
+use butterfly_dataflow::sim::SimOptions;
+use butterfly_dataflow::util::cli::{App, Command, Matches};
+use butterfly_dataflow::util::json::{arr, num, obj, s, Json};
 use butterfly_dataflow::util::stats::{fmt_time, si};
 use butterfly_dataflow::util::table::Table;
 use butterfly_dataflow::workloads::{self, platforms, KernelSpec};
@@ -38,31 +46,54 @@ fn app() -> App {
                 .opt("division", "auto", "stage division RxC, e.g. 64x32, or 'auto'")
                 .opt("arch", "full", "architecture preset: full | scaled128")
                 .flag("no-multiline-spm", "ablation: single-line SPM")
-                .flag("fifo", "ablation: FIFO block scheduling"),
+                .flag("fifo", "ablation: FIFO block scheduling")
+                .flag("json", "emit a machine-readable report"),
         )
         .command(
             Command::new("sweep-divisions", "Fig. 14 sweep: CalUnit utilization per division")
                 .opt("kind", "bpmm", "kernel kind: fft | bpmm")
                 .opt("points", "4096", "transform length")
-                .opt("vectors", "8192", "independent vectors"),
+                .opt("vectors", "8192", "independent vectors")
+                .flag("json", "emit a machine-readable report"),
         )
-        .command(Command::new("platforms", "print the Table I platform comparison"))
-        .command(Command::new("energy-model", "print the Table III power/area model"))
+        .command(
+            Command::new("run", "stream a registered workload suite end-to-end")
+                .req_opt("workload", "suite name (see the 'workloads' subcommand)")
+                .opt("batch", "0", "streamed batch size (0 = suite default)")
+                .opt("arch", "scaled128", "architecture preset: full | scaled128")
+                .opt("window", "48", "simulation window (DFG iterations)")
+                .flag("json", "emit a machine-readable report"),
+        )
+        .command(
+            Command::new("workloads", "list the registered workload suites")
+                .flag("json", "emit a machine-readable report"),
+        )
+        .command(
+            Command::new("platforms", "print the Table I platform comparison")
+                .flag("json", "emit a machine-readable report"),
+        )
+        .command(
+            Command::new("energy-model", "print the Table III power/area model")
+                .flag("json", "emit a machine-readable report"),
+        )
         .command(
             Command::new("validate", "run every AOT artifact through PJRT against goldens")
-                .opt("artifacts", "artifacts", "artifact directory"),
+                .opt("artifacts", "artifacts", "artifact directory")
+                .flag("json", "emit a machine-readable report"),
         )
         .command(
             Command::new("stream", "Table IV end-to-end vanilla-transformer streaming")
                 .opt("batch", "256", "streamed batch size")
-                .opt("arch", "scaled128", "architecture preset: full | scaled128"),
+                .opt("arch", "scaled128", "architecture preset: full | scaled128")
+                .flag("json", "emit a machine-readable report"),
         )
         .command(
             Command::new("gpu-model", "run the Jetson GPU baseline on a butterfly kernel")
                 .opt("kind", "fft", "kernel kind: fft | bpmm")
                 .opt("points", "1024", "transform length")
                 .opt("vectors", "8192", "independent vectors")
-                .opt("platform", "nx", "gpu platform: nx | nano"),
+                .opt("platform", "nx", "gpu platform: nx | nano")
+                .flag("json", "emit a machine-readable report"),
         )
 }
 
@@ -92,215 +123,430 @@ fn parse_division(s: &str) -> Result<Option<(usize, usize)>> {
     Ok(Some((r.parse()?, c.parse()?)))
 }
 
+fn point_spec(kind: KernelKind, points: usize, vectors: usize) -> KernelSpec {
+    KernelSpec {
+        name: format!("{}-{}", kind.name(), points),
+        kind,
+        points,
+        vectors,
+        d_in: points,
+        d_out: points,
+        seq: points,
+    }
+}
+
 fn run(args: &[String]) -> Result<()> {
     let app = app();
     let (cmd, m) = app.parse(args)?;
     match cmd.as_str() {
-        "simulate" => {
-            let kind = parse_kind(m.get("kind"))?;
-            let points = m.get_usize("points")?;
-            let vectors = m.get_usize("vectors")?;
-            let spec = KernelSpec {
-                name: format!("{}-{}", kind.name(), points),
-                kind,
-                points,
-                vectors,
-                d_in: points,
-                d_out: points,
-                seq: points,
-            };
-            let cfg = ExperimentConfig {
-                arch: parse_arch(m.get("arch"))?,
-                window: m.get_usize("window")?,
-                sim: butterfly_dataflow::sim::SimOptions {
-                    no_multiline_spm: m.flag("no-multiline-spm"),
-                    fifo_scheduling: m.flag("fifo"),
-                },
-            };
-            let r = run_kernel_with(&spec, &cfg, parse_division(m.get("division"))?)?;
-            let mut t = Table::new(
-                &format!("simulate {} ({} vectors)", r.name, vectors),
-                &["metric", "value"],
-            );
-            t.row(&["cycles".into(), format!("{:.0}", r.cycles)]);
-            t.row(&["time".into(), fmt_time(r.time_s)]);
-            t.row(&["stages".into(), format!("{:?}",
-                r.plan.stages.iter().map(|s| s.points).collect::<Vec<_>>())]);
-            for k in UnitKind::ALL {
-                t.row(&[format!("util.{}", k.name()), format!("{:.1}%", 100.0 * r.util_of(k))]);
-            }
-            t.row(&["spm requirement".into(), format!("{:.2}%", 100.0 * r.spm_requirement)]);
-            t.row(&["flops".into(), si(r.flops)]);
-            t.row(&["flops efficiency".into(), format!("{:.1}%", 100.0 * r.flops_efficiency)]);
-            t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
-            t.row(&["energy".into(), format!("{:.4} J", r.energy_j)]);
-            t.row(&["ddr traffic".into(), format!("{}B", si(r.dma_bytes))]);
-            t.print();
-        }
-        "sweep-divisions" => {
-            let kind = parse_kind(m.get("kind"))?;
-            let points = m.get_usize("points")?;
-            let vectors = m.get_usize("vectors")?;
-            let cfg = ExperimentConfig::default();
-            let cap = match kind {
-                KernelKind::Fft => cfg.arch.max_fft_points,
-                KernelKind::Bpmm => cfg.arch.max_bpmm_points,
-            };
-            let mut t = Table::new(
-                &format!("Fig.14 division sweep: {} {}", kind.name(), points),
-                &["division", "cycles", "cal util", "load util", "flow util"],
-            );
-            for (r, c) in enumerate_divisions(points, 16, cap) {
-                let spec = KernelSpec {
-                    name: format!("{}-{points}-{r}x{c}", kind.name()),
-                    kind,
-                    points,
-                    vectors,
-                    d_in: points,
-                    d_out: points,
-                    seq: points,
-                };
-                let res = run_kernel_with(&spec, &cfg, Some((r, c)))?;
-                t.row(&[
-                    format!("{r}x{c}"),
-                    format!("{:.0}", res.cycles),
-                    format!("{:.2}%", 100.0 * res.util_of(UnitKind::Cal)),
-                    format!("{:.2}%", 100.0 * res.util_of(UnitKind::Load)),
-                    format!("{:.2}%", 100.0 * res.util_of(UnitKind::Flow)),
-                ]);
-            }
-            t.print();
-        }
-        "platforms" => {
-            let mut t = Table::new(
-                "Table I: platform comparison",
-                &["platform", "freq", "peak fp16", "bandwidth", "tech", "power"],
-            );
-            let ours = ArchConfig::full();
-            for p in [
-                platforms::jetson_nano(),
-                platforms::sota_butterfly_accel(),
-                platforms::jetson_xavier_nx(),
-            ] {
-                t.row(&[
-                    p.name.to_string(),
-                    format!("{:.0} MHz", p.freq_hz / 1e6),
-                    format!("{}FLOPS", si(p.peak_flops)),
-                    format!("{}B/s", si(p.bandwidth)),
-                    format!("{} nm", p.technology_nm),
-                    format!("{:.2} W", p.power_w),
-                ]);
-            }
-            t.row(&[
-                "Multilayer Dataflow (ours)".into(),
-                format!("{:.0} MHz", ours.freq_hz / 1e6),
-                format!("{}FLOPS", si(ours.peak_flops())),
-                format!("{}B/s", si(ours.ddr_bw())),
-                "12 nm".into(),
-                format!("{:.2} W", energy::array_power_w(&ours)),
-            ]);
-            t.print();
-        }
-        "energy-model" => {
-            let mut t = Table::new(
-                "Table III: synthesized area and power of PE unit",
-                &["unit", "area mm^2", "active mW", "share"],
-            );
-            let total = energy::pe_active_mw();
-            for r in energy::table3_rows() {
-                t.row(&[
-                    r.name.to_string(),
-                    format!("{:.3}", r.area_mm2),
-                    format!("{:.2}", r.active_mw),
-                    format!("{:.2}%", 100.0 * r.active_mw / total),
-                ]);
-            }
-            t.row(&[
-                "Total (single PE)".into(),
-                "0.985".into(),
-                format!("{total:.2}"),
-                "100%".into(),
-            ]);
-            t.print();
-            println!(
-                "array power: full {:.2} W, scaled128 {:.2} W",
-                energy::array_power_w(&ArchConfig::full()),
-                energy::array_power_w(&ArchConfig::scaled_128()),
-            );
-        }
-        "validate" => {
-            let mut rt = Runtime::open(m.get("artifacts"))?;
-            println!("PJRT platform: {}", rt.platform());
-            let names = rt.artifact_names();
-            let mut t = Table::new(
-                "artifact validation (PJRT vs python goldens)",
-                &["artifact", "input", "output", "max |err|", "status"],
-            );
-            let dir = rt.dir.clone();
-            for name in names {
-                let model = rt.load(&name)?;
-                let err = model.validate_golden(&dir)?;
-                let ok = err < 1e-3;
-                t.row(&[
-                    name.clone(),
-                    format!("{:?}", model.meta.input_shape),
-                    format!("{:?}", model.meta.output_shape),
-                    format!("{err:.2e}"),
-                    if ok { "OK" } else { "FAIL" }.to_string(),
-                ]);
-                anyhow::ensure!(ok, "artifact {name} exceeded tolerance: {err}");
-            }
-            t.print();
-        }
-        "stream" => {
-            let batch = m.get_usize("batch")?;
-            let cfg = ExperimentConfig {
-                arch: parse_arch(m.get("arch"))?,
-                ..Default::default()
-            };
-            let r = stream_workload(&workloads::vanilla_kernels(batch), batch, &cfg)?;
-            let mut t = Table::new(
-                "Table IV (our side): 1-layer vanilla transformer, batch streamed",
-                &["metric", "value"],
-            );
-            t.row(&["batch".into(), format!("{batch}")]);
-            t.row(&["batch time".into(), fmt_time(r.batch_time_s)]);
-            t.row(&["latency".into(), format!("{:.2} ms", r.latency_ms)]);
-            t.row(&["throughput".into(), format!("{:.1} pred/s", r.throughput)]);
-            t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
-            t.row(&["energy eff.".into(), format!("{:.1} pred/J", r.energy_eff)]);
-            t.print();
-        }
-        "gpu-model" => {
-            let kind = parse_kind(m.get("kind"))?;
-            let points = m.get_usize("points")?;
-            let vectors = m.get_usize("vectors")?;
-            let platform = match m.get("platform") {
-                "nx" => platforms::jetson_xavier_nx(),
-                "nano" => platforms::jetson_nano(),
-                other => anyhow::bail!("unknown platform '{other}'"),
-            };
-            let gpu = butterfly_dataflow::baselines::gpu::GpuModel::new(platform);
-            let spec = KernelSpec {
-                name: format!("{}-{}", kind.name(), points),
-                kind,
-                points,
-                vectors,
-                d_in: points,
-                d_out: points,
-                seq: points,
-            };
-            let r = gpu.butterfly(&spec);
-            let mut t = Table::new(&format!("GPU model: {}", r.name), &["metric", "value"]);
-            t.row(&["time".into(), fmt_time(r.time_s)]);
-            t.row(&["L1 hit".into(), format!("{:.1}%", 100.0 * r.l1_hit)]);
-            t.row(&["L2 hit".into(), format!("{:.1}%", 100.0 * r.l2_hit)]);
-            t.row(&["L1 requirement".into(), format!("{:.1}%", 100.0 * r.l1_req)]);
-            t.row(&["L2 requirement".into(), format!("{:.1}%", 100.0 * r.l2_req)]);
-            t.row(&["DRAM traffic".into(), format!("{}B", si(r.dram_bytes))]);
-            t.print();
-        }
+        "simulate" => cmd_simulate(&m),
+        "sweep-divisions" => cmd_sweep(&m),
+        "run" => cmd_run(&m),
+        "workloads" => cmd_workloads(&m),
+        "platforms" => cmd_platforms(&m),
+        "energy-model" => cmd_energy_model(&m),
+        "validate" => cmd_validate(&m),
+        "stream" => cmd_stream(&m),
+        "gpu-model" => cmd_gpu_model(&m),
         other => anyhow::bail!("unhandled command {other}"),
     }
+}
+
+fn cmd_simulate(m: &Matches) -> Result<()> {
+    let kind = parse_kind(m.get("kind"))?;
+    let points = m.get_usize("points")?;
+    let vectors = m.get_usize("vectors")?;
+    let spec = point_spec(kind, points, vectors);
+    let session = Session::builder()
+        .arch(parse_arch(m.get("arch"))?)
+        .window(m.get_usize("window")?)
+        .sim(SimOptions {
+            no_multiline_spm: m.flag("no-multiline-spm"),
+            fifo_scheduling: m.flag("fifo"),
+        })
+        .build();
+    let r = session.run_with(&spec, parse_division(m.get("division"))?)?;
+    if m.flag("json") {
+        let report = Report::Kernel {
+            arch: session.arch_signature().to_string(),
+            result: r,
+        };
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("simulate {} ({} vectors)", r.name, vectors),
+        &["metric", "value"],
+    );
+    t.row(&["cycles".into(), format!("{:.0}", r.cycles)]);
+    t.row(&["time".into(), fmt_time(r.time_s)]);
+    t.row(&["stages".into(), format!("{:?}",
+        r.plan.stages.iter().map(|s| s.points).collect::<Vec<_>>())]);
+    for k in UnitKind::ALL {
+        t.row(&[format!("util.{}", k.name()), format!("{:.1}%", 100.0 * r.util_of(k))]);
+    }
+    t.row(&["spm requirement".into(), format!("{:.2}%", 100.0 * r.spm_requirement)]);
+    t.row(&["flops".into(), si(r.flops)]);
+    t.row(&["flops efficiency".into(), format!("{:.1}%", 100.0 * r.flops_efficiency)]);
+    t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
+    t.row(&["energy".into(), format!("{:.4} J", r.energy_j)]);
+    t.row(&["ddr traffic".into(), format!("{}B", si(r.dma_bytes))]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_sweep(m: &Matches) -> Result<()> {
+    let kind = parse_kind(m.get("kind"))?;
+    let points = m.get_usize("points")?;
+    let vectors = m.get_usize("vectors")?;
+    let session = Session::builder().build();
+    let cap = match kind {
+        KernelKind::Fft => session.arch().max_fft_points,
+        KernelKind::Bpmm => session.arch().max_bpmm_points,
+    };
+    let mut rows = Vec::new();
+    for (r, c) in enumerate_divisions(points, 16, cap) {
+        let spec = KernelSpec {
+            name: format!("{}-{points}-{r}x{c}", kind.name()),
+            ..point_spec(kind, points, vectors)
+        };
+        let res = session.run_with(&spec, Some((r, c)))?;
+        rows.push(SweepRow { division: (r, c), cycles: res.cycles, util: res.util });
+    }
+    if m.flag("json") {
+        let report = Report::Sweep {
+            arch: session.arch_signature().to_string(),
+            kernel: format!("{}-{points}", kind.name()),
+            rows,
+        };
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("Fig.14 division sweep: {} {}", kind.name(), points),
+        &["division", "cycles", "cal util", "load util", "flow util"],
+    );
+    for row in &rows {
+        t.row(&[
+            format!("{}x{}", row.division.0, row.division.1),
+            format!("{:.0}", row.cycles),
+            format!("{:.2}%", 100.0 * row.util[UnitKind::Cal.index()]),
+            format!("{:.2}%", 100.0 * row.util[UnitKind::Load.index()]),
+            format!("{:.2}%", 100.0 * row.util[UnitKind::Flow.index()]),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_run(m: &Matches) -> Result<()> {
+    let suite = workloads::find_suite(m.get("workload"))?;
+    let batch = m.get_usize("batch")?;
+    let batch = if batch == 0 { suite.default_batch } else { batch };
+    let session = Session::builder()
+        .arch(parse_arch(m.get("arch"))?)
+        .window(m.get_usize("window")?)
+        .build();
+    let r = session.stream(&suite.kernels(batch), batch)?;
+    let cache = session.cache_stats();
+    if m.flag("json") {
+        let report = Report::Stream {
+            arch: session.arch_signature().to_string(),
+            workload: suite.name.to_string(),
+            cache,
+            result: r,
+        };
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("workload {} (batch {batch}, {} kernels)", suite.name, r.kernels.len()),
+        &["kernel", "time", "cal util", "power W"],
+    );
+    for k in &r.kernels {
+        t.row(&[
+            k.name.clone(),
+            fmt_time(k.time_s),
+            format!("{:.1}%", 100.0 * k.util_of(UnitKind::Cal)),
+            format!("{:.2}", k.power_w),
+        ]);
+    }
+    t.print();
+    let mut t = Table::new("end-to-end", &["metric", "value"]);
+    t.row(&["batch time".into(), fmt_time(r.batch_time_s)]);
+    t.row(&["latency".into(), format!("{:.3} ms", r.latency_ms)]);
+    t.row(&["throughput".into(), format!("{:.1} pred/s", r.throughput)]);
+    t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
+    t.row(&["energy eff.".into(), format!("{:.1} pred/J", r.energy_eff)]);
+    t.print();
+    println!(
+        "plan cache: {} lowerings for {} kernels ({} stage hits, {} plan hits)",
+        cache.lowerings,
+        r.kernels.len(),
+        cache.stage_hits,
+        cache.plan_hits
+    );
+    Ok(())
+}
+
+fn cmd_workloads(m: &Matches) -> Result<()> {
+    if m.flag("json") {
+        let items = workloads::SUITES
+            .iter()
+            .map(|w| {
+                obj(vec![
+                    ("name", s(w.name)),
+                    ("family", s(w.family.name())),
+                    ("seq", num(w.seq as f64)),
+                    ("default_batch", num(w.default_batch as f64)),
+                    ("kernels", num(w.default_kernels().len() as f64)),
+                ])
+            })
+            .collect();
+        let report = obj(vec![("report", s("workloads")), ("suites", arr(items))]);
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        "registered workload suites",
+        &["name", "family", "seq", "default batch", "kernels"],
+    );
+    for w in workloads::SUITES {
+        t.row(&[
+            w.name.to_string(),
+            w.family.name().to_string(),
+            format!("{}", w.seq),
+            format!("{}", w.default_batch),
+            format!("{}", w.default_kernels().len()),
+        ]);
+    }
+    t.print();
+    println!("run one with: bfdf run --workload <name>");
+    Ok(())
+}
+
+fn cmd_platforms(m: &Matches) -> Result<()> {
+    let ours = ArchConfig::full();
+    let rows = [
+        platforms::jetson_nano(),
+        platforms::sota_butterfly_accel(),
+        platforms::jetson_xavier_nx(),
+    ];
+    if m.flag("json") {
+        let mut items: Vec<Json> = rows
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("platform", s(p.name)),
+                    ("freq_hz", num(p.freq_hz)),
+                    ("peak_flops", num(p.peak_flops)),
+                    ("bandwidth", num(p.bandwidth)),
+                    ("technology_nm", num(p.technology_nm as f64)),
+                    ("power_w", num(p.power_w)),
+                ])
+            })
+            .collect();
+        items.push(obj(vec![
+            ("platform", s("Multilayer Dataflow (ours)")),
+            ("freq_hz", num(ours.freq_hz)),
+            ("peak_flops", num(ours.peak_flops())),
+            ("bandwidth", num(ours.ddr_bw())),
+            ("technology_nm", num(12.0)),
+            ("power_w", num(energy::array_power_w(&ours))),
+        ]));
+        let report = obj(vec![("report", s("platforms")), ("platforms", arr(items))]);
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        "Table I: platform comparison",
+        &["platform", "freq", "peak fp16", "bandwidth", "tech", "power"],
+    );
+    for p in rows {
+        t.row(&[
+            p.name.to_string(),
+            format!("{:.0} MHz", p.freq_hz / 1e6),
+            format!("{}FLOPS", si(p.peak_flops)),
+            format!("{}B/s", si(p.bandwidth)),
+            format!("{} nm", p.technology_nm),
+            format!("{:.2} W", p.power_w),
+        ]);
+    }
+    t.row(&[
+        "Multilayer Dataflow (ours)".into(),
+        format!("{:.0} MHz", ours.freq_hz / 1e6),
+        format!("{}FLOPS", si(ours.peak_flops())),
+        format!("{}B/s", si(ours.ddr_bw())),
+        "12 nm".into(),
+        format!("{:.2} W", energy::array_power_w(&ours)),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_energy_model(m: &Matches) -> Result<()> {
+    let total = energy::pe_active_mw();
+    if m.flag("json") {
+        let units: Vec<Json> = energy::table3_rows()
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("unit", s(r.name)),
+                    ("area_mm2", num(r.area_mm2)),
+                    ("active_mw", num(r.active_mw)),
+                ])
+            })
+            .collect();
+        let report = obj(vec![
+            ("report", s("energy-model")),
+            ("units", arr(units)),
+            ("pe_active_mw", num(total)),
+            ("array_power_w_full", num(energy::array_power_w(&ArchConfig::full()))),
+            ("array_power_w_scaled128", num(energy::array_power_w(&ArchConfig::scaled_128()))),
+        ]);
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        "Table III: synthesized area and power of PE unit",
+        &["unit", "area mm^2", "active mW", "share"],
+    );
+    for r in energy::table3_rows() {
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.3}", r.area_mm2),
+            format!("{:.2}", r.active_mw),
+            format!("{:.2}%", 100.0 * r.active_mw / total),
+        ]);
+    }
+    t.row(&[
+        "Total (single PE)".into(),
+        "0.985".into(),
+        format!("{total:.2}"),
+        "100%".into(),
+    ]);
+    t.print();
+    println!(
+        "array power: full {:.2} W, scaled128 {:.2} W",
+        energy::array_power_w(&ArchConfig::full()),
+        energy::array_power_w(&ArchConfig::scaled_128()),
+    );
+    Ok(())
+}
+
+fn cmd_validate(m: &Matches) -> Result<()> {
+    let mut rt = Runtime::open(m.get("artifacts"))?;
+    let names = rt.artifact_names();
+    let json = m.flag("json");
+    if !json {
+        println!("PJRT platform: {}", rt.platform());
+    }
+    let mut t = Table::new(
+        "artifact validation (PJRT vs python goldens)",
+        &["artifact", "input", "output", "max |err|", "status"],
+    );
+    let mut items: Vec<Json> = Vec::new();
+    let mut failed: Option<String> = None;
+    let dir = rt.dir.clone();
+    let shape_json = |shape: &[usize]| arr(shape.iter().map(|&d| num(d as f64)).collect());
+    for name in names {
+        let model = rt.load(&name)?;
+        let err = model.validate_golden(&dir)?;
+        let ok = err < 1e-3;
+        if !ok && failed.is_none() {
+            failed = Some(format!("artifact {name} exceeded tolerance: {err}"));
+        }
+        if json {
+            items.push(obj(vec![
+                ("artifact", s(&name)),
+                ("input_shape", shape_json(&model.meta.input_shape)),
+                ("output_shape", shape_json(&model.meta.output_shape)),
+                ("max_rel_err", num(err as f64)),
+                ("ok", Json::Bool(ok)),
+            ]));
+        } else {
+            t.row(&[
+                name.clone(),
+                format!("{:?}", model.meta.input_shape),
+                format!("{:?}", model.meta.output_shape),
+                format!("{err:.2e}"),
+                if ok { "OK" } else { "FAIL" }.to_string(),
+            ]);
+        }
+    }
+    if json {
+        let report = obj(vec![("report", s("validate")), ("artifacts", arr(items))]);
+        println!("{}", report.render());
+    } else {
+        t.print();
+    }
+    if let Some(msg) = failed {
+        anyhow::bail!(msg);
+    }
+    Ok(())
+}
+
+fn cmd_stream(m: &Matches) -> Result<()> {
+    let batch = m.get_usize("batch")?;
+    let session = Session::builder().arch(parse_arch(m.get("arch"))?).build();
+    let r = session.stream(&workloads::vanilla_kernels(batch), batch)?;
+    if m.flag("json") {
+        let report = Report::Stream {
+            arch: session.arch_signature().to_string(),
+            workload: "vanilla".to_string(),
+            cache: session.cache_stats(),
+            result: r,
+        };
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        "Table IV (our side): 1-layer vanilla transformer, batch streamed",
+        &["metric", "value"],
+    );
+    t.row(&["batch".into(), format!("{batch}")]);
+    t.row(&["batch time".into(), fmt_time(r.batch_time_s)]);
+    t.row(&["latency".into(), format!("{:.2} ms", r.latency_ms)]);
+    t.row(&["throughput".into(), format!("{:.1} pred/s", r.throughput)]);
+    t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
+    t.row(&["energy eff.".into(), format!("{:.1} pred/J", r.energy_eff)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_gpu_model(m: &Matches) -> Result<()> {
+    let kind = parse_kind(m.get("kind"))?;
+    let points = m.get_usize("points")?;
+    let vectors = m.get_usize("vectors")?;
+    let platform = match m.get("platform") {
+        "nx" => platforms::jetson_xavier_nx(),
+        "nano" => platforms::jetson_nano(),
+        other => anyhow::bail!("unknown platform '{other}'"),
+    };
+    let gpu = butterfly_dataflow::baselines::gpu::GpuModel::new(platform);
+    let spec = point_spec(kind, points, vectors);
+    let r = gpu.butterfly(&spec);
+    if m.flag("json") {
+        let report = obj(vec![
+            ("report", s("gpu-model")),
+            ("name", s(&r.name)),
+            ("time_s", num(r.time_s)),
+            ("l1_hit", num(r.l1_hit)),
+            ("l2_hit", num(r.l2_hit)),
+            ("l1_requirement", num(r.l1_req)),
+            ("l2_requirement", num(r.l2_req)),
+            ("dram_bytes", num(r.dram_bytes)),
+        ]);
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new(&format!("GPU model: {}", r.name), &["metric", "value"]);
+    t.row(&["time".into(), fmt_time(r.time_s)]);
+    t.row(&["L1 hit".into(), format!("{:.1}%", 100.0 * r.l1_hit)]);
+    t.row(&["L2 hit".into(), format!("{:.1}%", 100.0 * r.l2_hit)]);
+    t.row(&["L1 requirement".into(), format!("{:.1}%", 100.0 * r.l1_req)]);
+    t.row(&["L2 requirement".into(), format!("{:.1}%", 100.0 * r.l2_req)]);
+    t.row(&["DRAM traffic".into(), format!("{}B", si(r.dram_bytes))]);
+    t.print();
     Ok(())
 }

@@ -5,13 +5,19 @@
 //! jax ≥ 0.5 carry 64-bit ids it rejects).  This module loads the text,
 //! compiles it once on the PJRT CPU client, caches the executable, and
 //! runs it from the Rust hot path — Python never executes at runtime.
+//!
+//! The PJRT executor needs the `xla` crate, which is not part of the
+//! offline vendor set, so it is gated behind the `pjrt` cargo feature
+//! (enable it *and* add the `xla` dependency to Cargo.toml to use it).
+//! Without the feature, manifest/metadata loading and the [`Tensor`]
+//! utilities still work; [`Runtime::load`] returns a descriptive error.
 
 pub mod tensor;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::{self, Json};
 
@@ -47,17 +53,36 @@ impl ArtifactMeta {
     }
 }
 
+/// Read and parse an artifact directory's `manifest.json`.
+fn read_manifest(dir: &Path) -> Result<HashMap<String, ArtifactMeta>> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+    let parsed = json::parse(&text)?;
+    let mut cache = HashMap::new();
+    for item in parsed
+        .as_arr()
+        .ok_or_else(|| anyhow!("manifest is not an array"))?
+    {
+        let meta = ArtifactMeta::from_json(item)?;
+        cache.insert(meta.name.clone(), meta);
+    }
+    Ok(cache)
+}
+
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct LoadedModel {
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedModel {
     /// Execute on one input tensor; returns the output tensor.
     pub fn run(&self, input: &Tensor) -> Result<Tensor> {
         if input.shape != self.meta.input_shape {
-            bail!(
+            anyhow::bail!(
                 "input shape {:?} != artifact '{}' expects {:?}",
                 input.shape,
                 self.meta.name,
@@ -85,7 +110,7 @@ impl LoadedModel {
         let want = tensor::read_f32_tensor(&dir.join(format!("{}.out.f32t", self.meta.name)))?;
         let got = self.run(&input)?;
         if got.shape != want.shape {
-            bail!("golden shape mismatch: {:?} vs {:?}", got.shape, want.shape);
+            anyhow::bail!("golden shape mismatch: {:?} vs {:?}", got.shape, want.shape);
         }
         let max_err = got.max_abs_diff(&want);
         let rms = (want.l2() / (want.len() as f64).sqrt()).max(1e-30) as f32;
@@ -94,6 +119,7 @@ impl LoadedModel {
 }
 
 /// Artifact directory: PJRT client + executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub dir: PathBuf,
     client: xla::PjRtClient,
@@ -101,22 +127,12 @@ pub struct Runtime {
     exes: HashMap<String, LoadedModel>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open an artifact directory (reads `manifest.json`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
-        let parsed = json::parse(&text)?;
-        let mut cache = HashMap::new();
-        for item in parsed
-            .as_arr()
-            .ok_or_else(|| anyhow!("manifest is not an array"))?
-        {
-            let meta = ArtifactMeta::from_json(item)?;
-            cache.insert(meta.name.clone(), meta);
-        }
+        let cache = read_manifest(&dir)?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Runtime { dir, client, cache, exes: HashMap::new() })
     }
@@ -156,4 +172,73 @@ impl Runtime {
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
+}
+
+/// Stub of the compiled artifact handle (built without the `pjrt`
+/// feature, which needs the `xla` crate): metadata is available, but
+/// execution returns a descriptive error.
+#[cfg(not(feature = "pjrt"))]
+pub struct LoadedModel {
+    pub meta: ArtifactMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LoadedModel {
+    pub fn run(&self, _input: &Tensor) -> Result<Tensor> {
+        Err(no_pjrt_error(&self.meta.name))
+    }
+
+    pub fn validate_golden(&self, _dir: &Path) -> Result<f32> {
+        Err(no_pjrt_error(&self.meta.name))
+    }
+}
+
+/// Artifact directory: manifest metadata only (no PJRT backend).
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub dir: PathBuf,
+    cache: HashMap<String, ArtifactMeta>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Open an artifact directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let cache = read_manifest(&dir)?;
+        Ok(Runtime { dir, cache })
+    }
+
+    /// Names of available artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.cache.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.cache.get(name)
+    }
+
+    /// Always errors: executing artifacts needs the PJRT backend.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        let _ = self
+            .cache
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        Err(no_pjrt_error(name))
+    }
+
+    /// Platform name of the PJRT client.
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn no_pjrt_error(name: &str) -> anyhow::Error {
+    anyhow!(
+        "cannot execute artifact '{name}': this build has no PJRT backend \
+         (enable the `pjrt` cargo feature and add the `xla` crate dependency)"
+    )
 }

@@ -87,7 +87,13 @@ impl ModelFamily {
 /// ViT kernels at the paper's scales (Fig. 15a: seq 256, hidden 768-ish;
 /// we use the power-of-two 1024/256/512 the butterfly requires).
 pub fn vit_kernels(batch: usize) -> Vec<KernelSpec> {
-    let seq = 256;
+    vit_kernels_seq(batch, 256)
+}
+
+/// ViT kernels at an explicit (power-of-two) sequence length — the
+/// registry entry's `seq` drives this, so suite metadata and kernels
+/// cannot drift apart.
+pub fn vit_kernels_seq(batch: usize, seq: usize) -> Vec<KernelSpec> {
     let hidden = 512;
     let mut v = Vec::new();
     // AT-to_qkv: three hidden→hidden BPMM projections folded into one spec
@@ -234,7 +240,13 @@ pub fn fabnet_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
 /// Table-IV one-layer vanilla transformer: 1K seq, 1K hidden, 2D-FFT
 /// attention + two BPMM FFN layers.
 pub fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
-    let (seq, hidden) = (1024, 1024);
+    vanilla_kernels_seq(batch, 1024)
+}
+
+/// Vanilla-transformer kernels at an explicit (power-of-two) sequence
+/// length, 1K hidden — the registry entry's `seq` drives this.
+pub fn vanilla_kernels_seq(batch: usize, seq: usize) -> Vec<KernelSpec> {
+    let hidden = 1024;
     vec![
         KernelSpec {
             name: "Vanilla-ATT-hidden".into(),
@@ -273,6 +285,76 @@ pub fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
             seq,
         },
     ]
+}
+
+/// A named, CLI-addressable workload scenario.
+///
+/// Every benchmark family instance of the paper is registered here so
+/// the CLI (`bfdf run --workload <name>`), the examples and the benches
+/// can all address a scenario by string — see [`SUITES`] /
+/// [`find_suite`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadSuite {
+    /// Registry name, e.g. `"vanilla"`, `"bert-64k"`, `"fabnet-512"`.
+    pub name: &'static str,
+    pub family: ModelFamily,
+    /// Sequence length of the scenario.
+    pub seq: usize,
+    /// Batch used when the caller does not override it.
+    pub default_batch: usize,
+}
+
+impl WorkloadSuite {
+    /// The suite's kernel enumeration at `batch` (0 = the suite's
+    /// default batch).
+    pub fn kernels(&self, batch: usize) -> Vec<KernelSpec> {
+        let batch = if batch == 0 { self.default_batch } else { batch };
+        match self.family {
+            ModelFamily::Vit => vit_kernels_seq(batch, self.seq),
+            ModelFamily::Bert => bert_kernels(batch, self.seq),
+            ModelFamily::FabNet => fabnet_kernels(batch, self.seq),
+            ModelFamily::Vanilla => vanilla_kernels_seq(batch, self.seq),
+        }
+    }
+
+    /// Kernels at the suite's default batch.
+    pub fn default_kernels(&self) -> Vec<KernelSpec> {
+        self.kernels(0)
+    }
+}
+
+/// The registered workload suites (Table I bottom: ViT/BERT attention
+/// kernels, FABNet-Base blocks across Fig. 17's sequence scales, and the
+/// Table-IV one-layer vanilla transformer).
+pub const SUITES: &[WorkloadSuite] = &[
+    WorkloadSuite { name: "vanilla", family: ModelFamily::Vanilla, seq: 1024, default_batch: 256 },
+    WorkloadSuite { name: "vit-256", family: ModelFamily::Vit, seq: 256, default_batch: 8 },
+    WorkloadSuite { name: "bert-1k", family: ModelFamily::Bert, seq: 1024, default_batch: 1 },
+    WorkloadSuite { name: "bert-4k", family: ModelFamily::Bert, seq: 4096, default_batch: 1 },
+    WorkloadSuite { name: "bert-16k", family: ModelFamily::Bert, seq: 16 * 1024, default_batch: 1 },
+    WorkloadSuite { name: "bert-64k", family: ModelFamily::Bert, seq: 64 * 1024, default_batch: 1 },
+    WorkloadSuite { name: "fabnet-128", family: ModelFamily::FabNet, seq: 128, default_batch: 128 },
+    WorkloadSuite { name: "fabnet-256", family: ModelFamily::FabNet, seq: 256, default_batch: 128 },
+    WorkloadSuite { name: "fabnet-512", family: ModelFamily::FabNet, seq: 512, default_batch: 128 },
+    WorkloadSuite { name: "fabnet-1k", family: ModelFamily::FabNet, seq: 1024, default_batch: 128 },
+];
+
+/// Look up a registered suite by name (case-insensitive).
+pub fn find_suite(name: &str) -> anyhow::Result<&'static WorkloadSuite> {
+    SUITES
+        .iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown workload '{name}'; available: {}",
+                suite_names().join(", ")
+            )
+        })
+}
+
+/// Names of all registered suites, registry order.
+pub fn suite_names() -> Vec<&'static str> {
+    SUITES.iter().map(|s| s.name).collect()
 }
 
 /// Short scale label (512, 1k, 64k ...).
@@ -328,5 +410,53 @@ mod tests {
         let ks = vanilla_kernels(256);
         assert_eq!(ks.len(), 4);
         assert!(ks.iter().all(|k| k.seq == 1024));
+    }
+
+    #[test]
+    fn suite_registry_resolves_every_name() {
+        for suite in SUITES {
+            let found = find_suite(suite.name).unwrap();
+            assert_eq!(found.name, suite.name);
+            let ks = suite.default_kernels();
+            assert!(!ks.is_empty(), "{} has no kernels", suite.name);
+            // Suites must be addressable case-insensitively.
+            assert!(find_suite(&suite.name.to_uppercase()).is_ok());
+        }
+    }
+
+    #[test]
+    fn suite_seq_matches_generated_kernels() {
+        // The registry's `seq` is the source of truth: every kernel a
+        // suite generates must carry it (mislabeled suites would emit
+        // wrong metadata in reports).
+        for suite in SUITES {
+            for k in suite.default_kernels() {
+                assert_eq!(k.seq, suite.seq, "{}: kernel {}", suite.name, k.name);
+            }
+        }
+    }
+
+    #[test]
+    fn suite_names_are_unique() {
+        let mut names = suite_names();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+
+    #[test]
+    fn unknown_suite_error_lists_alternatives() {
+        let err = find_suite("resnet").unwrap_err().to_string();
+        assert!(err.contains("vanilla") && err.contains("bert-64k"), "{err}");
+    }
+
+    #[test]
+    fn suite_batch_override_scales_vectors() {
+        let suite = find_suite("fabnet-256").unwrap();
+        let small = suite.kernels(1);
+        let big = suite.kernels(8);
+        assert_eq!(small.len(), big.len());
+        assert_eq!(small[0].vectors * 8, big[0].vectors);
     }
 }

@@ -4,9 +4,7 @@
 //! `artifact_runtime.rs` and is gated on `artifacts/` existing.)
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
-use butterfly_dataflow::coordinator::{
-    run_kernel, run_kernel_with, stream_workload, ExperimentConfig,
-};
+use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::microcode::lower_stage;
 use butterfly_dataflow::dfg::stages::{plan_kernel, StageDfg};
@@ -32,14 +30,9 @@ fn window_sensitivity_of_extrapolation() {
     // sizes within a few percent — otherwise the Fig. 13-17 numbers
     // would be artifacts of the window choice.
     let s = spec(KernelKind::Fft, 256, 512 * 1024);
-    let base = run_kernel(
-        &s,
-        &ExperimentConfig { window: 32, ..Default::default() },
-    )
-    .unwrap();
+    let base = Session::builder().window(32).build().run(&s).unwrap();
     for window in [48, 96, 192] {
-        let r = run_kernel(&s, &ExperimentConfig { window, ..Default::default() })
-            .unwrap();
+        let r = Session::builder().window(window).build().run(&s).unwrap();
         let ratio = r.cycles / base.cycles;
         assert!(
             (0.92..1.08).contains(&ratio),
@@ -51,9 +44,9 @@ fn window_sensitivity_of_extrapolation() {
 #[test]
 fn whole_plan_cycles_scale_with_points() {
     // n log n work at fixed vector count: 4x points ≈ >4x cycles.
-    let cfg = ExperimentConfig::default();
-    let a = run_kernel(&spec(KernelKind::Bpmm, 128, 64 * 1024), &cfg).unwrap();
-    let b = run_kernel(&spec(KernelKind::Bpmm, 512, 64 * 1024), &cfg).unwrap();
+    let sess = Session::builder().build();
+    let a = sess.run(&spec(KernelKind::Bpmm, 128, 64 * 1024)).unwrap();
+    let b = sess.run(&spec(KernelKind::Bpmm, 512, 64 * 1024)).unwrap();
     let ratio = b.cycles / a.cycles;
     assert!(ratio > 3.0 && ratio < 9.0, "ratio {ratio}");
 }
@@ -63,9 +56,9 @@ fn fft_512_dip_and_recovery() {
     // FFT above the 256-point cap pays the staged division; utilization
     // recovers at larger scales (deeper sub-DFGs).  Guards the Fig. 13
     // curve shape.
-    let cfg = ExperimentConfig::default();
+    let sess = Session::builder().build();
     let u = |points: usize| {
-        run_kernel(&spec(KernelKind::Fft, points, (1 << 26) / points), &cfg)
+        sess.run(&spec(KernelKind::Fft, points, (1 << 26) / points))
             .unwrap()
             .util_of(UnitKind::Cal)
     };
@@ -80,10 +73,10 @@ fn fft_512_dip_and_recovery() {
 #[test]
 fn headline_cal_utilization_band() {
     // §VI-D: Cal > 64% for all butterfly kernels at steady batch.
-    let cfg = ExperimentConfig::default();
+    let sess = Session::builder().build();
     for kind in [KernelKind::Fft, KernelKind::Bpmm] {
         for points in [256usize, 2048, 8192] {
-            let r = run_kernel(&spec(kind, points, (1 << 26) / points), &cfg).unwrap();
+            let r = sess.run(&spec(kind, points, (1 << 26) / points)).unwrap();
             assert!(
                 r.util_of(UnitKind::Cal) > 0.55,
                 "{}-{points}: cal {:.3}",
@@ -105,15 +98,12 @@ fn ablation_multiline_spm_required_for_staged_kernels() {
     // §V-C: without the multi-line SPM the column-gather stage of the
     // Fig. 9 division serializes — must cost measurably more.
     let s = spec(KernelKind::Bpmm, 4096, 64 * 1024);
-    let multi = run_kernel(&s, &ExperimentConfig::default()).unwrap();
-    let single = run_kernel(
-        &s,
-        &ExperimentConfig {
-            sim: SimOptions { no_multiline_spm: true, ..Default::default() },
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let multi = Session::builder().build().run(&s).unwrap();
+    let single = Session::builder()
+        .sim(SimOptions { no_multiline_spm: true, ..Default::default() })
+        .build()
+        .run(&s)
+        .unwrap();
     assert!(
         single.cycles > 1.5 * multi.cycles,
         "single-line {} vs multi-line {}",
@@ -125,10 +115,10 @@ fn ablation_multiline_spm_required_for_staged_kernels() {
 #[test]
 fn division_sweep_prefers_balance_fft() {
     // Fig. 14: balanced FFT divisions beat strongly-unbalanced ones.
-    let cfg = ExperimentConfig::default();
+    let sess = Session::builder().build();
     let s = spec(KernelKind::Fft, 4096, 16 * 1024);
-    let balanced = run_kernel_with(&s, &cfg, Some((64, 64))).unwrap();
-    let skewed = run_kernel_with(&s, &cfg, Some((16, 256))).unwrap();
+    let balanced = sess.run_with(&s, Some((64, 64))).unwrap();
+    let skewed = sess.run_with(&s, Some((16, 256))).unwrap();
     assert!(
         balanced.util_of(UnitKind::Cal) > skewed.util_of(UnitKind::Cal),
         "balanced {:.3} vs skewed {:.3}",
@@ -140,8 +130,8 @@ fn division_sweep_prefers_balance_fft() {
 #[test]
 fn table4_configuration_lands_near_paper() {
     // Our side of Table IV: latency near 2 ms, power near 3.94 W band.
-    let cfg = ExperimentConfig { arch: ArchConfig::table4(), ..Default::default() };
-    let r = stream_workload(&vanilla_kernels(64), 64, &cfg).unwrap();
+    let sess = Session::builder().arch(ArchConfig::table4()).build();
+    let r = sess.stream(&vanilla_kernels(64), 64).unwrap();
     assert!(
         (0.5..6.0).contains(&r.latency_ms),
         "latency {} ms out of band",
@@ -197,12 +187,12 @@ fn prop_any_plan_simulates_and_accounts() {
     // Randomized end-to-end property: any power-of-two kernel plan
     // simulates to completion with conserved block counts and bounded
     // utilizations.
+    let sess = Session::builder().window(16).build();
     check("plan-simulates", 25, |rng| {
         let points = rng.pow2(16, 4096);
         let kind = if rng.chance(0.5) { KernelKind::Fft } else { KernelKind::Bpmm };
         let vectors = rng.range(64, 4096);
-        let cfg = ExperimentConfig { window: 16, ..Default::default() };
-        let r = run_kernel(&spec(kind, points, vectors), &cfg).unwrap();
+        let r = sess.run(&spec(kind, points, vectors)).unwrap();
         assert!(r.cycles > 0.0);
         assert!(r.flops_efficiency > 0.0 && r.flops_efficiency <= 1.0);
         for k in UnitKind::ALL {
