@@ -14,7 +14,7 @@ use butterfly_dataflow::baselines::gpu::GpuModel;
 use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::util::stats::{fmt_time, geomean};
 use butterfly_dataflow::util::table::Table;
-use butterfly_dataflow::workloads::{self, platforms, KernelSpec};
+use butterfly_dataflow::workloads::{self, KernelSpec, platforms};
 
 struct Row {
     name: String,
@@ -79,11 +79,13 @@ fn main() {
           "speedup dense", "speedup cuda"],
     );
     let mut all = Vec::new();
-    all.extend(run_family("VIT", &workloads::vit_kernels(128), &sess, &nx));
+    let vit = workloads::find_suite("vit-256").unwrap().kernels_at(Some(128));
+    all.extend(run_family("VIT", &vit, &sess, &nx));
     for seq in [4096usize, 16 * 1024, 64 * 1024] {
+        let suite = workloads::find_suite(&format!("bert-{}", workloads::scale_name(seq)));
         all.extend(run_family(
             &format!("BERT-{seq}"),
-            &workloads::bert_kernels(1, seq),
+            &suite.unwrap().kernels_at(Some(1)),
             &sess,
             &nx,
         ));
@@ -117,10 +119,14 @@ fn main() {
     t.print();
     println!(
         "\nspeedup vs dense(tensor): geomean {:.2}x, max {:.2}x ({})  [paper: avg 9.29x, max 14.34x]",
-        geomean(&sp_d), max_d.0, max_d.1
+        geomean(&sp_d),
+        max_d.0,
+        max_d.1
     );
     println!(
         "speedup vs butterfly(cuda): geomean {:.2}x, max {:.2}x ({})  [paper: avg ~1.8-2.0x, max 3.30x]",
-        geomean(&sp_c), max_c.0, max_c.1
+        geomean(&sp_c),
+        max_c.0,
+        max_c.1
     );
 }

@@ -26,7 +26,8 @@ fn main() {
     );
     let batch = 128;
     for seq in [128usize, 256, 512, 1024] {
-        let kernels = workloads::fabnet_kernels(batch, seq);
+        let suite = workloads::find_suite(&format!("fabnet-{}", workloads::scale_name(seq)));
+        let kernels = suite.unwrap().kernels_at(Some(batch));
         let mut ours_t = 0.0;
         let mut sota_t = 0.0;
         let mut nano_t = 0.0;

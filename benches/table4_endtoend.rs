@@ -16,12 +16,13 @@ mod common;
 use butterfly_dataflow::arch::ArchConfig;
 use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::util::table::Table;
-use butterfly_dataflow::workloads::{platforms, vanilla_kernels};
+use butterfly_dataflow::workloads::{find_suite, platforms};
 
 fn main() {
     let sess = Session::builder().arch(ArchConfig::table4()).build();
     let batch = 256;
-    let ours = sess.stream(&vanilla_kernels(batch), batch).expect("sim");
+    let kernels = find_suite("vanilla").unwrap().kernels_at(Some(batch));
+    let ours = sess.stream(&kernels, batch).expect("sim");
 
     let mut t = Table::new(
         "Table IV: end-to-end latency and energy (1-layer vanilla transformer 1K/1K)",

@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
     let sim_batch = 256;
     let suite = workloads::find_suite("fabnet-256")?;
     let session = Session::builder().arch(ArchConfig::scaled_128()).build();
-    let r = session.stream(&suite.kernels(sim_batch), sim_batch)?;
+    let r = session.stream(&suite.kernels_at(Some(sim_batch)), sim_batch)?;
     let mut t = Table::new(
         "simulated dataflow ASIC (scaled128, FABNet-256 block, batch-256 streamed)",
         &["metric", "value"],

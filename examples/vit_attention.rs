@@ -29,8 +29,8 @@ fn main() -> anyhow::Result<()> {
     let mut sp_cuda = Vec::new();
 
     let batch = 8;
-    let mut kernels = workloads::vit_kernels(batch);
-    kernels.extend(workloads::bert_kernels(1, 4096));
+    let mut kernels = workloads::find_suite("vit-256")?.kernels_at(Some(batch));
+    kernels.extend(workloads::find_suite("bert-4k")?.kernels_at(Some(1)));
     // AT-all FFT kernels come in (hidden, seq) axis pairs whose dense
     // counterpart is the whole softmax(QKᵀ)V attention — fold each pair.
     let mut i = 0;

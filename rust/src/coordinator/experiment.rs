@@ -11,16 +11,15 @@
 //!
 //! The execution engine lives in [`super::session`]: a [`Session`]
 //! plans, lowers and simulates kernels with plan caching and parallel
-//! fan-out.  The free functions here are deprecated one-shot wrappers
-//! kept for source compatibility — each call builds a throwaway session,
-//! so nothing is reused across calls.
+//! fan-out.  The free functions here are deprecated wrappers kept for
+//! source compatibility; they route through a process-wide pool of
+//! shared sessions (one per configuration signature), so repeated
+//! legacy calls at least reuse cached plans and stage measurements.
 
 use crate::arch::{ArchConfig, UnitKind};
 use crate::dfg::stages::KernelPlan;
 use crate::sim::SimOptions;
 use crate::workloads::KernelSpec;
-
-use super::session::Session;
 
 /// Configuration for experiment runs.
 #[derive(Debug, Clone)]
@@ -78,11 +77,11 @@ impl KernelResult {
 /// Run a kernel with the default balanced division.
 #[deprecated(
     since = "0.2.0",
-    note = "build a `coordinator::Session` instead — free functions re-plan, \
-            re-lower and re-simulate every kernel from scratch"
+    note = "build a `coordinator::Session` instead — the wrapper shares a \
+            process-wide session per config, but cannot batch or stream"
 )]
 pub fn run_kernel(spec: &KernelSpec, cfg: &ExperimentConfig) -> anyhow::Result<KernelResult> {
-    Session::from_config(cfg).run(spec)
+    super::session::shared_session(cfg).run(spec)
 }
 
 /// Run a kernel with an explicit stage division (the Fig. 14 sweep).
@@ -95,12 +94,13 @@ pub fn run_kernel_with(
     cfg: &ExperimentConfig,
     division: Option<(usize, usize)>,
 ) -> anyhow::Result<KernelResult> {
-    Session::from_config(cfg).run_with(spec, division)
+    super::session::shared_session(cfg).run_with(spec, division)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Session;
     use crate::dfg::graph::KernelKind;
 
     fn spec(kind: KernelKind, points: usize, vectors: usize) -> KernelSpec {

@@ -4,20 +4,26 @@
 //! The public surface is the [`Session`] API ([`session`]): a
 //! builder-configured, long-lived session that owns a plan cache (so
 //! repeated stage DFGs lower and simulate once), fans independent
-//! kernels across threads ([`Session::run_many`]), and streams batched
-//! workloads ([`Session::stream`], the Table-IV driver).  Results
-//! serialize through [`Report`] ([`report`]) for benches and CI.
+//! kernels across threads ([`Session::run_many`]), streams batched
+//! workloads ([`Session::stream`], the Table-IV driver), and executes
+//! whole hybrid networks ([`Session::run_network`], producing per-layer
+//! [`NetworkResult`] metrics from a declarative
+//! [`crate::workloads::spec::ModelSpec`]).  Results serialize through
+//! [`Report`] ([`report`]) for benches and CI.
 //!
 //! The historical one-shot free functions ([`run_kernel`],
 //! [`run_kernel_with`], [`stream_workload`]) are deprecated wrappers
-//! that build a throwaway session per call.
+//! routed through a process-wide pool of shared sessions (one per
+//! configuration signature).
 
 pub mod experiment;
+pub mod network;
 pub mod report;
 pub mod session;
 pub mod streaming;
 
 pub use experiment::{ExperimentConfig, KernelResult};
+pub use network::{BlockResult, DenseResult, LayerResult, NetworkResult};
 pub use report::{Report, SweepRow};
 pub use session::{CacheStats, Session, SessionBuilder};
 pub use streaming::StreamResult;

@@ -1,0 +1,290 @@
+//! Whole-network execution results for hybrid butterfly-sparsity
+//! networks ([`crate::workloads::spec::ModelSpec`]).
+//!
+//! [`super::Session::run_network`] lowers a network, runs every
+//! butterfly kernel through the simulator (reusing the session's plan
+//! cache across repeated blocks and layers), prices dense blocks with a
+//! first-order roofline, and rolls the per-block measurements up into
+//! per-layer and network totals.  The layer/block structure mirrors the
+//! lowering's provenance, so a report can attribute latency and energy
+//! to the exact block that caused it.
+//!
+//! Dense blocks (the accuracy anchor of a hybrid network) are *not*
+//! cycle-simulated: the dataflow compiler only targets butterfly
+//! sparsity.  They are priced as
+//! `max(flops / (peak_flops × 0.75), bytes / ddr_bw)` — a dense GEMM
+//! mapped on the MAC array without butterfly reuse reaches a fraction
+//! of peak and is otherwise DDR-bound — at the array's active power.
+//! The estimate is deterministic and first-order; per-kernel
+//! cycle-accurate numbers come only from butterfly kernels.
+
+use crate::arch::ArchConfig;
+use crate::energy;
+use crate::workloads::spec::DenseCost;
+
+use super::experiment::KernelResult;
+
+/// Fraction of the array's peak MACs a dense GEMM sustains (no
+/// butterfly locality; systolic-style streaming with edge effects).
+const DENSE_ARRAY_EFF: f64 = 0.75;
+
+/// Analytic result of one dense block (roofline-priced; see module
+/// docs).
+#[derive(Debug, Clone)]
+pub struct DenseResult {
+    pub name: String,
+    /// Dense FLOPs executed.
+    pub flops: f64,
+    pub time_s: f64,
+    pub power_w: f64,
+    pub energy_j: f64,
+}
+
+/// Price a dense block on the array (roofline over peak MACs and DDR).
+pub(crate) fn eval_dense(arch: &ArchConfig, cost: &DenseCost) -> DenseResult {
+    let compute_s = cost.flops / (arch.peak_flops() * DENSE_ARRAY_EFF);
+    let mem_s = cost.elems * arch.elem_bytes as f64 / arch.ddr_bw();
+    let time_s = compute_s.max(mem_s);
+    let power_w = energy::array_power_w(arch);
+    DenseResult {
+        name: cost.name.clone(),
+        flops: cost.flops,
+        time_s,
+        power_w,
+        energy_j: power_w * time_s,
+    }
+}
+
+/// One executed block: simulated butterfly kernels and/or an analytic
+/// dense estimate, with the originating layer and grammar label.
+#[derive(Debug, Clone)]
+pub struct BlockResult {
+    /// 0-based layer index (lowering provenance).
+    pub layer: usize,
+    /// Grammar label of the block, e.g. `att:fft2d`.
+    pub label: String,
+    /// Cycle-simulated butterfly kernels (empty for dense blocks).
+    pub kernels: Vec<KernelResult>,
+    /// Roofline estimate (dense blocks only).
+    pub dense: Option<DenseResult>,
+    /// Block wall time (kernel times + dense estimate).
+    pub time_s: f64,
+    pub energy_j: f64,
+    /// Cycle-weighted utilization per unit kind over the block's
+    /// butterfly kernels (zeros for dense-only blocks).
+    pub util: [f64; 4],
+}
+
+impl BlockResult {
+    pub(crate) fn new(
+        layer: usize,
+        label: String,
+        kernels: Vec<KernelResult>,
+        dense: Option<DenseResult>,
+    ) -> Self {
+        let mut time_s: f64 = kernels.iter().map(|k| k.time_s).sum();
+        let mut energy_j: f64 = kernels.iter().map(|k| k.energy_j).sum();
+        if let Some(d) = &dense {
+            time_s += d.time_s;
+            energy_j += d.energy_j;
+        }
+        let util = weighted_util(kernels.iter());
+        BlockResult { layer, label, kernels, dense, time_s, energy_j, util }
+    }
+}
+
+/// Per-layer rollup.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    pub layer: usize,
+    pub blocks: Vec<BlockResult>,
+    pub time_s: f64,
+    pub energy_j: f64,
+    /// Cycle-weighted utilization per unit kind over the layer's
+    /// butterfly kernels (zeros for all-dense layers).
+    pub util: [f64; 4],
+}
+
+/// End-to-end network result: per-layer breakdown plus batch totals
+/// (the Table-IV metric set generalized to arbitrary hybrids).
+#[derive(Debug, Clone)]
+pub struct NetworkResult {
+    /// Network name (model name or suite name).
+    pub network: String,
+    /// Canonical spec-grammar string of the network.
+    pub spec: String,
+    /// Batch the network was lowered at.
+    pub batch: usize,
+    pub layers: Vec<LayerResult>,
+    /// Total batch time (s).
+    pub batch_time_s: f64,
+    /// Per-prediction latency (ms).
+    pub latency_ms: f64,
+    /// Predictions per second.
+    pub throughput: f64,
+    /// Time-weighted effective power (W).
+    pub power_w: f64,
+    pub energy_j: f64,
+    /// Predictions per joule.
+    pub energy_eff: f64,
+    /// Cycle-weighted utilization over all butterfly kernels.
+    pub util: [f64; 4],
+}
+
+/// Cycle-weighted average utilization of a kernel set.
+fn weighted_util<'a>(kernels: impl Iterator<Item = &'a KernelResult>) -> [f64; 4] {
+    let mut acc = [0.0f64; 4];
+    let mut cycles = 0.0f64;
+    for k in kernels {
+        for (a, u) in acc.iter_mut().zip(k.util.iter()) {
+            *a += u * k.cycles;
+        }
+        cycles += k.cycles;
+    }
+    if cycles > 0.0 {
+        for a in acc.iter_mut() {
+            *a /= cycles;
+        }
+    }
+    acc
+}
+
+/// Roll lowered-order block results up into layers and network totals.
+/// Blocks must arrive in lowering order (grouped by ascending layer).
+pub(crate) fn assemble(
+    network: String,
+    spec: String,
+    batch: usize,
+    blocks: Vec<BlockResult>,
+) -> NetworkResult {
+    let mut layers: Vec<LayerResult> = Vec::new();
+    for b in blocks {
+        if layers.last().map(|l| l.layer) != Some(b.layer) {
+            layers.push(LayerResult {
+                layer: b.layer,
+                blocks: Vec::new(),
+                time_s: 0.0,
+                energy_j: 0.0,
+                util: [0.0; 4],
+            });
+        }
+        let l = layers.last_mut().expect("layer pushed above");
+        l.time_s += b.time_s;
+        l.energy_j += b.energy_j;
+        l.blocks.push(b);
+    }
+    for l in &mut layers {
+        l.util = weighted_util(l.blocks.iter().flat_map(|b| b.kernels.iter()));
+    }
+    let batch_time_s: f64 = layers.iter().map(|l| l.time_s).sum();
+    let energy_j: f64 = layers.iter().map(|l| l.energy_j).sum();
+    let util = weighted_util(
+        layers
+            .iter()
+            .flat_map(|l| l.blocks.iter())
+            .flat_map(|b| b.kernels.iter()),
+    );
+    let latency_s = batch_time_s / batch.max(1) as f64;
+    NetworkResult {
+        network,
+        spec,
+        batch,
+        layers,
+        batch_time_s,
+        latency_ms: latency_s * 1e3,
+        throughput: if latency_s > 0.0 { 1.0 / latency_s } else { 0.0 },
+        power_w: if batch_time_s > 0.0 { energy_j / batch_time_s } else { 0.0 },
+        energy_j,
+        energy_eff: if energy_j > 0.0 { batch as f64 / energy_j } else { 0.0 },
+        util,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Session;
+    use crate::workloads::spec::{AttnSparsity, FfnForm, ModelSpec};
+
+    fn mixed_model() -> ModelSpec {
+        ModelSpec::builder("mixed")
+            .hidden(256)
+            .seq(128)
+            .batch(2)
+            .attention(AttnSparsity::Fft2d)
+            .ffn(FfnForm::Bpmm, 2)
+            .next_layer()
+            .attention(AttnSparsity::Dense)
+            .ffn(FfnForm::Bpmm, 2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn network_totals_are_layer_sums() {
+        let session = Session::builder().build();
+        let r = session.run_network(&mixed_model(), None).unwrap();
+        assert_eq!(r.layers.len(), 2);
+        let t: f64 = r.layers.iter().map(|l| l.time_s).sum();
+        let e: f64 = r.layers.iter().map(|l| l.energy_j).sum();
+        assert!((r.batch_time_s - t).abs() < 1e-12);
+        assert!((r.energy_j - e).abs() < 1e-12);
+        assert!(r.latency_ms > 0.0 && r.throughput > 0.0);
+        assert!(r.power_w > 0.0);
+    }
+
+    #[test]
+    fn dense_blocks_cost_time_without_kernels() {
+        let session = Session::builder().build();
+        let r = session.run_network(&mixed_model(), None).unwrap();
+        let dense_att = &r.layers[1].blocks[0];
+        assert_eq!(dense_att.label, "att:dense");
+        assert!(dense_att.kernels.is_empty());
+        let d = dense_att.dense.as_ref().expect("dense estimate");
+        assert!(d.time_s > 0.0 && d.energy_j > 0.0);
+        assert!((dense_att.time_s - d.time_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn repeated_layers_hit_the_plan_cache() {
+        let session = Session::builder().build();
+        let model = ModelSpec::builder("deep")
+            .hidden(256)
+            .seq(128)
+            .batch(2)
+            .attention(AttnSparsity::Fft2d)
+            .ffn(FfnForm::Bpmm, 2)
+            .repeat(4)
+            .build()
+            .unwrap();
+        let r = session.run_network(&model, None).unwrap();
+        let kernel_count: usize =
+            r.layers.iter().flat_map(|l| &l.blocks).map(|b| b.kernels.len()).sum();
+        assert_eq!(kernel_count, 16);
+        let stats = session.cache_stats();
+        assert!(
+            stats.lowerings < kernel_count as u64,
+            "repeated layers must reuse lowered programs: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn run_network_rejects_zero_batch() {
+        let session = Session::builder().build();
+        let err = session
+            .run_network(&mixed_model(), Some(0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("batch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn batch_override_scales_batch_time_not_latency() {
+        let session = Session::builder().build();
+        let a = session.run_network(&mixed_model(), Some(2)).unwrap();
+        let b = session.run_network(&mixed_model(), Some(8)).unwrap();
+        assert!(b.batch_time_s > a.batch_time_s);
+        let ratio = a.latency_ms / b.latency_ms;
+        assert!((0.5..2.0).contains(&ratio), "latency ratio {ratio}");
+    }
+}

@@ -2,22 +2,25 @@
 //!
 //! Every CLI subcommand, bench and CI consumer used to scrape the text
 //! tables; [`Report`] is the structured alternative, serialized through
-//! [`crate::util::json`] (the offline vendor set has no serde).  Three
+//! [`crate::util::json`] (the offline vendor set has no serde).  Four
 //! variants cover the coordinator's result shapes:
 //!
-//! * [`Report::Kernel`] — one kernel simulation ([`KernelResult`]);
-//! * [`Report::Stream`] — a batched workload ([`StreamResult`]) plus the
-//!   session's cache activity;
-//! * [`Report::Sweep`]  — a division sweep (the Fig. 14 scenario).
+//! * [`Report::Kernel`]  — one kernel simulation ([`KernelResult`]);
+//! * [`Report::Stream`]  — a batched workload ([`StreamResult`]) plus
+//!   the session's cache activity;
+//! * [`Report::Network`] — a hybrid network run ([`NetworkResult`])
+//!   with the per-layer / per-block breakdown;
+//! * [`Report::Sweep`]   — a division sweep (the Fig. 14 scenario).
 //!
 //! The JSON layout is stable: a top-level `"report"` discriminator plus
 //! flat snake_case metric keys matching the `KernelResult`/
-//! `StreamResult` field names.
+//! `StreamResult`/`NetworkResult` field names.
 
 use crate::arch::UnitKind;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::experiment::KernelResult;
+use super::network::{BlockResult, LayerResult, NetworkResult};
 use super::session::CacheStats;
 use super::streaming::StreamResult;
 
@@ -47,6 +50,12 @@ pub enum Report {
         cache: CacheStats,
         result: StreamResult,
     },
+    /// A hybrid network executed end-to-end with per-layer metrics.
+    Network {
+        arch: String,
+        cache: CacheStats,
+        result: NetworkResult,
+    },
     /// A stage-division sweep of one kernel.
     Sweep {
         arch: String,
@@ -70,6 +79,12 @@ impl Report {
                 ("workload", s(workload)),
                 ("cache", cache_json(cache)),
                 ("result", stream_json(result)),
+            ]),
+            Report::Network { arch, cache, result } => obj(vec![
+                ("report", s("network")),
+                ("arch", s(arch)),
+                ("cache", cache_json(cache)),
+                ("result", network_json(result)),
             ]),
             Report::Sweep { arch, kernel, rows } => obj(vec![
                 ("report", s("sweep")),
@@ -118,6 +133,56 @@ pub fn stream_json(r: &StreamResult) -> Json {
         ("energy_eff", num(r.energy_eff)),
         ("kernels", arr(r.kernels.iter().map(kernel_json).collect())),
     ])
+}
+
+/// JSON view of one [`NetworkResult`] (per-layer and total metrics).
+pub fn network_json(r: &NetworkResult) -> Json {
+    obj(vec![
+        ("network", s(&r.network)),
+        ("spec", s(&r.spec)),
+        ("batch", num(r.batch as f64)),
+        ("batch_time_s", num(r.batch_time_s)),
+        ("latency_ms", num(r.latency_ms)),
+        ("throughput", num(r.throughput)),
+        ("power_w", num(r.power_w)),
+        ("energy_j", num(r.energy_j)),
+        ("energy_eff", num(r.energy_eff)),
+        ("util", util_json(&r.util)),
+        ("layers", arr(r.layers.iter().map(layer_json).collect())),
+    ])
+}
+
+fn layer_json(l: &LayerResult) -> Json {
+    obj(vec![
+        ("layer", num(l.layer as f64)),
+        ("time_s", num(l.time_s)),
+        ("energy_j", num(l.energy_j)),
+        ("util", util_json(&l.util)),
+        ("blocks", arr(l.blocks.iter().map(block_json).collect())),
+    ])
+}
+
+fn block_json(b: &BlockResult) -> Json {
+    let mut fields = vec![
+        ("label", s(&b.label)),
+        ("time_s", num(b.time_s)),
+        ("energy_j", num(b.energy_j)),
+        ("util", util_json(&b.util)),
+        ("kernels", arr(b.kernels.iter().map(kernel_json).collect())),
+    ];
+    if let Some(d) = &b.dense {
+        fields.push((
+            "dense",
+            obj(vec![
+                ("name", s(&d.name)),
+                ("flops", num(d.flops)),
+                ("time_s", num(d.time_s)),
+                ("power_w", num(d.power_w)),
+                ("energy_j", num(d.energy_j)),
+            ]),
+        ));
+    }
+    obj(fields)
 }
 
 /// JSON view of a session's [`CacheStats`].
@@ -200,6 +265,38 @@ mod tests {
         assert_eq!(kernels.as_arr().unwrap().len(), 2);
         // The duplicate spec must have hit the stage cache.
         assert!(parsed.req("cache").unwrap().req_f64("stage_hits").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn network_report_carries_layer_breakdown() {
+        use crate::workloads::spec::{AttnSparsity, FfnForm, ModelSpec};
+        let model = ModelSpec::builder("mix")
+            .hidden(256)
+            .seq(128)
+            .batch(2)
+            .attention(AttnSparsity::Fft2d)
+            .next_layer()
+            .attention(AttnSparsity::Dense)
+            .ffn(FfnForm::Bpmm, 2)
+            .build()
+            .unwrap();
+        let session = Session::builder().build();
+        let result = session.run_network(&model, None).unwrap();
+        let report = Report::Network {
+            arch: session.arch_signature().to_string(),
+            cache: session.cache_stats(),
+            result,
+        };
+        let parsed = json::parse(&report.render()).unwrap();
+        assert_eq!(parsed.req_str("report").unwrap(), "network");
+        let r = parsed.req("result").unwrap();
+        assert_eq!(r.req_str("spec").unwrap(), "att:fft2d;att:dense,ffn:bpmm*x2");
+        assert!(r.req_f64("latency_ms").unwrap() > 0.0);
+        let layers = r.req("layers").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(layers.len(), 2);
+        let blocks = layers[1].req("blocks").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(blocks[0].req_str("label").unwrap(), "att:dense");
+        assert!(blocks[0].req("dense").unwrap().req_f64("time_s").unwrap() > 0.0);
     }
 
     #[test]

@@ -16,18 +16,28 @@
 //!
 //! let session = Session::builder().build();
 //! let suite = workloads::find_suite("vanilla").unwrap();
-//! let report = session.stream(&suite.kernels(16), 16).unwrap();
+//! let report = session.stream(&suite.kernels_at(Some(16)), 16).unwrap();
 //! assert!(session.cache_stats().stage_hits > 0); // FFN-L1 == FFN-L2
+//!
+//! // Whole hybrid networks run end-to-end with per-layer metrics:
+//! let net = workloads::NetworkBuilder::from_spec(
+//!     "hybrid", "att:fft2d,ffn:bpmm*x4;att:bpmm,ffn:bpmm*x2").unwrap()
+//!     .hidden(512).seq(256).batch(8)
+//!     .build().unwrap();
+//! let result = session.run_network(&net, None).unwrap();
+//! assert_eq!(result.layers.len(), 2);
 //! # let _ = report;
 //! ```
 //!
 //! The one-shot free functions (`run_kernel`, `run_kernel_with`,
-//! `stream_workload`) survive as `#[deprecated]` wrappers that build a
-//! throwaway session per call.
+//! `stream_workload`) survive as `#[deprecated]` wrappers routed
+//! through a process-wide pool of shared sessions (one per
+//! configuration signature), so even legacy call sites reuse plan
+//! caches across calls.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::Result;
 
@@ -37,9 +47,11 @@ use crate::dfg::microcode::lower_stage_packed;
 use crate::dfg::stages::{plan_kernel, KernelPlan, StageDfg};
 use crate::energy;
 use crate::sim::{simulate, SimOptions, SimStats};
+use crate::workloads::spec::ModelSpec;
 use crate::workloads::KernelSpec;
 
 use super::experiment::{ExperimentConfig, KernelResult};
+use super::network::{self, NetworkResult};
 use super::streaming::StreamResult;
 
 /// Packing target: keep at least this many butterfly nodes per PE per
@@ -336,6 +348,56 @@ impl Session {
         })
     }
 
+    /// Execute a whole hybrid network end-to-end: lower the
+    /// [`ModelSpec`] at `batch` (`None` = the model's default), fan the
+    /// butterfly kernels of all layers across threads (repeated blocks
+    /// hit the plan cache, so each distinct stage lowers once per
+    /// session no matter the depth), price dense blocks with the
+    /// roofline model, and roll everything up into per-layer and total
+    /// metrics ([`NetworkResult`]).
+    pub fn run_network(
+        &self,
+        model: &ModelSpec,
+        batch: Option<usize>,
+    ) -> Result<NetworkResult> {
+        anyhow::ensure!(
+            batch != Some(0),
+            "network batch must be >= 1 (got 0): per-prediction latency divides by it"
+        );
+        let batch = batch.unwrap_or(model.default_batch());
+        let lowered = model.lower(Some(batch));
+        let flat: Vec<KernelSpec> = lowered
+            .iter()
+            .flat_map(|b| b.kernels.iter().cloned())
+            .collect();
+        let results = self.run_many(&flat)?;
+        let mut results = results.into_iter();
+        let mut blocks = Vec::with_capacity(lowered.len());
+        for lb in &lowered {
+            let kernels: Vec<KernelResult> = lb
+                .kernels
+                .iter()
+                .map(|_| results.next().expect("run_many returns one result per spec"))
+                .collect();
+            let dense = lb
+                .dense
+                .as_ref()
+                .map(|cost| network::eval_dense(&self.cfg.arch, cost));
+            blocks.push(network::BlockResult::new(
+                lb.layer,
+                lb.label.clone(),
+                kernels,
+                dense,
+            ));
+        }
+        Ok(network::assemble(
+            model.name().to_string(),
+            model.spec_string(),
+            batch,
+            blocks,
+        ))
+    }
+
     /// Plan (or recall) the stage decomposition of one kernel.
     fn plan_for(
         &self,
@@ -511,6 +573,26 @@ impl Session {
     }
 }
 
+/// Process-wide session pool backing the deprecated one-shot wrappers
+/// (`run_kernel`, `run_kernel_with`, `stream_workload`): one lazily
+/// initialized [`Session`] per distinct configuration signature, so
+/// legacy call sites share plan caches across calls instead of building
+/// and discarding a fresh session — and cache — every time.
+pub(crate) fn shared_session(cfg: &ExperimentConfig) -> Arc<Session> {
+    static POOL: OnceLock<Mutex<HashMap<String, Arc<Session>>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(HashMap::new()));
+    // Building a session is cheap (empty caches); the signature it
+    // derives is the pool key, so key and configuration can never
+    // disagree.  On a pool hit the fresh instance is simply dropped.
+    let fresh = Session::from_config(cfg);
+    let key = fresh.arch_signature().to_string();
+    pool.lock()
+        .unwrap()
+        .entry(key)
+        .or_insert_with(|| Arc::new(fresh))
+        .clone()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -565,6 +647,20 @@ mod tests {
         assert_eq!(a.plan.stages[0].points, 32);
         assert_eq!(b.plan.stages[0].points, 16);
         assert_ne!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn shared_session_pool_reuses_per_config() {
+        let cfg = ExperimentConfig::default();
+        let a = shared_session(&cfg);
+        let b = shared_session(&cfg);
+        assert!(Arc::ptr_eq(&a, &b), "same config must share one session");
+        let other = ExperimentConfig { window: 96, ..Default::default() };
+        let c = shared_session(&other);
+        assert!(
+            !Arc::ptr_eq(&a, &c),
+            "distinct configs must get distinct sessions"
+        );
     }
 
     #[test]

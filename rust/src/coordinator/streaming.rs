@@ -10,13 +10,12 @@
 //! engine, duplicate kernels hit the session's plan cache, independent
 //! kernels fan out across threads), the kernel times are summed, and the
 //! per-prediction latency, throughput, effective power and energy
-//! efficiency are reported.  [`stream_workload`] remains as a deprecated
-//! one-shot wrapper.
+//! efficiency are reported.  [`stream_workload`] remains as a
+//! deprecated wrapper over a process-wide shared session.
 
 use crate::workloads::KernelSpec;
 
 use super::experiment::{ExperimentConfig, KernelResult};
-use super::session::Session;
 
 /// End-to-end streaming result.
 #[derive(Debug, Clone)]
@@ -50,14 +49,19 @@ pub fn stream_workload(
     batch: usize,
     cfg: &ExperimentConfig,
 ) -> anyhow::Result<StreamResult> {
-    Session::from_config(cfg).stream(kernels, batch)
+    super::session::shared_session(cfg).stream(kernels, batch)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::ArchConfig;
-    use crate::workloads::vanilla_kernels;
+    use crate::coordinator::Session;
+    use crate::workloads::find_suite;
+
+    fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
+        find_suite("vanilla").unwrap().kernels_at(Some(batch))
+    }
 
     fn table4_session() -> Session {
         Session::builder().arch(ArchConfig::table4()).build()

@@ -26,8 +26,13 @@
 //!   (Jetson Xavier NX / Nano roofline + cache hierarchy; SOTA butterfly
 //!   FPGA accelerator; SpAtten; DOTA).
 //! * [`energy`] — the Table III power/area model, activity-scaled.
-//! * [`workloads`] — the paper's benchmark suite (ViT, BERT, FABNet,
-//!   one-layer vanilla transformer) as kernel enumerations.
+//! * [`workloads`] — declarative network descriptions: the
+//!   [`workloads::spec::ModelSpec`] API composes hybrid
+//!   butterfly-sparsity networks (per-layer `Dense | Bpmm | Fft2d`
+//!   attention, `Dense | Bpmm` FFNs) from typed blocks, a compact spec
+//!   grammar and a JSON model-file format, and the paper's benchmark
+//!   suites (ViT, BERT, FABNet, one-layer vanilla transformer) are
+//!   registered as `ModelSpec`-backed [`workloads::SUITES`] entries.
 //! * [`runtime`] — PJRT loader/executor for the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text via the `xla` crate; gated behind
 //!   the `pjrt` cargo feature, metadata-only stub otherwise).
@@ -39,11 +44,15 @@
 //!   FABNet's repeated blocks — plan, lower and simulate exactly once;
 //!   independent kernels fan out across threads via
 //!   [`coordinator::Session::run_many`] with deterministic input-order
-//!   results, and [`coordinator::Session::stream`] is the Table-IV
-//!   batch-streaming driver.  Results serialize to JSON through
-//!   [`coordinator::Report`] for benches and CI.  The old free
-//!   functions (`run_kernel`, `run_kernel_with`, `stream_workload`)
-//!   remain as deprecated one-shot wrappers.
+//!   results, [`coordinator::Session::stream`] is the Table-IV
+//!   batch-streaming driver, and
+//!   [`coordinator::Session::run_network`] executes a whole
+//!   `ModelSpec` network end-to-end with per-layer latency/energy/
+//!   utilization rollups ([`coordinator::NetworkResult`]).  Results
+//!   serialize to JSON through [`coordinator::Report`] for benches and
+//!   CI.  The old free functions (`run_kernel`, `run_kernel_with`,
+//!   `stream_workload`) remain as deprecated wrappers over a
+//!   process-wide shared-session pool.
 
 pub mod arch;
 pub mod baselines;

@@ -2,20 +2,24 @@
 //!
 //! Subcommands cover interactive use of every layer: simulating kernels,
 //! sweeping divisions, printing the platform/energy tables, validating
-//! the AOT artifacts through PJRT, and streaming any registered workload
-//! suite end-to-end (`run --workload <name>`).  All subcommands accept
-//! `--json` to emit a machine-readable [`Report`] (or an equivalent JSON
-//! document) instead of the text tables, so benches and CI can parse
-//! results without scraping.
+//! the AOT artifacts through PJRT, and streaming workloads end-to-end.
+//! `run` addresses scenarios three ways: a registered suite
+//! (`--workload vanilla`), an inline hybrid-network spec
+//! (`--spec 'att:fft2d,ffn:bpmm*x4;att:dense,ffn:bpmm*x2'`), or a JSON
+//! model file (`--model-file net.json`) — the latter two execute
+//! arbitrary hybrid butterfly-sparsity networks with per-layer metrics.
+//! All subcommands accept `--json` to emit a machine-readable [`Report`]
+//! (or an equivalent JSON document) instead of the text tables, so
+//! benches and CI can parse results without scraping.
 //!
 //! Simulation subcommands are backed by a [`Session`]: kernels sharing
-//! stage DFGs (division sweeps, workload suites with repeated layers)
-//! lower and simulate once, and workload kernels fan out across threads.
+//! stage DFGs (division sweeps, networks with repeated layers) lower
+//! and simulate once, and independent kernels fan out across threads.
 
 use anyhow::Result;
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
-use butterfly_dataflow::coordinator::{Report, Session, SweepRow};
+use butterfly_dataflow::coordinator::{NetworkResult, Report, Session, SweepRow};
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
 use butterfly_dataflow::energy;
@@ -25,7 +29,7 @@ use butterfly_dataflow::util::cli::{App, Command, Matches};
 use butterfly_dataflow::util::json::{arr, num, obj, s, Json};
 use butterfly_dataflow::util::stats::{fmt_time, si};
 use butterfly_dataflow::util::table::Table;
-use butterfly_dataflow::workloads::{self, platforms, KernelSpec};
+use butterfly_dataflow::workloads::{self, KernelSpec, ModelSpec, NetworkBuilder, platforms};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -57,9 +61,18 @@ fn app() -> App {
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
-            Command::new("run", "stream a registered workload suite end-to-end")
-                .req_opt("workload", "suite name (see the 'workloads' subcommand)")
-                .opt("batch", "0", "streamed batch size (0 = suite default)")
+            Command::new("run", "stream a workload suite or a declarative hybrid network")
+                .opt("workload", "", "suite name (see the 'workloads' subcommand)")
+                .opt(
+                    "spec",
+                    "",
+                    "inline network spec, e.g. 'att:fft2d,ffn:bpmm*x4;att:dense,ffn:bpmm*x2'",
+                )
+                .opt("model-file", "", "path to a JSON model description")
+                .opt("hidden", "default", "hidden size for --spec networks (default 512)")
+                .opt("seq", "default", "sequence length for --spec networks (default 256)")
+                .opt("heads", "default", "attention heads for --spec networks (default 1)")
+                .opt("batch", "default", "streamed batch size ('default' = workload/model default)")
                 .opt("arch", "scaled128", "architecture preset: full | scaled128")
                 .opt("window", "48", "simulation window (DFG iterations)")
                 .flag("json", "emit a machine-readable report"),
@@ -239,15 +252,108 @@ fn cmd_sweep(m: &Matches) -> Result<()> {
     Ok(())
 }
 
+/// Parse an optional shape option: `'default'` means "not overridden".
+fn opt_usize(m: &Matches, name: &str) -> Result<Option<usize>> {
+    let raw = m.get(name);
+    if raw == "default" {
+        return Ok(None);
+    }
+    let v: usize = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--{name} expects an integer or 'default', got '{raw}'"))?;
+    Ok(Some(v))
+}
+
+/// Parse `--batch`: `'default'` defers to the workload/model default;
+/// an explicit `0` is rejected (it used to silently mean "default").
+fn parse_batch(m: &Matches) -> Result<Option<usize>> {
+    let raw = m.get("batch");
+    if raw == "default" {
+        return Ok(None);
+    }
+    let batch: usize = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--batch expects an integer or 'default', got '{raw}'"))?;
+    anyhow::ensure!(
+        batch > 0,
+        "--batch 0 is invalid: batch must be >= 1 (omit --batch or pass 'default' \
+         to use the workload's default batch)"
+    );
+    Ok(Some(batch))
+}
+
 fn cmd_run(m: &Matches) -> Result<()> {
-    let suite = workloads::find_suite(m.get("workload"))?;
-    let batch = m.get_usize("batch")?;
-    let batch = if batch == 0 { suite.default_batch } else { batch };
+    let workload = m.get("workload");
+    let spec = m.get("spec");
+    let model_file = m.get("model-file");
+    let given = [workload, spec, model_file]
+        .iter()
+        .filter(|v| !v.is_empty())
+        .count();
+    anyhow::ensure!(
+        given == 1,
+        "pass exactly one of --workload <name>, --spec <grammar>, --model-file <path>"
+    );
+    let batch = parse_batch(m)?;
+    let hidden = opt_usize(m, "hidden")?;
+    let seq = opt_usize(m, "seq")?;
+    let heads = opt_usize(m, "heads")?;
+    // Shape overrides only make sense for --spec networks; anywhere
+    // else they would be silently ignored, so reject them instead.
+    if spec.is_empty() {
+        anyhow::ensure!(
+            hidden.is_none() && seq.is_none() && heads.is_none(),
+            "--hidden/--seq/--heads apply only to --spec networks (workload suites and \
+             model files carry their own shape parameters)"
+        );
+    }
     let session = Session::builder()
         .arch(parse_arch(m.get("arch"))?)
         .window(m.get_usize("window")?)
         .build();
-    let r = session.stream(&suite.kernels(batch), batch)?;
+    if !workload.is_empty() {
+        return run_suite(m, &session, workload, batch);
+    }
+    let model = if !spec.is_empty() {
+        NetworkBuilder::from_spec("cli-spec", spec)?
+            .hidden(hidden.unwrap_or(512))
+            .seq(seq.unwrap_or(256))
+            .heads(heads.unwrap_or(1))
+            .build()?
+    } else {
+        let text = std::fs::read_to_string(model_file)
+            .map_err(|e| anyhow::anyhow!("cannot read model file '{model_file}': {e}"))?;
+        ModelSpec::from_json_str(&text)?
+    };
+    let r = session.run_network(&model, batch)?;
+    let cache = session.cache_stats();
+    if m.flag("json") {
+        let report = Report::Network {
+            arch: session.arch_signature().to_string(),
+            cache,
+            result: r,
+        };
+        println!("{}", report.render());
+        return Ok(());
+    }
+    print_network(&r);
+    println!(
+        "plan cache: {} lowerings ({} stage hits, {} plan hits)",
+        cache.lowerings, cache.stage_hits, cache.plan_hits
+    );
+    Ok(())
+}
+
+/// Stream a registered suite (the historical `run --workload` path).
+fn run_suite(
+    m: &Matches,
+    session: &Session,
+    name: &str,
+    batch: Option<usize>,
+) -> Result<()> {
+    let suite = workloads::find_suite(name)?;
+    let batch = batch.unwrap_or(suite.default_batch);
+    let r = session.stream(&suite.kernels_at(Some(batch)), batch)?;
     let cache = session.cache_stats();
     if m.flag("json") {
         let report = Report::Stream {
@@ -289,6 +395,49 @@ fn cmd_run(m: &Matches) -> Result<()> {
     Ok(())
 }
 
+/// Text tables for a hybrid-network run: per-block breakdown plus
+/// end-to-end totals.
+fn print_network(r: &NetworkResult) {
+    let mut t = Table::new(
+        &format!(
+            "network {} (batch {}, {} layers): {}",
+            r.network,
+            r.batch,
+            r.layers.len(),
+            r.spec
+        ),
+        &["layer", "block", "time", "cal util", "energy J"],
+    );
+    for l in &r.layers {
+        for b in &l.blocks {
+            let cal = if b.kernels.is_empty() {
+                "dense".into()
+            } else {
+                format!("{:.1}%", 100.0 * b.util[UnitKind::Cal.index()])
+            };
+            t.row(&[
+                format!("{}", l.layer),
+                b.label.clone(),
+                fmt_time(b.time_s),
+                cal,
+                format!("{:.4}", b.energy_j),
+            ]);
+        }
+    }
+    t.print();
+    let mut t = Table::new("end-to-end", &["metric", "value"]);
+    t.row(&["batch time".into(), fmt_time(r.batch_time_s)]);
+    t.row(&["latency".into(), format!("{:.3} ms", r.latency_ms)]);
+    t.row(&["throughput".into(), format!("{:.1} pred/s", r.throughput)]);
+    t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
+    t.row(&["energy eff.".into(), format!("{:.1} pred/J", r.energy_eff)]);
+    t.row(&[
+        "cal util".into(),
+        format!("{:.1}%", 100.0 * r.util[UnitKind::Cal.index()]),
+    ]);
+    t.print();
+}
+
 fn cmd_workloads(m: &Matches) -> Result<()> {
     if m.flag("json") {
         let items = workloads::SUITES
@@ -300,6 +449,7 @@ fn cmd_workloads(m: &Matches) -> Result<()> {
                     ("seq", num(w.seq as f64)),
                     ("default_batch", num(w.default_batch as f64)),
                     ("kernels", num(w.default_kernels().len() as f64)),
+                    ("spec", s(&w.model().spec_string())),
                 ])
             })
             .collect();
@@ -309,7 +459,7 @@ fn cmd_workloads(m: &Matches) -> Result<()> {
     }
     let mut t = Table::new(
         "registered workload suites",
-        &["name", "family", "seq", "default batch", "kernels"],
+        &["name", "family", "seq", "default batch", "kernels", "spec"],
     );
     for w in workloads::SUITES {
         t.row(&[
@@ -318,10 +468,12 @@ fn cmd_workloads(m: &Matches) -> Result<()> {
             format!("{}", w.seq),
             format!("{}", w.default_batch),
             format!("{}", w.default_kernels().len()),
+            w.model().spec_string(),
         ]);
     }
     t.print();
     println!("run one with: bfdf run --workload <name>");
+    println!("or compose a hybrid: bfdf run --spec 'att:fft2d,ffn:bpmm*x4;att:dense,ffn:bpmm*x2'");
     Ok(())
 }
 
@@ -488,8 +640,13 @@ fn cmd_validate(m: &Matches) -> Result<()> {
 
 fn cmd_stream(m: &Matches) -> Result<()> {
     let batch = m.get_usize("batch")?;
+    anyhow::ensure!(
+        batch > 0,
+        "--batch 0 is invalid: batch must be >= 1 for the streamed Table-IV run"
+    );
+    let suite = workloads::find_suite("vanilla")?;
     let session = Session::builder().arch(parse_arch(m.get("arch"))?).build();
-    let r = session.stream(&workloads::vanilla_kernels(batch), batch)?;
+    let r = session.stream(&suite.kernels_at(Some(batch)), batch)?;
     if m.flag("json") {
         let report = Report::Stream {
             arch: session.arch_signature().to_string(),

@@ -1,22 +1,44 @@
-//! The paper's benchmark suite as kernel enumerations.
+//! Workload descriptions: declarative [`ModelSpec`] networks and the
+//! registered benchmark suites.
 //!
-//! Three benchmark families (Table I bottom):
+//! The unit of execution is a [`KernelSpec`] — one butterfly kernel
+//! instance (BPMM linear or FFT attention mixing) with its transform
+//! length, vector population and original dense shape.  Networks are
+//! described declaratively with [`spec::ModelSpec`]: typed blocks
+//! (`Attention { Dense | Bpmm | Fft2d }`, `Ffn { Dense | Bpmm }`)
+//! stacked into layers, validated, and lowered to ordered kernels with
+//! per-layer provenance.  A compact grammar
+//! (`att:fft2d,ffn:bpmm*x4;att:dense,ffn:bpmm*x2`) and a JSON
+//! model-file format make arbitrary hybrid butterfly-sparsity networks
+//! (§IV) addressable from the CLI — see the [`spec`] module docs.
 //!
-//! * **ViT / BERT attention kernels** (Fig. 2/15/16): the BPMM-sparse
-//!   linear kernels `AT-to_qkv` and `FFN-L1/L2`, and the 2D-FFT-sparse
-//!   whole-attention kernel `AT-all`, across sequence scales.
+//! The paper's benchmark families (Table I bottom) are registered in
+//! [`SUITES`] as `ModelSpec`-backed [`WorkloadSuite`] entries:
+//!
+//! * **ViT / BERT attention kernels** (Fig. 2/15/16): BPMM `AT-to_qkv`
+//!   and `FFN` linears plus the 2D-FFT `AT-all` pair, across sequence
+//!   scales.
 //! * **FABNet-Base transformer** (Fig. 17): 2D-FFT attention + BPMM FFN
 //!   blocks at sequence scales 128..1K.
 //! * **One-layer vanilla transformer** (Table IV): 1K sequence, 1K
-//!   hidden, 2D-FFT attention + two BPMM FFN layers, batch-256 streamed.
+//!   hidden, 2D-FFT attention + two BPMM FFN layers, batch-256
+//!   streamed.
+//!
+//! The seed's free enumeration functions (`vit_kernels`, `bert_kernels`,
+//! `fabnet_kernels`, `vanilla_kernels`) are deprecated; they survive
+//! unchanged as the golden reference the `ModelSpec` lowering is tested
+//! against (`rust/tests/modelspec.rs`).
 
 pub mod platforms;
+pub mod spec;
+
+pub use spec::{AttnSparsity, Block, BlockSpec, FfnForm, ModelSpec, NetworkBuilder};
 
 use crate::dfg::graph::KernelKind;
 
 /// One attention kernel instance to run (sparse, on our design) or its
 /// dense original (on the GPU baseline).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct KernelSpec {
     /// Display name, e.g. "VIT-AT-to_qkv".
     pub name: String,
@@ -86,6 +108,11 @@ impl ModelFamily {
 
 /// ViT kernels at the paper's scales (Fig. 15a: seq 256, hidden 768-ish;
 /// we use the power-of-two 1024/256/512 the butterfly requires).
+#[deprecated(
+    since = "0.3.0",
+    note = "use `find_suite(\"vit-256\")` and `WorkloadSuite::kernels_at`, or compose a \
+            `workloads::spec::ModelSpec`"
+)]
 pub fn vit_kernels(batch: usize) -> Vec<KernelSpec> {
     vit_kernels_seq(batch, 256)
 }
@@ -93,6 +120,10 @@ pub fn vit_kernels(batch: usize) -> Vec<KernelSpec> {
 /// ViT kernels at an explicit (power-of-two) sequence length — the
 /// registry entry's `seq` drives this, so suite metadata and kernels
 /// cannot drift apart.
+#[deprecated(
+    since = "0.3.0",
+    note = "use `WorkloadSuite::kernels_at` or compose a `workloads::spec::ModelSpec`"
+)]
 pub fn vit_kernels_seq(batch: usize, seq: usize) -> Vec<KernelSpec> {
     let hidden = 512;
     let mut v = Vec::new();
@@ -151,6 +182,11 @@ pub fn vit_kernels_seq(batch: usize, seq: usize) -> Vec<KernelSpec> {
 
 /// BERT kernels across the paper's large sequence scales (§VI-F runs up
 /// to 64K sequences at 1K hidden).
+#[deprecated(
+    since = "0.3.0",
+    note = "use `find_suite(\"bert-<scale>\")` and `WorkloadSuite::kernels_at`, or compose \
+            a `workloads::spec::ModelSpec`"
+)]
 pub fn bert_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
     let hidden = 1024;
     vec![
@@ -195,6 +231,11 @@ pub fn bert_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
 
 /// FABNet-Base block kernels at one sequence scale (Fig. 17): 2D-FFT
 /// attention + BPMM FFN (hidden 256, expand 2x per [8]).
+#[deprecated(
+    since = "0.3.0",
+    note = "use `find_suite(\"fabnet-<scale>\")` and `WorkloadSuite::kernels_at`, or \
+            compose a `workloads::spec::ModelSpec`"
+)]
 pub fn fabnet_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
     let hidden = 256;
     vec![
@@ -239,12 +280,21 @@ pub fn fabnet_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
 
 /// Table-IV one-layer vanilla transformer: 1K seq, 1K hidden, 2D-FFT
 /// attention + two BPMM FFN layers.
+#[deprecated(
+    since = "0.3.0",
+    note = "use `find_suite(\"vanilla\")` and `WorkloadSuite::kernels_at`, or compose a \
+            `workloads::spec::ModelSpec`"
+)]
 pub fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
     vanilla_kernels_seq(batch, 1024)
 }
 
 /// Vanilla-transformer kernels at an explicit (power-of-two) sequence
 /// length, 1K hidden — the registry entry's `seq` drives this.
+#[deprecated(
+    since = "0.3.0",
+    note = "use `WorkloadSuite::kernels_at` or compose a `workloads::spec::ModelSpec`"
+)]
 pub fn vanilla_kernels_seq(batch: usize, seq: usize) -> Vec<KernelSpec> {
     let hidden = 1024;
     vec![
@@ -287,7 +337,8 @@ pub fn vanilla_kernels_seq(batch: usize, seq: usize) -> Vec<KernelSpec> {
     ]
 }
 
-/// A named, CLI-addressable workload scenario.
+/// A named, CLI-addressable workload scenario, backed by a
+/// [`ModelSpec`] (see [`WorkloadSuite::model`]).
 ///
 /// Every benchmark family instance of the paper is registered here so
 /// the CLI (`bfdf run --workload <name>`), the examples and the benches
@@ -305,21 +356,100 @@ pub struct WorkloadSuite {
 }
 
 impl WorkloadSuite {
-    /// The suite's kernel enumeration at `batch` (0 = the suite's
+    /// The suite's declarative network definition.  Lowering it
+    /// reproduces the seed kernel enumeration exactly (name, kind,
+    /// points, vectors, d_in, d_out, seq) — golden-tested in
+    /// `rust/tests/modelspec.rs`.
+    pub fn model(&self) -> ModelSpec {
+        let att = |sparsity: AttnSparsity| Block::Attention { sparsity };
+        let ffn = |expand: usize, contract: bool| Block::Ffn {
+            form: FfnForm::Bpmm,
+            expand,
+            contract,
+        };
+        let b = NetworkBuilder::new(self.name)
+            .seq(self.seq)
+            .batch(self.default_batch);
+        let built = match self.family {
+            ModelFamily::Vit => b
+                .hidden(512)
+                .named_block(att(AttnSparsity::Bpmm), vec!["VIT-AT-to_qkv".into()])
+                .named_block(
+                    ffn(4, true),
+                    vec!["VIT-FFN-L1".into(), "VIT-FFN-L2".into()],
+                )
+                .named_block(
+                    att(AttnSparsity::Fft2d),
+                    vec!["VIT-AT-all-hidden".into(), "VIT-AT-all-seq".into()],
+                ),
+            ModelFamily::Bert => {
+                let sc = scale_name(self.seq);
+                b.hidden(1024)
+                    .named_block(
+                        att(AttnSparsity::Bpmm),
+                        vec![format!("BERT-AT-to_qkv-{sc}")],
+                    )
+                    .named_block(ffn(4, false), vec![format!("BERT-FFN-L1-{sc}")])
+                    .named_block(
+                        att(AttnSparsity::Fft2d),
+                        vec![
+                            format!("BERT-AT-all-hidden-{sc}"),
+                            format!("BERT-AT-all-seq-{sc}"),
+                        ],
+                    )
+            }
+            ModelFamily::FabNet => b
+                .hidden(256)
+                .named_block(
+                    att(AttnSparsity::Fft2d),
+                    vec![
+                        format!("FABNet-{}-ATT-hidden", self.seq),
+                        format!("FABNet-{}-ATT-seq", self.seq),
+                    ],
+                )
+                .named_block(
+                    ffn(2, true),
+                    vec![
+                        format!("FABNet-{}-FFN-L1", self.seq),
+                        format!("FABNet-{}-FFN-L2", self.seq),
+                    ],
+                ),
+            ModelFamily::Vanilla => b
+                .hidden(1024)
+                .named_block(
+                    att(AttnSparsity::Fft2d),
+                    vec!["Vanilla-ATT-hidden".into(), "Vanilla-ATT-seq".into()],
+                )
+                .named_block(
+                    ffn(2, true),
+                    vec!["Vanilla-FFN-L1".into(), "Vanilla-FFN-L2".into()],
+                ),
+        };
+        built
+            .build()
+            .expect("registry suite models are statically valid")
+    }
+
+    /// The suite's kernel enumeration at `batch` (`None` = the suite's
     /// default batch).
+    pub fn kernels_at(&self, batch: Option<usize>) -> Vec<KernelSpec> {
+        self.model().kernels(batch)
+    }
+
+    /// The suite's kernel enumeration with the legacy `0 =` default
+    /// sentinel.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `kernels_at(Option<usize>)` — 0 is no longer a magic default-batch \
+                sentinel"
+    )]
     pub fn kernels(&self, batch: usize) -> Vec<KernelSpec> {
-        let batch = if batch == 0 { self.default_batch } else { batch };
-        match self.family {
-            ModelFamily::Vit => vit_kernels_seq(batch, self.seq),
-            ModelFamily::Bert => bert_kernels(batch, self.seq),
-            ModelFamily::FabNet => fabnet_kernels(batch, self.seq),
-            ModelFamily::Vanilla => vanilla_kernels_seq(batch, self.seq),
-        }
+        self.kernels_at(if batch == 0 { None } else { Some(batch) })
     }
 
     /// Kernels at the suite's default batch.
     pub fn default_kernels(&self) -> Vec<KernelSpec> {
-        self.kernels(0)
+        self.kernels_at(None)
     }
 }
 
@@ -372,7 +502,7 @@ mod tests {
 
     #[test]
     fn vit_kernel_set_shape() {
-        let ks = vit_kernels(8);
+        let ks = find_suite("vit-256").unwrap().kernels_at(Some(8));
         assert_eq!(ks.len(), 5);
         assert!(ks.iter().any(|k| k.name.contains("to_qkv")));
         assert!(ks.iter().any(|k| k.kind == KernelKind::Fft));
@@ -380,7 +510,9 @@ mod tests {
 
     #[test]
     fn sparse_flops_below_dense() {
-        for k in vit_kernels(8).iter().chain(bert_kernels(1, 4096).iter()) {
+        let mut ks = find_suite("vit-256").unwrap().kernels_at(Some(8));
+        ks.extend(find_suite("bert-4k").unwrap().kernels_at(Some(1)));
+        for k in &ks {
             assert!(
                 k.sparse_flops() < k.dense_flops(),
                 "{}: sparse {} !< dense {}",
@@ -393,7 +525,7 @@ mod tests {
 
     #[test]
     fn bert_64k_uses_long_sequence() {
-        let ks = bert_kernels(1, 64 * 1024);
+        let ks = find_suite("bert-64k").unwrap().kernels_at(Some(1));
         let at_seq = ks.iter().find(|k| k.name.contains("AT-all-seq")).unwrap();
         assert_eq!(at_seq.points, 64 * 1024);
     }
@@ -407,7 +539,7 @@ mod tests {
 
     #[test]
     fn vanilla_matches_table4_shape() {
-        let ks = vanilla_kernels(256);
+        let ks = find_suite("vanilla").unwrap().kernels_at(Some(256));
         assert_eq!(ks.len(), 4);
         assert!(ks.iter().all(|k| k.seq == 1024));
     }
@@ -454,9 +586,32 @@ mod tests {
     #[test]
     fn suite_batch_override_scales_vectors() {
         let suite = find_suite("fabnet-256").unwrap();
-        let small = suite.kernels(1);
-        let big = suite.kernels(8);
+        let small = suite.kernels_at(Some(1));
+        let big = suite.kernels_at(Some(8));
         assert_eq!(small.len(), big.len());
         assert_eq!(small[0].vectors * 8, big[0].vectors);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_batch_sentinel_still_maps_to_default() {
+        // The deprecated shim keeps the 0-means-default behavior for
+        // source compatibility until it is removed.
+        let suite = find_suite("vanilla").unwrap();
+        assert_eq!(suite.kernels(0), suite.default_kernels());
+        assert_eq!(suite.kernels(16), suite.kernels_at(Some(16)));
+    }
+
+    #[test]
+    fn suite_models_describe_hybrid_structure() {
+        // The registry is ModelSpec-backed: suite definitions are
+        // inspectable as block structures, not frozen kernel lists.
+        let fabnet = find_suite("fabnet-256").unwrap().model();
+        assert_eq!(fabnet.spec_string(), "att:fft2d,ffn:bpmm*x2");
+        assert_eq!(fabnet.hidden(), 256);
+        let bert = find_suite("bert-4k").unwrap().model();
+        assert_eq!(bert.spec_string(), "att:bpmm,ffn1:bpmm*x4,att:fft2d");
+        let vit = find_suite("vit-256").unwrap().model();
+        assert_eq!(vit.spec_string(), "att:bpmm,ffn:bpmm*x4,att:fft2d");
     }
 }

@@ -10,7 +10,16 @@ use butterfly_dataflow::dfg::microcode::lower_stage;
 use butterfly_dataflow::dfg::stages::{plan_kernel, StageDfg};
 use butterfly_dataflow::sim::{simulate, SimOptions};
 use butterfly_dataflow::util::prop::check;
-use butterfly_dataflow::workloads::{fabnet_kernels, vanilla_kernels, KernelSpec};
+use butterfly_dataflow::workloads::{find_suite, KernelSpec};
+
+fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
+    find_suite("vanilla").unwrap().kernels_at(Some(batch))
+}
+
+fn fabnet_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
+    let name = format!("fabnet-{}", butterfly_dataflow::workloads::scale_name(seq));
+    find_suite(&name).unwrap().kernels_at(Some(batch))
+}
 
 fn spec(kind: KernelKind, points: usize, vectors: usize) -> KernelSpec {
     KernelSpec {

@@ -1,0 +1,211 @@
+//! ModelSpec API tests: the golden guarantee that every registry
+//! suite's declarative definition lowers to the exact seed kernel
+//! enumeration, a randomized property over valid hybrid schedules
+//! (sparse wins + grammar round-trip), and end-to-end hybrid execution
+//! through `Session::run_network`.
+
+use butterfly_dataflow::coordinator::Session;
+use butterfly_dataflow::util::prop::check;
+use butterfly_dataflow::util::rng::Rng;
+use butterfly_dataflow::workloads::spec::{
+    AttnSparsity, Block, FfnForm, ModelSpec, NetworkBuilder, parse_spec_layers,
+};
+use butterfly_dataflow::workloads::{self, KernelSpec, ModelFamily, SUITES};
+
+/// The seed enumeration functions are the golden reference the new
+/// lowering must reproduce field-for-field.
+#[allow(deprecated)]
+fn seed_enumeration(suite: &workloads::WorkloadSuite, batch: usize) -> Vec<KernelSpec> {
+    match suite.family {
+        ModelFamily::Vit => workloads::vit_kernels_seq(batch, suite.seq),
+        ModelFamily::Bert => workloads::bert_kernels(batch, suite.seq),
+        ModelFamily::FabNet => workloads::fabnet_kernels(batch, suite.seq),
+        ModelFamily::Vanilla => workloads::vanilla_kernels_seq(batch, suite.seq),
+    }
+}
+
+#[test]
+fn golden_suite_lowering_matches_seed_enumerations() {
+    // Acceptance gate: all 10 registered suites are ModelSpec-backed and
+    // lower to kernel lists identical to the seed enumerations — name,
+    // kind, points, vectors, d_in, d_out and seq — at the default batch
+    // and at an override.
+    for suite in SUITES {
+        for batch in [suite.default_batch, 3] {
+            let golden = seed_enumeration(suite, batch);
+            let lowered = suite.kernels_at(Some(batch));
+            assert_eq!(
+                lowered.len(),
+                golden.len(),
+                "{}: kernel count diverged at batch {batch}",
+                suite.name
+            );
+            for (got, want) in lowered.iter().zip(&golden) {
+                assert_eq!(got, want, "{}: kernel diverged at batch {batch}", suite.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_default_batch_matches_seed_default() {
+    for suite in SUITES {
+        assert_eq!(
+            suite.default_kernels(),
+            seed_enumeration(suite, suite.default_batch),
+            "{}: default-batch lowering diverged",
+            suite.name
+        );
+    }
+}
+
+/// Generate a random valid hybrid network.
+fn random_network(rng: &mut Rng) -> ModelSpec {
+    // Floors chosen to keep every generated network valid: fft2d needs
+    // hidden/seq >= 32 (validation would reject smaller).
+    let hidden = rng.pow2(32, 1024);
+    let seq = rng.pow2(32, 4096);
+    let heads = rng.pow2(1, 8).min(hidden);
+    let depth = rng.range(1, 4);
+    let mut b = NetworkBuilder::new("prop-net")
+        .hidden(hidden)
+        .seq(seq)
+        .heads(heads)
+        .batch(rng.range(1, 16));
+    for layer in 0..depth {
+        if layer > 0 {
+            b = b.next_layer();
+        }
+        let blocks = rng.range(1, 4);
+        for _ in 0..blocks {
+            b = if rng.chance(0.5) {
+                let sparsity = match rng.below(3) {
+                    0 => AttnSparsity::Dense,
+                    1 => AttnSparsity::Bpmm,
+                    _ => AttnSparsity::Fft2d,
+                };
+                b.attention(sparsity)
+            } else {
+                let form = if rng.chance(0.7) { FfnForm::Bpmm } else { FfnForm::Dense };
+                let expand = rng.pow2(1, 8);
+                if rng.chance(0.8) {
+                    b.ffn(form, expand)
+                } else {
+                    b.ffn_expand_only(form, expand)
+                }
+            };
+        }
+    }
+    b.build().expect("generated network must validate")
+}
+
+#[test]
+fn prop_valid_hybrids_save_flops_and_round_trip() {
+    // Every valid hybrid schedule satisfies sparse_flops < dense_flops
+    // for its sparse layers, and its canonical spec string round-trips
+    // through the grammar (parse -> format -> parse).
+    check("hybrid-schedules", 100, |rng| {
+        let net = random_network(rng);
+        for k in net.kernels(Some(rng.range(1, 8))) {
+            assert!(
+                k.sparse_flops() < k.dense_flops(),
+                "{}: sparse {} !< dense {}",
+                k.name,
+                k.sparse_flops(),
+                k.dense_flops()
+            );
+        }
+        let rendered = net.spec_string();
+        let reparsed = parse_spec_layers(&rendered).expect("canonical spec must parse");
+        assert_eq!(
+            &reparsed,
+            net.layers(),
+            "grammar round-trip diverged for '{rendered}'"
+        );
+        let rerendered = workloads::spec::format_spec_layers(&reparsed);
+        assert_eq!(rendered, rerendered, "format is not a fixed point");
+    });
+}
+
+#[test]
+fn prop_lowering_provenance_covers_every_block() {
+    check("lowering-provenance", 40, |rng| {
+        let net = random_network(rng);
+        let lowered = net.lower(None);
+        let blocks_total: usize = net.layers().iter().map(Vec::len).sum();
+        assert_eq!(lowered.len(), blocks_total);
+        let mut last_layer = 0;
+        for lb in &lowered {
+            assert!(lb.layer >= last_layer, "layers must be emitted in order");
+            last_layer = lb.layer;
+            // Every block carries either kernels or a dense estimate.
+            assert!(
+                !lb.kernels.is_empty() || lb.dense.is_some(),
+                "block {} lowered to nothing",
+                lb.label
+            );
+        }
+        assert_eq!(last_layer, net.depth() - 1, "every layer must be lowered");
+    });
+}
+
+#[test]
+fn hybrid_network_mixing_sparsities_runs_end_to_end() {
+    // Acceptance gate: a network mixing two attention sparsities in one
+    // run produces per-layer and total metrics.
+    let net = NetworkBuilder::from_spec(
+        "mixed",
+        "att:fft2d,ffn:bpmm*x4;att:bpmm,ffn:bpmm*x2",
+    )
+    .unwrap()
+    .hidden(256)
+    .seq(128)
+    .batch(4)
+    .build()
+    .unwrap();
+    let session = Session::builder().build();
+    let r = session.run_network(&net, None).unwrap();
+    assert_eq!(r.layers.len(), 2);
+    assert_eq!(r.layers[0].blocks[0].label, "att:fft2d");
+    assert_eq!(r.layers[1].blocks[0].label, "att:bpmm");
+    assert!(r.layers.iter().all(|l| l.time_s > 0.0 && l.energy_j > 0.0));
+    let t: f64 = r.layers.iter().map(|l| l.time_s).sum();
+    assert!((r.batch_time_s - t).abs() < 1e-12, "totals must sum the layers");
+    assert!(r.latency_ms > 0.0 && r.throughput > 0.0 && r.energy_eff > 0.0);
+}
+
+#[test]
+fn suite_models_and_direct_builders_agree() {
+    // Composing the vanilla structure by hand must lower to the same
+    // shapes (modulo kernel names) as the registry model.
+    let by_hand = ModelSpec::builder("vanilla-by-hand")
+        .hidden(1024)
+        .seq(1024)
+        .batch(256)
+        .attention(AttnSparsity::Fft2d)
+        .ffn(FfnForm::Bpmm, 2)
+        .build()
+        .unwrap();
+    let registry = workloads::find_suite("vanilla").unwrap().model();
+    let a = by_hand.kernels(Some(8));
+    let b = registry.kernels(Some(8));
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!((x.kind, x.points, x.vectors, x.d_in, x.d_out, x.seq),
+                   (y.kind, y.points, y.vectors, y.d_in, y.d_out, y.seq));
+    }
+}
+
+#[test]
+fn expand_only_block_matches_bert_ffn_slice() {
+    let net = ModelSpec::builder("slice")
+        .hidden(1024)
+        .seq(4096)
+        .block(Block::Ffn { form: FfnForm::Bpmm, expand: 4, contract: false })
+        .build()
+        .unwrap();
+    let ks = net.kernels(Some(1));
+    assert_eq!(ks.len(), 1);
+    assert_eq!(ks[0].vectors, 4 * 4096);
+    assert_eq!(ks[0].d_out, 4 * 1024);
+}

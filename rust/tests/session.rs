@@ -5,7 +5,15 @@
 use butterfly_dataflow::arch::ArchConfig;
 use butterfly_dataflow::coordinator::Session;
 use butterfly_dataflow::dfg::graph::KernelKind;
-use butterfly_dataflow::workloads::{vanilla_kernels, vit_kernels, KernelSpec};
+use butterfly_dataflow::workloads::{find_suite, KernelSpec};
+
+fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
+    find_suite("vanilla").unwrap().kernels_at(Some(batch))
+}
+
+fn vit_kernels(batch: usize) -> Vec<KernelSpec> {
+    find_suite("vit-256").unwrap().kernels_at(Some(batch))
+}
 
 fn spec(kind: KernelKind, points: usize, vectors: usize) -> KernelSpec {
     KernelSpec {
