@@ -62,8 +62,23 @@ pub struct KernelResult {
     /// Effective power (W) and energy (J).
     pub power_w: f64,
     pub energy_j: f64,
-    /// DDR bytes streamed.
+    /// DDR bytes streamed (historical accounting: the window
+    /// extrapolation scales the whole window traffic, weights
+    /// included — the energy model is calibrated against this).
     pub dma_bytes: f64,
+    /// DDR channel occupancy (s) of the *gating* stream — weights once
+    /// per stage plus the extrapolated per-iteration input traffic — at
+    /// the aggregate bandwidth.  Outputs drain on the writeback half of
+    /// the channel budget and never gate compute (matching the
+    /// simulator), so this is deliberately not `dma_bytes / bw` (see
+    /// `dma_bytes`).  This is the streaming side of the coarse overlap
+    /// model.
+    pub dma_time_s: f64,
+    /// Cold-start DMA prologue (s): per-stage fill (setup + weight
+    /// preamble + first input chunk) summed over the plan's stages;
+    /// charged once per stage regardless of the extrapolated iteration
+    /// count.  Always ≤ `time_s`.
+    pub fill_time_s: f64,
     /// The underlying plan (stage structure).
     pub plan: KernelPlan,
 }

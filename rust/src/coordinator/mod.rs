@@ -8,8 +8,13 @@
 //! workloads ([`Session::stream`], the Table-IV driver), and executes
 //! whole hybrid networks ([`Session::run_network`], producing per-layer
 //! [`NetworkResult`] metrics from a declarative
-//! [`crate::workloads::spec::ModelSpec`]).  Results serialize through
-//! [`Report`] ([`report`]) for benches and CI.
+//! [`crate::workloads::spec::ModelSpec`]).  Streamed schedules are
+//! post-processed by the coarse-grained overlap model ([`pipeline`]):
+//! DMA/compute double buffering per kernel, inter-kernel/inter-layer
+//! pipelining of consecutive batch elements, and batch sharding across
+//! replicated arrays (`Session::builder().overlap(..).arrays(..)`).
+//! Results serialize through [`Report`] ([`report`]) for benches and
+//! CI.
 //!
 //! The historical one-shot free functions ([`run_kernel`],
 //! [`run_kernel_with`], [`stream_workload`]) are deprecated wrappers
@@ -18,12 +23,14 @@
 
 pub mod experiment;
 pub mod network;
+pub mod pipeline;
 pub mod report;
 pub mod session;
 pub mod streaming;
 
 pub use experiment::{ExperimentConfig, KernelResult};
 pub use network::{BlockResult, DenseResult, LayerResult, NetworkResult};
+pub use pipeline::{Overlap, OverlapEstimate, PipelineConfig, StageCost};
 pub use report::{Report, SweepRow};
 pub use session::{CacheStats, Session, SessionBuilder};
 pub use streaming::StreamResult;

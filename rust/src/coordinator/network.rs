@@ -23,6 +23,8 @@ use crate::energy;
 use crate::workloads::spec::DenseCost;
 
 use super::experiment::KernelResult;
+use super::pipeline::{self, Overlap, PipelineConfig, StageCost};
+use super::streaming;
 
 /// Fraction of the array's peak MACs a dense GEMM sustains (no
 /// butterfly locality; systolic-style streaming with edge effects).
@@ -116,19 +118,42 @@ pub struct NetworkResult {
     /// Batch the network was lowered at.
     pub batch: usize,
     pub layers: Vec<LayerResult>,
-    /// Total batch time (s).
+    /// Effective batch makespan (s) under the configured overlap mode
+    /// and array count (equals `serial_time_s` for `Overlap::None` on
+    /// a single array; with more arrays even serial mode shards the
+    /// batch).
     pub batch_time_s: f64,
+    /// Serial reference: sum of all layer times (s).
+    pub serial_time_s: f64,
+    /// Overlapped makespan (s); always ≤ `serial_time_s`, and equal to
+    /// `batch_time_s`.
+    pub overlapped_time_s: f64,
+    /// Achieved fraction of the shard's aggregate capacity bound
+    /// (total compute vs total gating DMA), in (0, 1].
+    pub pipeline_efficiency: f64,
+    /// Replicated dataflow arrays the batch was sharded across.
+    pub arrays: usize,
+    /// Overlap mode the schedule was computed under.
+    pub overlap: Overlap,
     /// Per-prediction latency (ms).
     pub latency_ms: f64,
     /// Predictions per second.
     pub throughput: f64,
-    /// Time-weighted effective power (W).
+    /// Time-weighted effective power (W) over all arrays.
     pub power_w: f64,
+    /// Total energy (J): active block energy plus idle-replica energy.
     pub energy_j: f64,
     /// Predictions per joule.
     pub energy_eff: f64,
     /// Cycle-weighted utilization over all butterfly kernels.
     pub util: [f64; 4],
+}
+
+impl NetworkResult {
+    /// Speedup of the overlapped schedule over the serial sum (≥ 1).
+    pub fn speedup(&self) -> f64 {
+        pipeline::speedup(self.serial_time_s, self.overlapped_time_s)
+    }
 }
 
 /// Cycle-weighted average utilization of a kernel set.
@@ -149,13 +174,19 @@ fn weighted_util<'a>(kernels: impl Iterator<Item = &'a KernelResult>) -> [f64; 4
     acc
 }
 
-/// Roll lowered-order block results up into layers and network totals.
-/// Blocks must arrive in lowering order (grouped by ascending layer).
+/// Roll lowered-order block results up into layers and network totals,
+/// then schedule the whole kernel/block sequence under `cfg` (see
+/// [`super::pipeline`]): consecutive batch elements occupy successive
+/// layers concurrently, and the batch shards across `cfg.arrays`
+/// replicated arrays.  Blocks must arrive in lowering order (grouped by
+/// ascending layer).
 pub(crate) fn assemble(
     network: String,
     spec: String,
     batch: usize,
     blocks: Vec<BlockResult>,
+    cfg: PipelineConfig,
+    idle_power_w: f64,
 ) -> NetworkResult {
     let mut layers: Vec<LayerResult> = Vec::new();
     for b in blocks {
@@ -176,26 +207,55 @@ pub(crate) fn assemble(
     for l in &mut layers {
         l.util = weighted_util(l.blocks.iter().flat_map(|b| b.kernels.iter()));
     }
-    let batch_time_s: f64 = layers.iter().map(|l| l.time_s).sum();
-    let energy_j: f64 = layers.iter().map(|l| l.energy_j).sum();
+    let serial_time_s: f64 = layers.iter().map(|l| l.time_s).sum();
+    let active_energy_j: f64 = layers.iter().map(|l| l.energy_j).sum();
     let util = weighted_util(
         layers
             .iter()
             .flat_map(|l| l.blocks.iter())
             .flat_map(|b| b.kernels.iter()),
     );
-    let latency_s = batch_time_s / batch.max(1) as f64;
+    // Pipeline stages in lowering order: every simulated butterfly
+    // kernel is a stage with its measured DMA split; dense roofline
+    // blocks are serial-only stages (no measured split to overlap).
+    let stages: Vec<StageCost> = layers
+        .iter()
+        .flat_map(|l| l.blocks.iter())
+        .flat_map(|b| {
+            b.kernels
+                .iter()
+                .map(StageCost::of_kernel)
+                .chain(b.dense.iter().map(|d| StageCost::serial_only(d.time_s)))
+        })
+        .collect();
+    let est = pipeline::schedule(&stages, batch.max(1), cfg, idle_power_w);
+    // Serial mode on an undivided batch is the legacy accounting: keep
+    // the layer-grouped sum (same floats as v0.3) as the makespan.
+    let full_shard = batch.max(1).div_ceil(cfg.arrays.max(1)) == batch.max(1);
+    let legacy = cfg.overlap == Overlap::None && full_shard;
+    // The estimate's serial reference sums per-kernel, ours per-layer;
+    // clamp so `overlapped ≤ serial` holds exactly, not up-to-rounding.
+    let batch_time_s =
+        if legacy { serial_time_s } else { est.overlapped_time_s.min(serial_time_s) };
+    let energy_j = active_energy_j + est.idle_energy_j;
+    let (latency_ms, throughput, power_w, energy_eff) =
+        streaming::per_prediction_metrics(batch.max(1), batch_time_s, energy_j);
     NetworkResult {
         network,
         spec,
         batch,
         layers,
         batch_time_s,
-        latency_ms: latency_s * 1e3,
-        throughput: if latency_s > 0.0 { 1.0 / latency_s } else { 0.0 },
-        power_w: if batch_time_s > 0.0 { energy_j / batch_time_s } else { 0.0 },
+        serial_time_s,
+        overlapped_time_s: batch_time_s,
+        pipeline_efficiency: est.pipeline_efficiency,
+        arrays: est.arrays,
+        overlap: est.overlap,
+        latency_ms,
+        throughput,
+        power_w,
         energy_j,
-        energy_eff: if energy_j > 0.0 { batch as f64 / energy_j } else { 0.0 },
+        energy_eff,
         util,
     }
 }
@@ -266,6 +326,35 @@ mod tests {
             stats.lowerings < kernel_count as u64,
             "repeated layers must reuse lowered programs: {stats:?}"
         );
+    }
+
+    #[test]
+    fn network_pipeline_never_exceeds_serial() {
+        use crate::coordinator::pipeline::{Overlap, PipelineConfig};
+        let session = Session::builder().build();
+        let model = mixed_model();
+        let legacy = session.run_network(&model, None).unwrap();
+        assert_eq!(legacy.batch_time_s, legacy.serial_time_s);
+        assert_eq!(legacy.overlap, Overlap::None);
+        for (overlap, arrays) in
+            [(Overlap::Dma, 1), (Overlap::Pipeline, 1), (Overlap::Pipeline, 4)]
+        {
+            let r = session
+                .run_network_with(&model, None, PipelineConfig::new(overlap, arrays))
+                .unwrap();
+            assert!(
+                r.overlapped_time_s <= r.serial_time_s,
+                "{overlap:?}/{arrays}: {} > {}",
+                r.overlapped_time_s,
+                r.serial_time_s
+            );
+            assert!(r.pipeline_efficiency > 0.0 && r.pipeline_efficiency <= 1.0);
+            assert!(r.speedup() >= 1.0);
+            assert_eq!(r.arrays, arrays);
+            // The per-layer simulated breakdown is mode-independent.
+            assert_eq!(r.layers.len(), legacy.layers.len());
+            assert_eq!(r.serial_time_s, legacy.serial_time_s);
+        }
     }
 
     #[test]

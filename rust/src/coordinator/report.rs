@@ -119,6 +119,8 @@ pub fn kernel_json(r: &KernelResult) -> Json {
         ("power_w", num(r.power_w)),
         ("energy_j", num(r.energy_j)),
         ("dma_bytes", num(r.dma_bytes)),
+        ("dma_time_s", num(r.dma_time_s)),
+        ("fill_time_s", num(r.fill_time_s)),
     ])
 }
 
@@ -127,9 +129,15 @@ pub fn stream_json(r: &StreamResult) -> Json {
     obj(vec![
         ("batch", num(r.batch as f64)),
         ("batch_time_s", num(r.batch_time_s)),
+        ("serial_time_s", num(r.serial_time_s)),
+        ("overlapped_time_s", num(r.overlapped_time_s)),
+        ("pipeline_efficiency", num(r.pipeline_efficiency)),
+        ("arrays", num(r.arrays as f64)),
+        ("overlap", s(r.overlap.name())),
         ("latency_ms", num(r.latency_ms)),
         ("throughput", num(r.throughput)),
         ("power_w", num(r.power_w)),
+        ("energy_j", num(r.energy_j)),
         ("energy_eff", num(r.energy_eff)),
         ("kernels", arr(r.kernels.iter().map(kernel_json).collect())),
     ])
@@ -142,6 +150,11 @@ pub fn network_json(r: &NetworkResult) -> Json {
         ("spec", s(&r.spec)),
         ("batch", num(r.batch as f64)),
         ("batch_time_s", num(r.batch_time_s)),
+        ("serial_time_s", num(r.serial_time_s)),
+        ("overlapped_time_s", num(r.overlapped_time_s)),
+        ("pipeline_efficiency", num(r.pipeline_efficiency)),
+        ("arrays", num(r.arrays as f64)),
+        ("overlap", s(r.overlap.name())),
         ("latency_ms", num(r.latency_ms)),
         ("throughput", num(r.throughput)),
         ("power_w", num(r.power_w)),
@@ -261,8 +274,18 @@ mod tests {
         };
         let parsed = json::parse(&report.render()).unwrap();
         assert_eq!(parsed.req_str("report").unwrap(), "stream");
-        let kernels = parsed.req("result").unwrap().get("kernels").unwrap();
+        let result = parsed.req("result").unwrap();
+        let kernels = result.get("kernels").unwrap();
         assert_eq!(kernels.as_arr().unwrap().len(), 2);
+        // The overlap-schedule fields are part of the stable layout.
+        assert_eq!(result.req_str("overlap").unwrap(), "none");
+        assert_eq!(result.req_f64("arrays").unwrap(), 1.0);
+        assert!(result.req_f64("serial_time_s").unwrap() > 0.0);
+        assert!(
+            result.req_f64("overlapped_time_s").unwrap()
+                <= result.req_f64("serial_time_s").unwrap()
+        );
+        assert!(result.req_f64("pipeline_efficiency").unwrap() > 0.0);
         // The duplicate spec must have hit the stage cache.
         assert!(parsed.req("cache").unwrap().req_f64("stage_hits").unwrap() >= 1.0);
     }

@@ -5,35 +5,100 @@
 //! PE array computation.  The average execution time of the sequence
 //! batch is estimated as the latency result."  (§VI-H)
 //!
-//! The driver itself is [`super::Session::stream`]: every kernel of the
-//! workload runs through the simulator (DMA overlap is inside the
-//! engine, duplicate kernels hit the session's plan cache, independent
-//! kernels fan out across threads), the kernel times are summed, and the
-//! per-prediction latency, throughput, effective power and energy
-//! efficiency are reported.  [`stream_workload`] remains as a
-//! deprecated wrapper over a process-wide shared session.
+//! The driver is [`super::Session::stream`].  Two layers produce the
+//! numbers:
+//!
+//! * **Simulated** — every kernel runs through the cycle-level
+//!   simulator (per-iteration DMA gating, SPM ports, NoC contention;
+//!   duplicate kernels hit the session's plan cache, independent
+//!   kernels fan out across threads).  The per-kernel times, energies
+//!   and traffic counters are simulation outputs.
+//! * **Analytically overlapped** — the kernel *sequence* is then
+//!   scheduled by [`super::pipeline`]: double-buffered DMA/compute
+//!   overlap per kernel (prologue fill + steady-state
+//!   `max(compute, dma)` + drain), inter-kernel pipelining of
+//!   consecutive batch elements (floored by the per-array capacity
+//!   bound — co-resident stages share the PEs and the DDR channel),
+//!   and static batch sharding across `arrays` replicated dataflow
+//!   arrays.  [`StreamResult`] reports
+//!   both the serial reference ([`StreamResult::serial_time_s`], the
+//!   plain sum of kernel times) and the overlapped makespan
+//!   ([`StreamResult::overlapped_time_s`]); the per-prediction metrics
+//!   (latency, throughput, power, energy efficiency) follow the
+//!   session's configured mode.
+//!
+//! Configure via `Session::builder().overlap(..).arrays(..)` or per
+//! call with [`super::Session::stream_with`]; on the CLI the knobs are
+//! `bfdf run|stream --overlap {none,dma,pipeline} --arrays N`.  The
+//! library default (`Overlap::None`, one array) reproduces the legacy
+//! serial accounting bit-for-bit; the CLI defaults to the
+//! paper-faithful `--overlap pipeline`.  [`stream_workload`] remains as
+//! a deprecated wrapper over a process-wide shared session (serial
+//! mode).
 
 use crate::workloads::KernelSpec;
 
 use super::experiment::{ExperimentConfig, KernelResult};
+use super::pipeline::Overlap;
 
 /// End-to-end streaming result.
 #[derive(Debug, Clone)]
 pub struct StreamResult {
-    /// Per-kernel breakdown.
+    /// Per-kernel breakdown (simulated; serial reference numbers).
     pub kernels: Vec<KernelResult>,
-    /// Total batch time (s).
-    pub batch_time_s: f64,
     /// Batch size streamed.
     pub batch: usize,
+    /// Effective batch makespan (s) under the configured overlap mode
+    /// and array count (equals `serial_time_s` for `Overlap::None` on
+    /// a single array; with more arrays even serial mode shards the
+    /// batch).
+    pub batch_time_s: f64,
+    /// Serial reference: plain sum of the simulated kernel times (s).
+    pub serial_time_s: f64,
+    /// Overlapped makespan (s); always ≤ `serial_time_s`, and equal to
+    /// `batch_time_s`.
+    pub overlapped_time_s: f64,
+    /// Achieved fraction of the shard's aggregate capacity bound
+    /// (total compute vs total gating DMA), in (0, 1].
+    pub pipeline_efficiency: f64,
+    /// Replicated dataflow arrays the batch was sharded across.
+    pub arrays: usize,
+    /// Overlap mode the schedule was computed under.
+    pub overlap: Overlap,
     /// Per-prediction latency (ms) — the Table IV metric.
     pub latency_ms: f64,
     /// Predictions per second.
     pub throughput: f64,
-    /// Time-weighted effective power (W).
+    /// Time-weighted effective power (W) over all arrays.
     pub power_w: f64,
+    /// Total energy (J): active kernel energy plus idle-replica energy.
+    pub energy_j: f64,
     /// Predictions per joule.
     pub energy_eff: f64,
+}
+
+impl StreamResult {
+    /// Speedup of the overlapped schedule over the serial sum (≥ 1).
+    pub fn speedup(&self) -> f64 {
+        super::pipeline::speedup(self.serial_time_s, self.overlapped_time_s)
+    }
+}
+
+/// Per-prediction metrics `(latency_ms, throughput, power_w,
+/// energy_eff)` from a batch makespan and total energy, with every
+/// division guarded: degenerate inputs (zero time or energy) yield 0.0
+/// instead of `inf`/`NaN`.
+pub(crate) fn per_prediction_metrics(
+    batch: usize,
+    batch_time_s: f64,
+    energy_j: f64,
+) -> (f64, f64, f64, f64) {
+    let latency_s = batch_time_s / batch as f64;
+    let latency_ms = latency_s * 1e3;
+    let throughput = if latency_s > 0.0 { 1.0 / latency_s } else { 0.0 };
+    let power_w = if batch_time_s > 0.0 { energy_j / batch_time_s } else { 0.0 };
+    let energy_eff = if energy_j > 0.0 { batch as f64 / energy_j } else { 0.0 };
+    (latency_ms, throughput, power_w, energy_eff)
 }
 
 /// Stream a batched workload through the design.
@@ -56,6 +121,7 @@ pub fn stream_workload(
 mod tests {
     use super::*;
     use crate::arch::ArchConfig;
+    use crate::coordinator::pipeline::{Overlap, PipelineConfig};
     use crate::coordinator::Session;
     use crate::workloads::find_suite;
 
@@ -76,15 +142,24 @@ mod tests {
         assert!((r.throughput - 1000.0 / r.latency_ms).abs() < 1e-6);
         assert!(r.power_w > 0.5 && r.power_w < 6.0, "power {}", r.power_w);
         assert!(r.energy_eff > 0.0);
+        // The library default is the legacy serial accounting.
+        assert_eq!(r.overlap, Overlap::None);
+        assert_eq!(r.arrays, 1);
+        assert_eq!(r.batch_time_s, r.serial_time_s);
+        assert_eq!(r.batch_time_s, r.overlapped_time_s);
     }
 
     #[test]
     fn throughput_is_batch_invariant_in_steady_state() {
+        // Per-prediction throughput must be nearly batch-independent
+        // once the per-stage fills are amortized: time(B) ≈ F + B·s
+        // with F ≪ B·s at these scales, so thr(8)/thr(32) sits just
+        // below 1 and can exceed it only by iteration-rounding noise.
         let s = table4_session();
         let a = s.stream(&vanilla_kernels(8), 8).unwrap();
         let b = s.stream(&vanilla_kernels(32), 32).unwrap();
         let ratio = a.throughput / b.throughput;
-        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+        assert!((0.9..1.01).contains(&ratio), "ratio {ratio}");
     }
 
     #[test]
@@ -94,6 +169,48 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("batch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn degenerate_metrics_are_zero_not_nan() {
+        // Regression: throughput and energy efficiency used to divide
+        // by unguarded latency/energy; zero inputs must yield finite
+        // zeros exactly like the power branch always did.
+        let (latency_ms, throughput, power_w, energy_eff) =
+            per_prediction_metrics(8, 0.0, 0.0);
+        assert_eq!(latency_ms, 0.0);
+        assert_eq!(throughput, 0.0);
+        assert_eq!(power_w, 0.0);
+        assert_eq!(energy_eff, 0.0);
+        for v in [latency_ms, throughput, power_w, energy_eff] {
+            assert!(v.is_finite());
+        }
+        // Positive inputs keep the exact legacy expressions.
+        let (l, t, p, e) = per_prediction_metrics(4, 2.0, 8.0);
+        assert_eq!(l, 500.0);
+        assert_eq!(t, 2.0);
+        assert_eq!(p, 4.0);
+        assert_eq!(e, 0.5);
+    }
+
+    #[test]
+    fn overlap_modes_order_on_a_real_workload() {
+        let s = table4_session();
+        let ks = vanilla_kernels(16);
+        let t = |overlap, arrays| {
+            s.stream_with(&ks, 16, PipelineConfig::new(overlap, arrays))
+                .unwrap()
+                .overlapped_time_s
+        };
+        let none = t(Overlap::None, 1);
+        let dma = t(Overlap::Dma, 1);
+        let pipe = t(Overlap::Pipeline, 1);
+        assert!(dma <= none, "dma {dma} > none {none}");
+        assert!(pipe <= dma, "pipeline {pipe} > dma {dma}");
+        assert!(pipe > 0.0);
+        // Sharding across arrays cuts the makespan further.
+        let pipe4 = t(Overlap::Pipeline, 4);
+        assert!(pipe4 < pipe, "4 arrays {pipe4} !< 1 array {pipe}");
     }
 
     #[test]

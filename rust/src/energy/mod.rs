@@ -22,23 +22,55 @@
 use crate::arch::{ArchConfig, UnitKind};
 use crate::sim::SimStats;
 
+/// Table III unit classes.  Power partitioning matches on this, never on
+/// the display name, so renaming a row cannot silently misattribute its
+/// power (see [`power_partition`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PowerClass {
+    ContextRouter,
+    DataRouter,
+    ControlUnit,
+    InstBlocks,
+    SimdRam,
+    FuncUnits,
+}
+
+impl PowerClass {
+    pub const ALL: [PowerClass; 6] = [
+        PowerClass::ContextRouter,
+        PowerClass::DataRouter,
+        PowerClass::ControlUnit,
+        PowerClass::InstBlocks,
+        PowerClass::SimdRam,
+        PowerClass::FuncUnits,
+    ];
+}
+
 /// One Table III row.
 #[derive(Debug, Clone)]
 pub struct UnitPower {
+    pub class: PowerClass,
     pub name: &'static str,
     pub area_mm2: f64,
     pub active_mw: f64,
 }
 
+/// Total synthesized area of one PE including glue logic (the Table III
+/// "total" row); the glue term is derived as `PE_AREA_MM2 - Σ row areas`
+/// rather than hardcoded, so editing a row keeps the total honest.
+const PE_AREA_MM2: f64 = 0.985;
+
 /// Table III rows for the SIMD32 PE.
 pub fn table3_rows() -> Vec<UnitPower> {
+    use PowerClass as C;
+    let row = |class, name, area_mm2, active_mw| UnitPower { class, name, area_mm2, active_mw };
     vec![
-        UnitPower { name: "ContextRouter", area_mm2: 0.018, active_mw: 6.37 },
-        UnitPower { name: "DataRouter", area_mm2: 0.108, active_mw: 62.21 },
-        UnitPower { name: "ControlUnit", area_mm2: 0.002, active_mw: 2.58 },
-        UnitPower { name: "InstBlocks", area_mm2: 0.039, active_mw: 9.23 },
-        UnitPower { name: "SIMD RAM", area_mm2: 0.106, active_mw: 32.13 },
-        UnitPower { name: "FuncUnits (SIMD32)", area_mm2: 0.316, active_mw: 322.16 },
+        row(C::ContextRouter, "ContextRouter", 0.018, 6.37),
+        row(C::DataRouter, "DataRouter", 0.108, 62.21),
+        row(C::ControlUnit, "ControlUnit", 0.002, 2.58),
+        row(C::InstBlocks, "InstBlocks", 0.039, 9.23),
+        row(C::SimdRam, "SIMD RAM", 0.106, 32.13),
+        row(C::FuncUnits, "FuncUnits (SIMD32)", 0.316, 322.16),
     ]
 }
 
@@ -59,6 +91,44 @@ pub fn array_power_w(arch: &ArchConfig) -> f64 {
 
 /// Idle fraction of dynamic power (clock tree + leakage at 12 nm).
 const IDLE_FRACTION: f64 = 0.35;
+
+/// Partition of the array power (W) into the four activity-scaled
+/// groups `(func, router, ram, ctrl)`, by the Table III breakdown.
+///
+/// Rows are looked up by [`PowerClass`], exhaustively: every class must
+/// appear in [`table3_rows`] exactly once (panics otherwise), so a
+/// renamed row can never silently fall out of its group.
+fn power_partition(arch: &ArchConfig) -> (f64, f64, f64, f64) {
+    let total = array_power_w(arch);
+    let rows = table3_rows();
+    let pe_total: f64 = rows.iter().map(|r| r.active_mw).sum();
+    let frac = |class: PowerClass| -> f64 {
+        let mut matches = rows.iter().filter(|r| r.class == class);
+        let row = matches
+            .next()
+            .unwrap_or_else(|| panic!("table3_rows is missing the {class:?} row"));
+        assert!(
+            matches.next().is_none(),
+            "table3_rows lists {class:?} more than once"
+        );
+        row.active_mw / pe_total
+    };
+    let p_func = total * frac(PowerClass::FuncUnits);
+    let p_router = total * (frac(PowerClass::DataRouter) + frac(PowerClass::ContextRouter));
+    let p_ram = total * frac(PowerClass::SimdRam);
+    let p_ctrl = total * (frac(PowerClass::ControlUnit) + frac(PowerClass::InstBlocks));
+    (p_func, p_router, p_ram, p_ctrl)
+}
+
+/// Power (W) of a powered-but-idle array: clock tree + leakage on the
+/// dynamic units plus the always-on control plane.  This is what a
+/// replicated dataflow array burns while another shard's longer
+/// schedule keeps the batch in flight
+/// (see [`crate::coordinator::pipeline`]).
+pub fn idle_power_w(arch: &ArchConfig) -> f64 {
+    let (p_func, p_router, p_ram, p_ctrl) = power_partition(arch);
+    IDLE_FRACTION * (p_func + p_router + p_ram) + p_ctrl
+}
 
 /// Effective power (W) for a run with measured activity.
 ///
@@ -96,17 +166,9 @@ pub fn effective_power_w(arch: &ArchConfig, stats: &SimStats) -> f64 {
     } else {
         flow
     };
-    let total = array_power_w(arch);
-    // Partition the array power by the Table III breakdown.
-    let rows = table3_rows();
-    let pe_total: f64 = rows.iter().map(|r| r.active_mw).sum();
-    let frac = |name: &str| -> f64 {
-        rows.iter().find(|r| r.name.starts_with(name)).unwrap().active_mw / pe_total
-    };
-    let p_func = total * frac("FuncUnits");
-    let p_router = total * (frac("DataRouter") + frac("ContextRouter"));
-    let p_ram = total * frac("SIMD RAM");
-    let p_ctrl = total * (frac("ControlUnit") + frac("InstBlocks"));
+    // Partition the array power by the Table III breakdown (by class,
+    // not by name — see `power_partition`).
+    let (p_func, p_router, p_ram, p_ctrl) = power_partition(arch);
     let act = |p: f64, u: f64| p * (IDLE_FRACTION + (1.0 - IDLE_FRACTION) * u.min(1.0));
     act(p_func, cal) + act(p_router, router_act) + act(p_ram, ram_act) + p_ctrl
 }
@@ -118,9 +180,13 @@ pub fn energy_j(arch: &ArchConfig, stats: &SimStats, seconds: f64) -> f64 {
 
 /// Total synthesized area of the PE array (mm²).
 pub fn array_area_mm2(arch: &ArchConfig) -> f64 {
-    let pe = table3_rows().iter().map(|r| r.area_mm2).sum::<f64>()
-        + (0.985 - 0.589); // glue (total 0.985 per Table III)
-    pe * arch.num_pes() as f64
+    let units: f64 = table3_rows().iter().map(|r| r.area_mm2).sum();
+    // Glue logic is whatever the Table III total row leaves after the
+    // itemized units — derived, so a row edit cannot desync the total,
+    // and a row edit that overflows the total is a model error.
+    let glue = PE_AREA_MM2 - units;
+    debug_assert!(glue >= 0.0, "Table III unit areas exceed the PE total: glue {glue}");
+    (units + glue) * arch.num_pes() as f64
 }
 
 #[cfg(test)]
@@ -180,5 +246,46 @@ mod tests {
     fn area_scales_with_pes() {
         let full = array_area_mm2(&ArchConfig::full());
         assert!((full - 0.985 * 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn power_classes_cover_table3_exactly_once() {
+        // The partition matches rows by class, so a renamed row cannot
+        // silently misattribute power — but only if every class appears
+        // exactly once.  This is the regression guard for that
+        // invariant (power_partition itself panics on violations).
+        let rows = table3_rows();
+        for class in PowerClass::ALL {
+            assert_eq!(
+                rows.iter().filter(|r| r.class == class).count(),
+                1,
+                "{class:?} must appear exactly once"
+            );
+        }
+        assert_eq!(rows.len(), PowerClass::ALL.len());
+    }
+
+    #[test]
+    fn partition_accounts_for_all_array_power() {
+        for arch in [ArchConfig::full(), ArchConfig::scaled_128()] {
+            let (f, r, m, c) = super::power_partition(&arch);
+            let total = array_power_w(&arch);
+            assert!(((f + r + m + c) - total).abs() < 1e-9 * total);
+            assert!(f > 0.0 && r > 0.0 && m > 0.0 && c > 0.0);
+        }
+    }
+
+    #[test]
+    fn idle_power_below_any_running_estimate() {
+        let arch = ArchConfig::table4();
+        let idle = idle_power_w(&arch);
+        assert!(idle > 0.0);
+        assert!(idle < array_power_w(&arch));
+        // A fully-idle activity estimate differs from the replica idle
+        // power only by the always-on control plane treatment; both sit
+        // well below the busy estimate.
+        let mut busy = SimStats { cycles: 1000, ..Default::default() };
+        busy.unit_busy = [16_000, 16_000, 16_000, 16_000];
+        assert!(idle <= effective_power_w(&arch, &busy));
     }
 }

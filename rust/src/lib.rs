@@ -48,7 +48,10 @@
 //!   batch-streaming driver, and
 //!   [`coordinator::Session::run_network`] executes a whole
 //!   `ModelSpec` network end-to-end with per-layer latency/energy/
-//!   utilization rollups ([`coordinator::NetworkResult`]).  Results
+//!   utilization rollups ([`coordinator::NetworkResult`]).  Streamed
+//!   schedules are post-processed by the coarse-grained overlap model
+//!   ([`coordinator::pipeline`]: DMA double buffering, inter-layer
+//!   pipelining, batch sharding across replicated arrays).  Results
 //!   serialize to JSON through [`coordinator::Report`] for benches and
 //!   CI.  The old free functions (`run_kernel`, `run_kernel_with`,
 //!   `stream_workload`) remain as deprecated wrappers over a

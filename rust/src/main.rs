@@ -19,7 +19,7 @@
 use anyhow::Result;
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
-use butterfly_dataflow::coordinator::{NetworkResult, Report, Session, SweepRow};
+use butterfly_dataflow::coordinator::{NetworkResult, Overlap, Report, Session, SweepRow};
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
 use butterfly_dataflow::energy;
@@ -75,6 +75,8 @@ fn app() -> App {
                 .opt("batch", "default", "streamed batch size ('default' = workload/model default)")
                 .opt("arch", "scaled128", "architecture preset: full | scaled128")
                 .opt("window", "48", "simulation window (DFG iterations)")
+                .opt("overlap", "pipeline", "streaming overlap model: none | dma | pipeline")
+                .opt("arrays", "1", "replicated dataflow arrays the batch shards across")
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
@@ -98,6 +100,8 @@ fn app() -> App {
             Command::new("stream", "Table IV end-to-end vanilla-transformer streaming")
                 .opt("batch", "256", "streamed batch size")
                 .opt("arch", "scaled128", "architecture preset: full | scaled128")
+                .opt("overlap", "pipeline", "streaming overlap model: none | dma | pipeline")
+                .opt("arrays", "1", "replicated dataflow arrays the batch shards across")
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
@@ -124,6 +128,14 @@ fn parse_arch(s: &str) -> Result<ArchConfig> {
         "scaled128" => Ok(ArchConfig::scaled_128()),
         other => anyhow::bail!("unknown arch preset '{other}' (full | scaled128)"),
     }
+}
+
+/// Parse the streaming-schedule knobs (`--overlap`, `--arrays`).
+fn parse_pipeline(m: &Matches) -> Result<(Overlap, usize)> {
+    let overlap = Overlap::parse(m.get("overlap"))?;
+    let arrays = m.get_usize("arrays")?;
+    anyhow::ensure!(arrays >= 1, "--arrays must be >= 1 (got {arrays})");
+    Ok((overlap, arrays))
 }
 
 fn parse_division(s: &str) -> Result<Option<(usize, usize)>> {
@@ -307,9 +319,12 @@ fn cmd_run(m: &Matches) -> Result<()> {
              model files carry their own shape parameters)"
         );
     }
+    let (overlap, arrays) = parse_pipeline(m)?;
     let session = Session::builder()
         .arch(parse_arch(m.get("arch"))?)
         .window(m.get_usize("window")?)
+        .overlap(overlap)
+        .arrays(arrays)
         .build();
     if !workload.is_empty() {
         return run_suite(m, &session, workload, batch);
@@ -379,7 +394,11 @@ fn run_suite(
     }
     t.print();
     let mut t = Table::new("end-to-end", &["metric", "value"]);
+    t.row(&["overlap".into(), format!("{} ({} arrays)", r.overlap.name(), r.arrays)]);
+    t.row(&["serial time".into(), fmt_time(r.serial_time_s)]);
     t.row(&["batch time".into(), fmt_time(r.batch_time_s)]);
+    t.row(&["speedup".into(), format!("{:.2}x", r.speedup())]);
+    t.row(&["pipeline eff.".into(), format!("{:.1}%", 100.0 * r.pipeline_efficiency)]);
     t.row(&["latency".into(), format!("{:.3} ms", r.latency_ms)]);
     t.row(&["throughput".into(), format!("{:.1} pred/s", r.throughput)]);
     t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
@@ -426,7 +445,11 @@ fn print_network(r: &NetworkResult) {
     }
     t.print();
     let mut t = Table::new("end-to-end", &["metric", "value"]);
+    t.row(&["overlap".into(), format!("{} ({} arrays)", r.overlap.name(), r.arrays)]);
+    t.row(&["serial time".into(), fmt_time(r.serial_time_s)]);
     t.row(&["batch time".into(), fmt_time(r.batch_time_s)]);
+    t.row(&["speedup".into(), format!("{:.2}x", r.speedup())]);
+    t.row(&["pipeline eff.".into(), format!("{:.1}%", 100.0 * r.pipeline_efficiency)]);
     t.row(&["latency".into(), format!("{:.3} ms", r.latency_ms)]);
     t.row(&["throughput".into(), format!("{:.1} pred/s", r.throughput)]);
     t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
@@ -644,8 +667,13 @@ fn cmd_stream(m: &Matches) -> Result<()> {
         batch > 0,
         "--batch 0 is invalid: batch must be >= 1 for the streamed Table-IV run"
     );
+    let (overlap, arrays) = parse_pipeline(m)?;
     let suite = workloads::find_suite("vanilla")?;
-    let session = Session::builder().arch(parse_arch(m.get("arch"))?).build();
+    let session = Session::builder()
+        .arch(parse_arch(m.get("arch"))?)
+        .overlap(overlap)
+        .arrays(arrays)
+        .build();
     let r = session.stream(&suite.kernels_at(Some(batch)), batch)?;
     if m.flag("json") {
         let report = Report::Stream {
@@ -662,7 +690,11 @@ fn cmd_stream(m: &Matches) -> Result<()> {
         &["metric", "value"],
     );
     t.row(&["batch".into(), format!("{batch}")]);
+    t.row(&["overlap".into(), format!("{} ({} arrays)", r.overlap.name(), r.arrays)]);
+    t.row(&["serial time".into(), fmt_time(r.serial_time_s)]);
     t.row(&["batch time".into(), fmt_time(r.batch_time_s)]);
+    t.row(&["speedup".into(), format!("{:.2}x", r.speedup())]);
+    t.row(&["pipeline eff.".into(), format!("{:.1}%", 100.0 * r.pipeline_efficiency)]);
     t.row(&["latency".into(), format!("{:.2} ms", r.latency_ms)]);
     t.row(&["throughput".into(), format!("{:.1} pred/s", r.throughput)]);
     t.row(&["power".into(), format!("{:.2} W", r.power_w)]);

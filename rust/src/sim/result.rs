@@ -19,6 +19,24 @@ pub struct SimStats {
     pub spm_port_busy: u64,
     /// Bytes streamed by DMA (in + out + weights).
     pub dma_bytes: u64,
+    /// The one-time weight-preamble portion of `dma_bytes`: streamed
+    /// once per stage execution, not per iteration, so window
+    /// extrapolation must not scale it (the remainder of `dma_bytes`
+    /// is per-iteration input/output traffic and does scale).
+    pub dma_weight_bytes: u64,
+    /// Per-iteration *input* bytes over the whole window (`iters ×
+    /// in_bytes_per_iter`): together with the weight preamble this is
+    /// the gating DMA stream — the engine charges outputs to the
+    /// writeback half of the channel budget, where they never gate
+    /// compute.
+    pub dma_in_bytes: u64,
+    /// Cold-start DMA prologue (cycles): setup + weight preamble + the
+    /// first per-iteration input chunk — the part of the makespan that
+    /// elapses before any DMA-gated load can fire.  Zero when no load
+    /// gates on DMA.  The coordinator's overlap model hides this fill
+    /// under the preceding kernel's steady state when streaming
+    /// (see `coordinator::pipeline`).
+    pub dma_fill_cycles: u64,
     /// Completion time of each DFG iteration (cycles).
     pub iter_done: Vec<u64>,
     /// Blocks executed.

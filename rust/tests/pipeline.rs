@@ -1,0 +1,158 @@
+//! Streaming-overlap invariants (coordinator::pipeline): serial-mode
+//! bit-compatibility, overlap/array monotonicity, and the Table-IV
+//! acceptance bound `overlapped_time_s <= serial_time_s` over every
+//! registered suite.
+
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::{Overlap, PipelineConfig, Session};
+use butterfly_dataflow::workloads::{self, find_suite};
+
+fn table4_session() -> Session {
+    Session::builder().arch(ArchConfig::table4()).build()
+}
+
+#[test]
+fn serial_mode_single_array_is_bitwise_legacy() {
+    // `--overlap none --arrays 1` must reproduce the legacy serial
+    // accounting exactly: same kernel sum, same latency, same energy.
+    let session = table4_session();
+    let kernels = find_suite("vanilla").unwrap().kernels_at(Some(8));
+    let default = session.stream(&kernels, 8).unwrap();
+    let explicit = session
+        .stream_with(&kernels, 8, PipelineConfig::new(Overlap::None, 1))
+        .unwrap();
+    let serial_sum: f64 = default.kernels.iter().map(|k| k.time_s).sum();
+    assert_eq!(default.batch_time_s, serial_sum);
+    assert_eq!(default.batch_time_s, explicit.batch_time_s);
+    assert_eq!(default.latency_ms, explicit.latency_ms);
+    assert_eq!(default.throughput, explicit.throughput);
+    assert_eq!(default.power_w, explicit.power_w);
+    assert_eq!(default.energy_j, explicit.energy_j);
+    assert_eq!(default.energy_eff, explicit.energy_eff);
+    // No phantom idle-replica energy on a single array.
+    let active: f64 = default.kernels.iter().map(|k| k.energy_j).sum();
+    assert_eq!(default.energy_j, active);
+}
+
+#[test]
+fn every_suite_overlaps_at_or_below_serial() {
+    // The acceptance bound, over the whole registry at each suite's
+    // default batch: pipeline mode never exceeds the serial reference,
+    // and its efficiency stays in (0, 1].
+    let session = table4_session();
+    for suite in workloads::SUITES {
+        let batch = suite.default_batch;
+        let kernels = suite.kernels_at(Some(batch));
+        let r = session
+            .stream_with(&kernels, batch, PipelineConfig::new(Overlap::Pipeline, 1))
+            .unwrap();
+        assert!(
+            r.overlapped_time_s <= r.serial_time_s,
+            "{}: overlapped {} > serial {}",
+            suite.name,
+            r.overlapped_time_s,
+            r.serial_time_s
+        );
+        assert!(r.overlapped_time_s > 0.0, "{}: zero makespan", suite.name);
+        assert!(
+            r.pipeline_efficiency > 0.0 && r.pipeline_efficiency <= 1.0,
+            "{}: efficiency {}",
+            suite.name,
+            r.pipeline_efficiency
+        );
+        assert!(r.speedup() >= 1.0, "{}: speedup {}", suite.name, r.speedup());
+    }
+}
+
+#[test]
+fn overlap_modes_are_monotone() {
+    let session = table4_session();
+    let kernels = find_suite("fabnet-256").unwrap().kernels_at(Some(32));
+    let t = |overlap| {
+        session
+            .stream_with(&kernels, 32, PipelineConfig::new(overlap, 1))
+            .unwrap()
+            .overlapped_time_s
+    };
+    let none = t(Overlap::None);
+    let dma = t(Overlap::Dma);
+    let pipe = t(Overlap::Pipeline);
+    assert!(dma <= none, "dma {dma} > none {none}");
+    assert!(pipe <= dma, "pipeline {pipe} > dma {dma}");
+    // At this depth (4 kernels, batch 32) real pipelining must actually
+    // help, not just not hurt.
+    assert!(pipe < none, "pipeline did not improve on serial at all");
+}
+
+#[test]
+fn array_sharding_scales_throughput_and_charges_idle_power() {
+    let session = table4_session();
+    let kernels = find_suite("vanilla").unwrap().kernels_at(Some(32));
+    let run = |arrays| {
+        session
+            .stream_with(&kernels, 32, PipelineConfig::new(Overlap::Pipeline, arrays))
+            .unwrap()
+    };
+    let one = run(1);
+    let four = run(4);
+    assert!(four.batch_time_s < one.batch_time_s);
+    assert!(four.throughput > one.throughput);
+    assert_eq!(four.arrays, 4);
+    // Same simulated work: the active energy is identical, only the
+    // idle-replica term may differ (32/4 splits evenly, so none here).
+    let active: f64 = one.kernels.iter().map(|k| k.energy_j).sum();
+    assert!(four.energy_j >= active);
+    // An uneven split must charge idle replicas.
+    let three = session
+        .stream_with(&kernels, 32, PipelineConfig::new(Overlap::Pipeline, 3))
+        .unwrap();
+    assert!(three.energy_j > active, "idle replicas not charged");
+}
+
+#[test]
+fn network_pipeline_matches_stream_invariants() {
+    // The same schedule drives run_network: legacy equality in serial
+    // mode, the overlap bound in pipeline mode.
+    let session = Session::builder().build();
+    let model = find_suite("fabnet-128").unwrap().model();
+    let legacy = session.run_network(&model, Some(16)).unwrap();
+    assert_eq!(legacy.batch_time_s, legacy.serial_time_s);
+    let piped = session
+        .run_network_with(&model, Some(16), PipelineConfig::new(Overlap::Pipeline, 2))
+        .unwrap();
+    assert!(piped.overlapped_time_s <= piped.serial_time_s);
+    assert!(piped.pipeline_efficiency > 0.0 && piped.pipeline_efficiency <= 1.0);
+    assert_eq!(piped.serial_time_s, legacy.serial_time_s);
+    assert!(piped.latency_ms < legacy.latency_ms);
+}
+
+#[test]
+fn kernel_results_carry_a_sane_dma_split() {
+    // The overlap model is fed by the per-kernel split: the fill must
+    // sit inside the simulated makespan, and the DDR occupancy must be
+    // positive for kernels that stream from DDR.
+    let session = table4_session();
+    let kernels = find_suite("vit-256").unwrap().kernels_at(Some(4));
+    let r = session.stream(&kernels, 4).unwrap();
+    for k in &r.kernels {
+        assert!(k.fill_time_s >= 0.0, "{}: negative fill", k.name);
+        assert!(k.fill_time_s <= k.time_s, "{}: fill exceeds makespan", k.name);
+        assert!(k.dma_time_s > 0.0, "{}: no DDR stream", k.name);
+        assert!(k.dma_time_s.is_finite() && k.fill_time_s.is_finite());
+    }
+}
+
+#[test]
+fn builder_defaults_flow_into_results() {
+    let kernels = find_suite("fabnet-128").unwrap().kernels_at(Some(8));
+    let session = Session::builder()
+        .arch(ArchConfig::table4())
+        .overlap(Overlap::Pipeline)
+        .arrays(2)
+        .build();
+    assert_eq!(session.pipeline_config(), PipelineConfig::new(Overlap::Pipeline, 2));
+    let r = session.stream(&kernels, 8).unwrap();
+    assert_eq!(r.overlap, Overlap::Pipeline);
+    assert_eq!(r.arrays, 2);
+    assert!(r.overlapped_time_s <= r.serial_time_s);
+}
