@@ -1,5 +1,16 @@
 //! Wall-clock benchmark of the simulator itself (the §Perf target):
-//! simulated-PE-cycles per wall-second and end-to-end bench-suite cost.
+//! simulated-PE-cycles per wall-second, measured for **both** the
+//! frozen pre-rewrite engine (`sim::reference`, the baseline) and the
+//! rewritten engine (`sim::engine`) in the same process, so every run
+//! records the speedup against the true pre-rewrite numbers.
+//!
+//! Besides the human-readable table, the bench emits a
+//! machine-readable `BENCH_simperf.json` (per-case wall ms,
+//! PE-cycles/s, blocks/s for both engines, git rev) so the perf
+//! trajectory is tracked across PRs; CI runs `--quick` as a smoke test
+//! (reduced iteration counts, warn-only on throughput) and uploads the
+//! JSON as an artifact.  Both engines' [`SimStats`] are asserted
+//! bit-equal per case, so a silent divergence panics the bench.
 
 #[path = "common.rs"]
 mod common;
@@ -8,45 +19,82 @@ use std::time::Instant;
 
 use butterfly_dataflow::arch::ArchConfig;
 use butterfly_dataflow::dfg::graph::KernelKind;
-use butterfly_dataflow::dfg::microcode::lower_stage_packed;
+use butterfly_dataflow::dfg::microcode::{lower_stage_packed, Program};
 use butterfly_dataflow::dfg::stages::StageDfg;
-use butterfly_dataflow::sim::{simulate, SimOptions};
+use butterfly_dataflow::sim::{self, simulate_in, SimOptions, SimStats, SimWorkspace};
+use butterfly_dataflow::util::json::{arr, num, obj, s, Json};
 use butterfly_dataflow::util::stats::{si, Summary};
 use butterfly_dataflow::util::table::Table;
 
-fn bench_case(kind: KernelKind, points: usize, iters: usize, pack: usize) -> (f64, f64, f64) {
-    let arch = ArchConfig::full();
-    let stage = StageDfg {
-        kind,
-        points,
-        sub_iters: 1,
-        twiddle_before: false,
-        weights_from_ddr: false,
-    };
-    let program = lower_stage_packed(&stage, &arch, iters, pack);
+/// One engine's measurement over a prepared program.
+struct Measure {
+    wall_s: f64,
+    pe_cycles_per_s: f64,
+    blocks_per_s: f64,
+    stats: SimStats,
+}
+
+fn measure(
+    program: &Program,
+    arch: &ArchConfig,
+    reps: usize,
+    mut run: impl FnMut(&Program, &ArchConfig, &SimOptions) -> SimStats,
+) -> Measure {
     let opts = SimOptions::default();
-    // Warm + measure.
     let mut wall = Summary::new();
-    let mut sim_cycles = 0.0;
-    let mut blocks = 0.0;
-    for i in 0..5 {
+    let mut stats = None;
+    // One warmup, then `reps` timed runs.
+    for i in 0..=reps {
         let t0 = Instant::now();
-        let stats = simulate(&program, &arch, &opts);
+        let st = run(program, arch, &opts);
         let dt = t0.elapsed().as_secs_f64();
         if i > 0 {
             wall.push(dt);
         }
-        sim_cycles = stats.cycles as f64 * 16.0; // PE-cycles
-        blocks = stats.blocks_run as f64;
+        stats = Some(st);
     }
-    (wall.median(), sim_cycles, blocks)
+    let stats = stats.unwrap();
+    let w = wall.median();
+    Measure {
+        wall_s: w,
+        pe_cycles_per_s: stats.cycles as f64 * arch.num_pes() as f64 / w,
+        blocks_per_s: stats.blocks_run as f64 / w,
+        stats,
+    }
+}
+
+fn engine_json(m: &Measure) -> Json {
+    obj(vec![
+        ("wall_ms", num(m.wall_s * 1e3)),
+        ("pe_cycles_per_s", num(m.pe_cycles_per_s)),
+        ("blocks_per_s", num(m.blocks_per_s)),
+    ])
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .or_else(|| std::env::var("GITHUB_SHA").ok().map(|v| v[..v.len().min(9)].to_string()))
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 2 } else { 4 };
+    let arch = ArchConfig::full();
     let mut t = Table::new(
-        "simulator throughput (median of 4 after warmup)",
-        &["case", "wall", "PE-cycles/s", "blocks/s"],
+        &format!(
+            "simulator throughput (median of {reps} after warmup; baseline = pre-rewrite engine)"
+        ),
+        &["case", "wall base", "wall new", "PE-cyc/s base", "PE-cyc/s new", "speedup"],
     );
+    let mut cases = Vec::new();
+    let mut speedups = Vec::new();
+    let mut ws = SimWorkspace::new();
     for (kind, points, iters, pack) in [
         (KernelKind::Fft, 256, 64, 1),
         (KernelKind::Fft, 256, 256, 1),
@@ -54,13 +102,68 @@ fn main() {
         (KernelKind::Bpmm, 32, 256, 8),
         (KernelKind::Fft, 64, 512, 4),
     ] {
-        let (wall, cycles, blocks) = bench_case(kind, points, iters, pack);
+        // Quick mode shrinks every window 8x so the CI smoke job stays
+        // cheap; the case list itself is unchanged (and the shrunk
+        // iteration counts stay pairwise distinct per case label) so
+        // the bench binary, both engine paths and the JSON emission are
+        // all exercised.
+        let iters = if quick { (iters / 8).max(1) } else { iters };
+        let stage = StageDfg {
+            kind,
+            points,
+            sub_iters: 1,
+            twiddle_before: false,
+            weights_from_ddr: false,
+        };
+        let program = lower_stage_packed(&stage, &arch, iters, pack);
+        let base = measure(&program, &arch, reps, sim::reference::simulate);
+        let new = measure(&program, &arch, reps, |p, a, o| simulate_in(&mut ws, p, a, o));
+        assert_eq!(
+            new.stats, base.stats,
+            "engines diverged on {}-{points} x{iters} pack{pack}",
+            kind.name()
+        );
+        let speedup = new.pe_cycles_per_s / base.pe_cycles_per_s;
+        speedups.push(speedup);
+        let case = format!("{}-{points} x{iters} pack{pack}", kind.name());
         t.row(&[
-            format!("{}-{points} x{iters} pack{pack}", kind.name()),
-            format!("{:.2} ms", wall * 1e3),
-            si(cycles / wall),
-            si(blocks / wall),
+            case.clone(),
+            format!("{:.2} ms", base.wall_s * 1e3),
+            format!("{:.2} ms", new.wall_s * 1e3),
+            si(base.pe_cycles_per_s),
+            si(new.pe_cycles_per_s),
+            format!("{speedup:.2}x"),
         ]);
+        cases.push(obj(vec![
+            ("case", s(&case)),
+            ("kind", s(kind.name())),
+            ("points", num(points as f64)),
+            ("iters", num(iters as f64)),
+            ("pack", num(pack as f64)),
+            ("baseline", engine_json(&base)),
+            ("rewritten", engine_json(&new)),
+            ("speedup", num(speedup)),
+        ]));
     }
     t.print();
+    speedups.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_speedup = speedups[speedups.len() / 2];
+    println!("median PE-cycles/s speedup vs pre-rewrite baseline: {median_speedup:.2}x");
+    if median_speedup < 3.0 {
+        // Warn-only: machine load can depress any single run; the
+        // recorded JSON is the tracked signal.
+        println!("WARN: median speedup below the 3x target");
+    }
+
+    let report = obj(vec![
+        ("bench", s("sim-perf")),
+        ("git_rev", s(&git_rev())),
+        ("quick", Json::Bool(quick)),
+        ("reps", num(reps as f64)),
+        ("median_speedup", num(median_speedup)),
+        ("cases", arr(cases)),
+    ]);
+    let path = "BENCH_simperf.json";
+    std::fs::write(path, report.render() + "\n").expect("write BENCH_simperf.json");
+    println!("wrote {path}");
 }

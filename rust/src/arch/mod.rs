@@ -9,6 +9,9 @@
 //!   §VI-H: MACs scaled to 128 (SIMD8), one DDR channel halved, matching
 //!   the SOTA butterfly FPGA accelerator's 204.8 GFLOPS peak.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
 /// Function-unit kinds inside a PE (Fig. 8 decoupled units).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum UnitKind {
@@ -184,6 +187,90 @@ impl Default for ArchConfig {
     }
 }
 
+/// Precomputed XY routes for every (src, dst) PE pair of a mesh.
+///
+/// Routing is dimension-ordered (columns first, then rows) over directed
+/// links owned by the *upstream* PE, encoded `pe * 4 + dir` with
+/// dir 0 = E, 1 = W, 2 = S, 3 = N — the exact walk the simulator's
+/// legacy `xy_path` performed per FLOW block.  Routes depend only on the
+/// mesh geometry (`mesh_rows`/`mesh_cols`), so [`RouteTable::for_arch`]
+/// memoizes one shared table per geometry process-wide and lowering
+/// copies per-block route slices out of it once, killing the per-block
+/// path allocation in the simulator hot loop.
+#[derive(Debug)]
+pub struct RouteTable {
+    num_pes: usize,
+    /// CSR offsets: route of (src, dst) is
+    /// `links[offsets[src * num_pes + dst]..offsets[src * num_pes + dst + 1]]`.
+    offsets: Vec<u32>,
+    /// Directed link ids, hop by hop.
+    links: Vec<u32>,
+}
+
+impl RouteTable {
+    /// Build the table for a `rows × cols` mesh.
+    pub fn new(mesh_rows: usize, mesh_cols: usize) -> Self {
+        let cols = mesh_cols.max(1);
+        let num_pes = mesh_rows.max(1) * cols;
+        let mut offsets = Vec::with_capacity(num_pes * num_pes + 1);
+        let mut links = Vec::new();
+        offsets.push(0u32);
+        for src in 0..num_pes {
+            for dst in 0..num_pes {
+                let (mut r, mut c) = (src / cols, src % cols);
+                let (dr, dc) = (dst / cols, dst % cols);
+                while c != dc {
+                    let pe = r * cols + c;
+                    if dc > c {
+                        links.push((pe * 4) as u32);
+                        c += 1;
+                    } else {
+                        links.push((pe * 4 + 1) as u32);
+                        c -= 1;
+                    }
+                }
+                while r != dr {
+                    let pe = r * cols + c;
+                    if dr > r {
+                        links.push((pe * 4 + 2) as u32);
+                        r += 1;
+                    } else {
+                        links.push((pe * 4 + 3) as u32);
+                        r -= 1;
+                    }
+                }
+                offsets.push(links.len() as u32);
+            }
+        }
+        RouteTable { num_pes, offsets, links }
+    }
+
+    /// The shared table for `arch`'s mesh geometry (built once per
+    /// distinct `(mesh_rows, mesh_cols)` process-wide).
+    pub fn for_arch(arch: &ArchConfig) -> Arc<RouteTable> {
+        static TABLES: OnceLock<Mutex<HashMap<(usize, usize), Arc<RouteTable>>>> =
+            OnceLock::new();
+        let tables = TABLES.get_or_init(|| Mutex::new(HashMap::new()));
+        tables
+            .lock()
+            .unwrap()
+            .entry((arch.mesh_rows, arch.mesh_cols))
+            .or_insert_with(|| Arc::new(RouteTable::new(arch.mesh_rows, arch.mesh_cols)))
+            .clone()
+    }
+
+    /// Directed link ids along the XY route from `src` to `dst`.
+    pub fn route(&self, src: usize, dst: usize) -> &[u32] {
+        let i = src * self.num_pes + dst;
+        &self.links[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// PEs covered by this table.
+    pub fn num_pes(&self) -> usize {
+        self.num_pes
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,5 +310,54 @@ mod tests {
         for (i, k) in UnitKind::ALL.iter().enumerate() {
             assert_eq!(k.index(), i);
         }
+    }
+
+    #[test]
+    fn route_table_lengths_match_manhattan() {
+        for (rows, cols) in [(4, 4), (2, 8), (1, 16), (3, 5)] {
+            let t = RouteTable::new(rows, cols);
+            let arch = ArchConfig { mesh_rows: rows, mesh_cols: cols, ..ArchConfig::full() };
+            for src in 0..t.num_pes() {
+                for dst in 0..t.num_pes() {
+                    assert_eq!(
+                        t.route(src, dst).len(),
+                        arch.hop_distance(src, dst),
+                        "{rows}x{cols} {src}->{dst}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn route_table_links_are_contiguous() {
+        // Each consecutive link must leave the PE the previous link
+        // entered, and the walk must end at the destination.
+        let cols = 4;
+        let t = RouteTable::new(4, cols);
+        let step = |pe: usize, dir: usize| match dir {
+            0 => pe + 1,
+            1 => pe - 1,
+            2 => pe + cols,
+            _ => pe - cols,
+        };
+        for src in 0..16 {
+            for dst in 0..16 {
+                let mut at = src;
+                for &l in t.route(src, dst) {
+                    let (pe, dir) = (l as usize / 4, l as usize % 4);
+                    assert_eq!(pe, at, "link leaves wrong PE on {src}->{dst}");
+                    at = step(pe, dir);
+                }
+                assert_eq!(at, dst);
+            }
+        }
+    }
+
+    #[test]
+    fn route_table_memo_shares_per_geometry() {
+        let a = RouteTable::for_arch(&ArchConfig::full());
+        let b = RouteTable::for_arch(&ArchConfig::scaled_128());
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same mesh must share one table");
     }
 }

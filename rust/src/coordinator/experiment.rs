@@ -10,8 +10,11 @@
 //! `window_sensitivity` tests in `rust/tests/` verify the extrapolation.
 //!
 //! The execution engine lives in [`super::session`]: a [`Session`]
-//! plans, lowers and simulates kernels with plan caching and parallel
-//! fan-out.  The free functions here are deprecated wrappers kept for
+//! plans, lowers and simulates kernels with plan caching, parallel
+//! fan-out and a pool of reusable simulator workspaces
+//! ([`crate::sim::SimWorkspace`]) so windowed re-simulation is
+//! allocation-free at steady state.  The free functions here are
+//! deprecated wrappers kept for
 //! source compatibility; they route through a process-wide pool of
 //! shared sessions (one per configuration signature), so repeated
 //! legacy calls at least reuse cached plans and stage measurements.

@@ -9,6 +9,10 @@
 //! repeated stage DFGs are planned, lowered and simulated exactly once
 //! per session, and independent kernels fan out across threads via
 //! [`Session::run_many`] with deterministic, input-ordered results.
+//! Simulations run inside pooled [`SimWorkspace`] scratch arenas, so a
+//! session's many `simulate` invocations (windows, sweeps, cache
+//! misses across a batch) recycle the event calendar and per-unit
+//! state instead of reallocating them per call.
 //!
 //! ```no_run
 //! use butterfly_dataflow::coordinator::Session;
@@ -46,7 +50,7 @@ use crate::dfg::graph::KernelKind;
 use crate::dfg::microcode::lower_stage_packed;
 use crate::dfg::stages::{plan_kernel, KernelPlan, StageDfg};
 use crate::energy;
-use crate::sim::{simulate, SimOptions, SimStats};
+use crate::sim::{simulate_in, SimOptions, SimStats, SimWorkspace};
 use crate::workloads::spec::ModelSpec;
 use crate::workloads::KernelSpec;
 
@@ -58,6 +62,32 @@ use super::streaming::{self, StreamResult};
 /// Packing target: keep at least this many butterfly nodes per PE per
 /// layer so fixed block overheads stay amortized (§V-A streaming).
 const TARGET_NODES_PER_PE: usize = 8;
+
+/// The per-stage simulation schedule [`Session`] applies: shallow stage
+/// DFGs (few nodes per PE) pack several independent instances per
+/// iteration so block issue overheads amortize (§V-A streaming), the
+/// total iteration count covers `vectors × sub_iters` instances, and
+/// the simulated window is capped at `window_cap` (extrapolated beyond
+/// it).  Returns `(iters_total, window, pack)`.
+///
+/// This is the single source of truth — `Session::execute` calls it per
+/// stage, and the golden suite (`rust/tests/sim_golden.rs`) calls it to
+/// diff exactly the programs the coordinator simulates.
+pub fn stage_schedule(
+    stage: &StageDfg,
+    vectors: usize,
+    arch: &ArchConfig,
+    window_cap: usize,
+) -> (usize, usize, usize) {
+    let w = arch.simd_width;
+    let instances = vectors.saturating_mul(stage.sub_iters);
+    let base_npe = (stage.points / 2).div_ceil(arch.num_pes()).max(1);
+    let pack =
+        (TARGET_NODES_PER_PE / base_npe).clamp(1, instances.div_ceil(w).max(1));
+    let iters_total = instances.div_ceil(w * pack).max(1);
+    let window = iters_total.min(window_cap.max(1));
+    (iters_total, window, pack)
+}
 
 /// Builder for [`Session`].
 ///
@@ -161,6 +191,7 @@ impl SessionBuilder {
                 stages: Mutex::new(HashMap::new()),
             },
             counters: Counters::default(),
+            workspaces: Mutex::new(Vec::new()),
         }
     }
 }
@@ -258,6 +289,12 @@ pub struct Session {
     pipeline: PipelineConfig,
     cache: PlanCache,
     counters: Counters,
+    /// Pool of simulator scratch arenas: each lowering/simulation
+    /// checks one out (or starts a fresh one under `run_many`
+    /// parallelism) and returns it, so re-simulation across windows,
+    /// batches and sweeps reuses the event calendar, ready queues and
+    /// dependency counters instead of reallocating them per call.
+    workspaces: Mutex<Vec<SimWorkspace>>,
 }
 
 impl Session {
@@ -511,7 +548,13 @@ impl Session {
         let lower = || {
             self.counters.lowerings.fetch_add(1, Ordering::Relaxed);
             let program = lower_stage_packed(stage, &self.cfg.arch, window, pack);
-            let stats = simulate(&program, &self.cfg.arch, &self.cfg.sim);
+            // Check a scratch arena out of the pool (falling back to a
+            // fresh one when all are in flight under run_many), run,
+            // and return it warm for the next stage.
+            let mut ws =
+                self.workspaces.lock().unwrap().pop().unwrap_or_else(SimWorkspace::new);
+            let stats = simulate_in(&mut ws, &program, &self.cfg.arch, &self.cfg.sim);
+            self.workspaces.lock().unwrap().push(ws);
             Arc::new(StageMeasure { ops: program.total_ops(), stats })
         };
         if !self.caching {
@@ -544,7 +587,6 @@ impl Session {
     /// [`super::experiment`] for the software-pipelining argument).
     fn execute(&self, spec: &KernelSpec, plan: &KernelPlan) -> Result<KernelResult> {
         let arch = &self.cfg.arch;
-        let w = arch.simd_width;
 
         let mut total_cycles = 0.0f64;
         let mut busy = [0.0f64; 4];
@@ -556,15 +598,8 @@ impl Session {
         let mut ops_total = 0.0f64;
 
         for stage in &plan.stages {
-            let instances = spec.vectors.saturating_mul(stage.sub_iters);
-            // Instance packing: shallow stage DFGs (few nodes per PE)
-            // pack several independent instances per iteration so block
-            // issue overheads amortize (§V-A streaming).
-            let base_npe = (stage.points / 2).div_ceil(arch.num_pes()).max(1);
-            let pack = (TARGET_NODES_PER_PE / base_npe)
-                .clamp(1, instances.div_ceil(w).max(1));
-            let iters_total = instances.div_ceil(w * pack).max(1);
-            let window = iters_total.min(self.cfg.window);
+            let (iters_total, window, pack) =
+                stage_schedule(stage, spec.vectors, arch, self.cfg.window);
             let m = self.measure_stage(stage, window, pack);
             let stats = &m.stats;
             let scale = iters_total as f64 / window as f64;

@@ -32,6 +32,24 @@ impl Mapping {
         Mapping { num_pes: arch.num_pes(), layer_width: dfg.layer_width(0) }
     }
 
+    /// Round-robin mapping of the `points`-point butterfly DFG *without*
+    /// materializing the graph: every butterfly layer (and the load/store
+    /// layers) of an `n`-point kernel is uniformly `n / 2` nodes wide, so
+    /// the mapping is fully determined by `points` and the PE count.
+    /// Identical to [`Mapping::round_robin`] over
+    /// [`super::butterfly::build_butterfly_dfg`] — asserted by tests —
+    /// but O(1); lowering uses it so the hot re-lowering path stops
+    /// paying an O(n log n) graph build per call.
+    pub fn for_points(points: usize, arch: &ArchConfig) -> Self {
+        Mapping { num_pes: arch.num_pes(), layer_width: points / 2 }
+    }
+
+    /// Per-PE node counts for one layer, indexable without re-deriving
+    /// the division/remainder per (iter, layer, pe) in lowering loops.
+    pub fn nodes_per_pe(&self) -> Vec<usize> {
+        (0..self.num_pes).map(|p| self.nodes_on_pe(p)).collect()
+    }
+
     /// PE of layer-node `k`.
     pub fn pe_of(&self, node_index: usize) -> usize {
         node_index % self.num_pes
@@ -111,6 +129,21 @@ mod tests {
         assert_eq!(m.partner_pe(0, 3), Some(4));
         assert_eq!(m.partner_pe(0, 4), Some(8));
         assert_eq!(m.partner_pe(1, 5), None); // PE1 ↔ PE17 % 16 = PE1
+    }
+
+    #[test]
+    fn for_points_matches_round_robin() {
+        let arch = ArchConfig::full();
+        for n in [4usize, 16, 32, 64, 256, 1024] {
+            for kind in [KernelKind::Bpmm, KernelKind::Fft] {
+                let dfg = build_butterfly_dfg(kind, n);
+                let a = Mapping::round_robin(&dfg, &arch);
+                let b = Mapping::for_points(n, &arch);
+                assert_eq!(a.layer_width, b.layer_width, "{kind:?} n={n}");
+                assert_eq!(a.num_pes, b.num_pes);
+                assert_eq!(a.nodes_per_pe(), b.nodes_per_pe());
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! paper's block scheduler and its dependence edges; the cycle-level
 //! simulator turns the raw quantities into time.
 
-use crate::arch::{ArchConfig, UnitKind};
+use crate::arch::{ArchConfig, RouteTable, UnitKind};
 use crate::model::log2_int;
 
 use super::graph::KernelKind;
@@ -74,10 +74,163 @@ pub struct ProgramMeta {
 }
 
 /// A lowered, simulatable program (one stage DFG × `iters` iterations).
+///
+/// `blocks` is the construction/inspection view (one struct per block,
+/// explicit dependency lists); `exec` is the flat structure-of-arrays
+/// view the discrete-event engine walks, derived once at lowering time
+/// by [`Program::new`].  The two views describe the same program — the
+/// engine never reads `blocks`.
 #[derive(Debug, Clone)]
 pub struct Program {
     pub meta: ProgramMeta,
     pub blocks: Vec<Block>,
+    pub exec: ExecLayout,
+}
+
+/// Flat, execution-oriented layout of a program: one array per block
+/// field (structure-of-arrays), dependents and NoC routes in CSR form,
+/// scheduler priorities pre-packed.  Built once per lowering so the
+/// simulator's hot loop does no per-call graph preprocessing, chases no
+/// `&blocks[i]` struct loads and allocates no per-FLOW route vectors.
+#[derive(Debug, Clone)]
+pub struct ExecLayout {
+    /// `UnitKind::index()` per block.
+    pub unit: Vec<u8>,
+    /// Function-unit queue index: `pe * 4 + unit` per block.
+    pub unit_slot: Vec<u32>,
+    /// Host PE per block.
+    pub pe: Vec<u16>,
+    /// Packed `{layer, iter}` scheduler priority: `(layer << 32) | iter`
+    /// — orders identically to the paper's lexicographic bit string.
+    pub prio: Vec<u64>,
+    /// DFG iteration index per block.
+    pub iter: Vec<u32>,
+    /// Lane-scaled scalars moved per block.
+    pub scalars_wide: Vec<u64>,
+    /// Broadcast scalars per block.
+    pub scalars_bcast: Vec<u64>,
+    /// Compute slots per lane (CAL blocks).
+    pub ops: Vec<u64>,
+    /// Mesh hops to the destination (FLOW blocks).
+    pub noc_hops: Vec<u16>,
+    /// Per-block flag bits (`FLAG_*`).
+    pub flags: Vec<u8>,
+    /// Initial dependency counts, including the virtual DMA-delivery
+    /// dependency of gated loads.
+    pub n_deps: Vec<u32>,
+    /// Dependents CSR offsets (`len = blocks + 1`): the blocks unlocked
+    /// by block `i` are `dep_flat[dep_start[i]..dep_start[i + 1]]`.
+    pub dep_start: Vec<u32>,
+    pub dep_flat: Vec<u32>,
+    /// Per-block NoC route CSR offsets (`len = blocks + 1`): directed
+    /// link ids of block `i`'s XY path (empty for non-FLOW blocks),
+    /// copied out of the shared per-geometry [`RouteTable`].
+    pub route_start: Vec<u32>,
+    pub route_flat: Vec<u32>,
+    /// Whether any block gates on DMA delivery (cold-start fill exists).
+    pub any_dma_gated: bool,
+}
+
+/// Whether a block gates on DMA delivery: input-bearing layer-0 loads
+/// wait for their iteration's chunk.  Single source of truth for the
+/// `FLAG_DMA_GATED` bit, the extra `n_deps` count and `any_dma_gated` —
+/// the engine derives its `DmaArrive` seeding, virtual dependency and
+/// `dma_fill_cycles` statistic from those, so they can never disagree.
+fn dma_gated(b: &Block) -> bool {
+    b.unit == UnitKind::Load && b.layer == 0 && b.scalars_wide > 0
+}
+
+impl ExecLayout {
+    /// Block gates on a `DmaArrive` delivery event.
+    pub const FLAG_DMA_GATED: u8 = 1 << 0;
+    /// Block is the iteration-completion probe of its iteration.
+    pub const FLAG_COMPLETES_ITER: u8 = 1 << 1;
+    /// Block accesses the SPM column-wise (layer > 0): serialized under
+    /// the `no_multiline_spm` ablation.
+    pub const FLAG_COL_ACCESS: u8 = 1 << 2;
+
+    /// Derive the flat layout from the block list (called once by
+    /// [`Program::new`]).
+    pub fn build(blocks: &[Block], arch: &ArchConfig) -> ExecLayout {
+        let n = blocks.len();
+        let routes = RouteTable::for_arch(arch);
+        let mut dep_start = vec![0u32; n + 1];
+        for b in blocks {
+            for d in &b.deps {
+                dep_start[d.0 as usize + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            dep_start[i + 1] += dep_start[i];
+        }
+        let dep_flat = vec![0u32; dep_start[n] as usize];
+        let mut cursor: Vec<u32> = dep_start[..n].to_vec();
+
+        let mut out = ExecLayout {
+            unit: Vec::with_capacity(n),
+            unit_slot: Vec::with_capacity(n),
+            pe: Vec::with_capacity(n),
+            prio: Vec::with_capacity(n),
+            iter: Vec::with_capacity(n),
+            scalars_wide: Vec::with_capacity(n),
+            scalars_bcast: Vec::with_capacity(n),
+            ops: Vec::with_capacity(n),
+            noc_hops: Vec::with_capacity(n),
+            flags: Vec::with_capacity(n),
+            n_deps: Vec::with_capacity(n),
+            dep_start,
+            dep_flat,
+            route_start: Vec::with_capacity(n + 1),
+            route_flat: Vec::new(),
+            any_dma_gated: false,
+        };
+        out.route_start.push(0);
+        for (i, b) in blocks.iter().enumerate() {
+            for d in &b.deps {
+                let c = &mut cursor[d.0 as usize];
+                out.dep_flat[*c as usize] = i as u32;
+                *c += 1;
+            }
+            let gated = dma_gated(b);
+            out.any_dma_gated |= gated;
+            let mut flags = 0u8;
+            if gated {
+                flags |= Self::FLAG_DMA_GATED;
+            }
+            if b.completes_iter {
+                flags |= Self::FLAG_COMPLETES_ITER;
+            }
+            if b.layer > 0 {
+                flags |= Self::FLAG_COL_ACCESS;
+            }
+            out.unit.push(b.unit.index() as u8);
+            out.unit_slot.push(b.pe as u32 * 4 + b.unit.index() as u32);
+            out.pe.push(b.pe);
+            out.prio.push(((b.layer as u64) << 32) | b.iter as u64);
+            out.iter.push(b.iter);
+            out.scalars_wide.push(b.scalars_wide);
+            out.scalars_bcast.push(b.scalars_bcast);
+            out.ops.push(b.ops);
+            out.noc_hops.push(b.noc_hops);
+            out.flags.push(flags);
+            out.n_deps.push(b.deps.len() as u32 + u32::from(gated));
+            if b.unit == UnitKind::Flow {
+                let dest = b.dest_pe.unwrap_or(b.pe) as usize;
+                out.route_flat.extend_from_slice(routes.route(b.pe as usize, dest));
+            }
+            out.route_start.push(out.route_flat.len() as u32);
+        }
+        out
+    }
+
+    /// Number of blocks covered.
+    pub fn len(&self) -> usize {
+        self.unit.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.unit.is_empty()
+    }
 }
 
 /// Per-PE slot layout used to wire dependencies.
@@ -116,8 +269,12 @@ pub fn lower_stage_packed(
     let s = log2_int(n);
     let kind = stage.kind;
     let planes = kind.planes() as u64;
-    let dfg = super::butterfly::build_butterfly_dfg(kind, n);
-    let map = Mapping::round_robin(&dfg, arch);
+    // The butterfly DFG's layers are uniformly n/2 nodes wide, so the
+    // round-robin mapping is derivable without materializing the graph
+    // (`for_points` == `round_robin(build_butterfly_dfg(..))`, tested).
+    let map = Mapping::for_points(n, arch);
+    // Per-PE node counts, hoisted out of the (iter × layer × pe) loops.
+    let nodes_per_pe = map.nodes_per_pe();
     let num_pes = arch.num_pes();
     let w = arch.simd_width as u64;
 
@@ -157,7 +314,7 @@ pub fn lower_stage_packed(
         // Buffer recycling bounds in-flight iterations: iteration i's
         // input buffers are freed by iteration i-inflight's STORE.
         for pe in 0..num_pes {
-            let npe = map.nodes_on_pe(pe) as u64 * pack;
+            let npe = nodes_per_pe[pe] as u64 * pack;
             if npe == 0 {
                 continue;
             }
@@ -190,7 +347,7 @@ pub fn lower_stage_packed(
         for t in 0..s {
             let layer = t as u16 + 1;
             for pe in 0..num_pes {
-                let npe = map.nodes_on_pe(pe) as u64 * pack;
+                let npe = nodes_per_pe[pe] as u64 * pack;
                 if npe == 0 {
                     continue;
                 }
@@ -269,7 +426,7 @@ pub fn lower_stage_packed(
             // of this layer's CAL blocks exist.
             if t + 1 < s {
                 for pe in 0..num_pes {
-                    let npe = map.nodes_on_pe(pe) as u64 * pack;
+                    let npe = nodes_per_pe[pe] as u64 * pack;
                     if npe == 0 {
                         continue;
                     }
@@ -301,7 +458,7 @@ pub fn lower_stage_packed(
         }
         // STORE the final stage outputs.
         for pe in 0..num_pes {
-            let npe = map.nodes_on_pe(pe) as u64 * pack;
+            let npe = nodes_per_pe[pe] as u64 * pack;
             if npe == 0 {
                 continue;
             }
@@ -338,8 +495,8 @@ pub fn lower_stage_packed(
     } else {
         0
     };
-    Program {
-        meta: ProgramMeta {
+    Program::new(
+        ProgramMeta {
             kind,
             points: n,
             iters,
@@ -350,10 +507,18 @@ pub fn lower_stage_packed(
             stages: s,
         },
         blocks,
-    }
+        arch,
+    )
 }
 
 impl Program {
+    /// Assemble a program from its block list, deriving the flat
+    /// [`ExecLayout`] the simulator walks.
+    pub fn new(meta: ProgramMeta, blocks: Vec<Block>, arch: &ArchConfig) -> Program {
+        let exec = ExecLayout::build(&blocks, arch);
+        Program { meta, blocks, exec }
+    }
+
     /// Sanity invariants: deps point backwards in priority space and the
     /// block set is an acyclic layered graph.
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -486,6 +651,54 @@ mod tests {
         st.weights_from_ddr = true;
         let p = lower_stage(&st, &arch, 1);
         assert!(p.meta.weight_dma_bytes > 0);
+    }
+
+    #[test]
+    fn exec_layout_mirrors_blocks() {
+        let arch = ArchConfig::full();
+        let p = lower_stage(&stage(KernelKind::Fft, 256), &arch, 4);
+        let e = &p.exec;
+        assert_eq!(e.len(), p.blocks.len());
+        assert_eq!(*e.route_start.last().unwrap() as usize, e.route_flat.len());
+        let mut dep_edges = 0usize;
+        for (i, b) in p.blocks.iter().enumerate() {
+            assert_eq!(e.unit[i] as usize, b.unit.index());
+            assert_eq!(e.pe[i], b.pe);
+            assert_eq!(e.unit_slot[i], b.pe as u32 * 4 + b.unit.index() as u32);
+            assert_eq!(e.prio[i], ((b.layer as u64) << 32) | b.iter as u64);
+            assert_eq!(e.iter[i], b.iter);
+            assert_eq!(e.scalars_wide[i], b.scalars_wide);
+            assert_eq!(e.scalars_bcast[i], b.scalars_bcast);
+            assert_eq!(e.ops[i], b.ops);
+            assert_eq!(e.noc_hops[i], b.noc_hops);
+            assert_eq!(
+                e.flags[i] & ExecLayout::FLAG_COMPLETES_ITER != 0,
+                b.completes_iter
+            );
+            assert_eq!(e.flags[i] & ExecLayout::FLAG_COL_ACCESS != 0, b.layer > 0);
+            let gated = e.flags[i] & ExecLayout::FLAG_DMA_GATED != 0;
+            assert_eq!(e.n_deps[i] as usize, b.deps.len() + usize::from(gated));
+            dep_edges += b.deps.len();
+            // FLOW route length matches the recorded hop count; others
+            // carry no route.
+            let r = e.route_start[i + 1] - e.route_start[i];
+            if b.unit == UnitKind::Flow {
+                assert_eq!(r as usize, b.noc_hops as usize);
+            } else {
+                assert_eq!(r, 0);
+            }
+        }
+        assert_eq!(e.dep_flat.len(), dep_edges);
+        assert!(e.any_dma_gated);
+        // Dependents CSR is the exact transpose of the deps lists.
+        for (i, b) in p.blocks.iter().enumerate() {
+            for d in &b.deps {
+                let j = d.0 as usize;
+                let deps_of_j =
+                    &e.dep_flat[e.dep_start[j] as usize..e.dep_start[j + 1] as usize];
+                assert!(deps_of_j.contains(&(i as u32)), "block {i} missing in {j}");
+            }
+        }
     }
 
     #[test]

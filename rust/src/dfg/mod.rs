@@ -26,5 +26,5 @@ pub mod stages;
 
 pub use graph::{Dfg, EdgeKind, KernelKind, Node, NodeId, NodeOp};
 pub use mapping::Mapping;
-pub use microcode::{Block, BlockId, Program, ProgramMeta};
+pub use microcode::{Block, BlockId, ExecLayout, Program, ProgramMeta};
 pub use stages::{KernelPlan, StageDfg};

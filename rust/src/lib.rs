@@ -21,7 +21,11 @@
 //!   (Fig. 8).
 //! * [`sim`] — deterministic cycle-level discrete-event simulator of the
 //!   dataflow substrate: PEs with decoupled units and coarse-grained
-//!   block scheduling, mesh NoC, multi-line SPM, DMA/DDR.
+//!   block scheduling, mesh NoC, multi-line SPM, DMA/DDR.  The engine
+//!   core is throughput-tuned (bucketed event calendar, pending-wake
+//!   flags, precomputed routes, reusable [`sim::SimWorkspace`]) and
+//!   held bit-exact against the frozen [`sim::reference`] engine by
+//!   golden tests.
 //! * [`baselines`] — analytical models of the comparison platforms
 //!   (Jetson Xavier NX / Nano roofline + cache hierarchy; SOTA butterfly
 //!   FPGA accelerator; SpAtten; DOTA).

@@ -1,6 +1,7 @@
-//! The discrete-event core.
+//! The discrete-event core — throughput-oriented rewrite.
 //!
-//! Entities and their contention model:
+//! Entities and their contention model (unchanged from the paper's
+//! Fig. 6/8 machine):
 //!
 //! * **Function units** (4 per PE): serve one block at a time; among
 //!   ready blocks the controlUnit picks the smallest `{layer, iter}`
@@ -8,9 +9,8 @@
 //!   `block_issue_overhead` (arbitration + context fetch).
 //! * **SPM ports**: `banks/2` SIMD16 ports shared by all PEs' Load/Store
 //!   units; a block occupies the earliest-free port for the duration of
-//!   its transfer.  The multi-line design makes row- and column-access
-//!   equal cost (the ablation flag `no_multiline_spm` serializes
-//!   column-gather reads to model its absence).
+//!   its transfer (the `no_multiline_spm` ablation serializes
+//!   column-gather reads).
 //! * **NoC links**: directed mesh links with XY routing; a FLOW reserves
 //!   every link on its path for the serialized transfer duration, then
 //!   pays per-hop latency before the payload is visible downstream.
@@ -19,12 +19,55 @@
 //!   aggregate DDR bandwidth.
 //!
 //! Everything is deterministic: ties break on block id.
+//!
+//! # Data structures (the rewrite)
+//!
+//! The hot loop is built for throughput while staying **bit-exact**
+//! with the pre-rewrite engine ([`super::reference`], enforced by
+//! `rust/tests/sim_golden.rs`):
+//!
+//! * **Indexed event calendar** ([`EventWheel`]): a bucketed time wheel
+//!   (`WHEEL_SLOTS` one-cycle buckets) with a sorted overflow tier for
+//!   events beyond the horizon.  Push and pop are O(1) amortized, and
+//!   same-cycle events drain in exact insertion order — the property
+//!   that makes shared-resource (port/link) acquisition order, and
+//!   therefore every statistic, identical to the old global
+//!   `BinaryHeap<(time, seq, event)>`.
+//! * **Pending-wake flags**: one boolean per function unit replaces the
+//!   speculative `UnitFree` wake-up flood.  A unit has at most one live
+//!   wake event queued at any moment (pushed when it goes busy, or when
+//!   the first block becomes ready while it sits idle), so each block
+//!   costs a bounded number of calendar operations and the stale-event
+//!   `continue` path is gone entirely.
+//! * **SPM port min-heap**: the earliest-free port is popped from a
+//!   `(free_at, port)` heap instead of an O(ports) scan, preserving the
+//!   earliest-free/lowest-index tie-break (the heap always holds
+//!   exactly one entry per port).
+//! * **Precomputed NoC routes**: XY paths live in the per-geometry
+//!   [`crate::arch::RouteTable`] and are copied into per-block CSR
+//!   slices at lowering ([`crate::dfg::ExecLayout`]), killing the
+//!   per-FLOW `Vec` allocation of the old `xy_path` walk (kept below
+//!   only as the executable route specification for tests).
+//! * **Structure-of-arrays walk**: the loop reads the flat
+//!   [`crate::dfg::ExecLayout`] arrays (unit, priorities, scalars,
+//!   dependents CSR) built once at lowering — no per-call dependency
+//!   CSR construction, no `&blocks[i]` field chasing, and `{layer,
+//!   iter}` priorities pre-packed into one `u64` (FIFO mode still
+//!   assigns its insertion-order priorities at ready time, preserving
+//!   the ablation's semantics).
+//! * **Reusable scratch arena** ([`SimWorkspace`]): all transient state
+//!   (dependency counters, ready queues, calendar buckets, link/port
+//!   occupancy) lives in a workspace that [`simulate_in`] recycles
+//!   across calls, so windowed/batched re-simulation in
+//!   [`crate::coordinator::Session`] stops paying a dozen allocations
+//!   per invocation.  [`simulate`] remains the one-shot convenience
+//!   wrapper.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::arch::{ArchConfig, UnitKind};
-use crate::dfg::{Block, Program};
+use crate::arch::ArchConfig;
+use crate::dfg::{ExecLayout, Program};
 
 use super::result::SimStats;
 
@@ -45,94 +88,243 @@ impl Default for SimOptions {
     }
 }
 
-/// Priority key: the paper's `{Layer_idx, Iter_idx}` bit string; FIFO
-/// mode degrades to insertion order.
-type Prio = (u16, u32, u32);
-
-struct UnitState {
-    free_at: u64,
-    ready: BinaryHeap<Reverse<(Prio, u32)>>, // ((layer, iter, seq), block)
-}
+/// Unit-kind indices as stored in [`ExecLayout::unit`]
+/// (`UnitKind::index()` values; asserted equivalent in tests).
+const U_LOAD: u8 = 0;
+const U_FLOW: u8 = 1;
+const U_CAL: u8 = 2;
+const U_STORE: u8 = 3;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum Event {
-    /// A block's service finished on its unit (unit becomes free).
-    UnitFree { pe: u16, unit: u8 },
+    /// A unit may issue its next ready block (its previous service
+    /// finished, or work arrived while it was idle).
+    UnitFree { slot: u32 },
     /// A block's outputs are visible (dependents may fire).
     BlockDone { block: u32 },
     /// The DMA delivered an input chunk this block was gated on.
     DmaArrive { block: u32 },
 }
 
-/// Whether a block gates on DMA delivery: input-bearing layer-0 loads
-/// wait for their iteration's chunk.  Single source of truth for the
-/// dependency count, the `DmaArrive` event seeding and the
-/// `dma_fill_cycles` statistic — these three must never disagree.
-fn dma_gated(b: &Block) -> bool {
-    b.unit == UnitKind::Load && b.layer == 0 && b.scalars_wide > 0
+/// Calendar bucket count (one cycle per bucket).  Power of two; events
+/// further than this ahead of the cursor wait in the sorted overflow
+/// tier and migrate as the horizon advances.
+const WHEEL_SLOTS: usize = 1024;
+const WHEEL_MASK: usize = WHEEL_SLOTS - 1;
+
+/// Bucketed time wheel with a sorted overflow tier.
+///
+/// Invariants (the bit-exactness load-bearing ones):
+///
+/// * events are pushed at times `>= cursor` (the simulation is causal);
+/// * every resident bucket event has time in `[cursor, cursor + W)`, so
+///   a bucket holds exactly one time value at a time;
+/// * the overflow tier holds only events at `>= cursor + W`, kept
+///   sorted by `(time, seq)`; [`EventWheel::advance`] migrates entries
+///   as the horizon moves — always *before* any processing at the new
+///   cursor, so same-cycle ordering stays global insertion order even
+///   across the two tiers.
+#[derive(Debug, Default)]
+struct EventWheel {
+    buckets: Vec<Vec<Event>>,
+    /// Read index into the current bucket.
+    head: usize,
+    /// Current time.
+    cursor: u64,
+    /// Unconsumed events resident in buckets.
+    pending: usize,
+    /// Events beyond the horizon: `(time, seq, event)` min-heap.
+    overflow: BinaryHeap<Reverse<(u64, u64, Event)>>,
+    /// Insertion counter for overflow ordering.
+    seq: u64,
 }
 
-/// Run a program to completion and collect statistics.
+impl EventWheel {
+    fn reset(&mut self) {
+        if self.buckets.len() != WHEEL_SLOTS {
+            self.buckets = (0..WHEEL_SLOTS).map(|_| Vec::new()).collect();
+        } else {
+            for b in &mut self.buckets {
+                b.clear();
+            }
+        }
+        self.head = 0;
+        self.cursor = 0;
+        self.pending = 0;
+        self.overflow.clear();
+        self.seq = 0;
+    }
+
+    #[inline]
+    fn push(&mut self, t: u64, ev: Event) {
+        debug_assert!(t >= self.cursor, "event pushed into the past");
+        if t < self.cursor + WHEEL_SLOTS as u64 {
+            self.buckets[t as usize & WHEEL_MASK].push(ev);
+            self.pending += 1;
+        } else {
+            self.seq += 1;
+            self.overflow.push(Reverse((t, self.seq, ev)));
+        }
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<(u64, Event)> {
+        loop {
+            let b = self.cursor as usize & WHEEL_MASK;
+            if self.head < self.buckets[b].len() {
+                let ev = self.buckets[b][self.head];
+                self.head += 1;
+                self.pending -= 1;
+                return Some((self.cursor, ev));
+            }
+            self.buckets[b].clear();
+            self.head = 0;
+            if self.pending > 0 {
+                // All resident events are within the horizon; scan to
+                // the next occupied cycle.
+                let limit = self.cursor + WHEEL_SLOTS as u64;
+                let mut t = self.cursor + 1;
+                while t < limit && self.buckets[t as usize & WHEEL_MASK].is_empty() {
+                    t += 1;
+                }
+                assert!(t < limit, "event wheel lost {} pending events", self.pending);
+                self.advance(t);
+            } else if let Some(&Reverse((t, _, _))) = self.overflow.peek() {
+                self.advance(t);
+            } else {
+                return None;
+            }
+        }
+    }
+
+    /// Move the cursor and migrate overflow events inside the new
+    /// horizon.  Must be the only way the cursor changes.
+    fn advance(&mut self, to: u64) {
+        self.cursor = to;
+        let horizon = to + WHEEL_SLOTS as u64;
+        while let Some(&Reverse((t, _, _))) = self.overflow.peek() {
+            if t >= horizon {
+                break;
+            }
+            let Reverse((t, _, ev)) = self.overflow.pop().unwrap();
+            self.buckets[t as usize & WHEEL_MASK].push(ev);
+            self.pending += 1;
+        }
+    }
+}
+
+/// Reusable scratch arena for [`simulate_in`]: every per-run transient
+/// (dependency counters, per-unit ready queues and wake flags, SPM-port
+/// and NoC-link occupancy, the event calendar) keeps its allocation
+/// across calls.  One workspace serves one simulation at a time; the
+/// coordinator's [`crate::coordinator::Session`] keeps a pool so
+/// parallel `run_many` workers each reuse their own.
+#[derive(Debug, Default)]
+pub struct SimWorkspace {
+    remaining: Vec<u32>,
+    /// Per-unit ready queues: min-heap on (packed priority, block id).
+    ready: Vec<BinaryHeap<Reverse<(u64, u32)>>>,
+    /// Per-unit "a live UnitFree event is queued" flag.
+    wake_pending: Vec<bool>,
+    /// SPM ports: exactly one `(free_at, port)` entry per port.
+    port_heap: BinaryHeap<Reverse<(u64, u32)>>,
+    link_free: Vec<u64>,
+    wheel: EventWheel,
+}
+
+impl SimWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Run a program to completion and collect statistics (one-shot
+/// wrapper over [`simulate_in`] with a throwaway workspace).
 pub fn simulate(program: &Program, arch: &ArchConfig, opts: &SimOptions) -> SimStats {
-    let blocks = &program.blocks;
+    let mut ws = SimWorkspace::new();
+    simulate_in(&mut ws, program, arch, opts)
+}
+
+/// Scheduler priority of a block at the moment it becomes ready: the
+/// precomputed packed `{layer, iter}` string, or — under the FIFO
+/// ablation — the next insertion-order ticket (assigned at ready time,
+/// exactly like the reference engine's lazy `make_prio`).
+#[inline]
+fn next_prio(fifo: bool, fifo_seq: &mut u64, static_prio: u64) -> u64 {
+    if fifo {
+        *fifo_seq += 1;
+        *fifo_seq
+    } else {
+        static_prio
+    }
+}
+
+/// Mark a block ready on its unit's queue and wake the unit if no live
+/// wake event is already scheduled (at most one per unit, ever).
+#[inline]
+fn enqueue_ready(
+    ready: &mut [BinaryHeap<Reverse<(u64, u32)>>],
+    wake_pending: &mut [bool],
+    wheel: &mut EventWheel,
+    prio: u64,
+    slot: usize,
+    block: u32,
+    t: u64,
+) {
+    ready[slot].push(Reverse((prio, block)));
+    if !wake_pending[slot] {
+        wake_pending[slot] = true;
+        wheel.push(t, Event::UnitFree { slot: slot as u32 });
+    }
+}
+
+/// Run a program to completion inside a reusable workspace.
+///
+/// Results are independent of the workspace's history: every scratch
+/// structure is reset (but not reallocated) before the run.
+pub fn simulate_in(
+    ws: &mut SimWorkspace,
+    program: &Program,
+    arch: &ArchConfig,
+    opts: &SimOptions,
+) -> SimStats {
+    let exec: &ExecLayout = &program.exec;
+    let nb = exec.len();
     let num_pes = arch.num_pes();
+    let num_units = num_pes * 4;
     let w = arch.simd_width as u64;
     let entry = arch.spm_entry_width as u64;
-
-    // Dependents (CSR layout — one flat array, no per-block Vecs) +
-    // remaining-dep counts.
-    let mut remaining: Vec<u32> = vec![0; blocks.len()];
-    let mut dep_start: Vec<u32> = vec![0; blocks.len() + 1];
-    for b in blocks.iter() {
-        for d in &b.deps {
-            dep_start[d.0 as usize + 1] += 1;
-        }
-    }
-    for i in 0..blocks.len() {
-        dep_start[i + 1] += dep_start[i];
-    }
-    let mut dep_flat: Vec<u32> = vec![0; dep_start[blocks.len()] as usize];
-    let mut cursor: Vec<u32> = dep_start[..blocks.len()].to_vec();
-    for (i, b) in blocks.iter().enumerate() {
-        remaining[i] = b.deps.len() as u32;
-        for d in &b.deps {
-            let c = &mut cursor[d.0 as usize];
-            dep_flat[*c as usize] = i as u32;
-            *c += 1;
-        }
-        // Input-bearing layer-0 loads carry an extra virtual dependency
-        // on the DMA delivery of their iteration's chunk (resolved by a
-        // DmaArrive event) — the unit itself never stalls on DMA.
-        if dma_gated(b) {
-            remaining[i] += 1;
-        }
-    }
-    let dependents = |block: usize| -> &[u32] {
-        &dep_flat[dep_start[block] as usize..dep_start[block + 1] as usize]
-    };
-
-    // Units.
-    let mut units: Vec<UnitState> = (0..num_pes * 4)
-        .map(|_| UnitState { free_at: 0, ready: BinaryHeap::new() })
-        .collect();
-    let unit_idx = |pe: u16, unit: UnitKind| pe as usize * 4 + unit.index();
-
-    // SPM ports: one SIMD16 port per bank for row-wise access; the
-    // multi-line interleave makes column access equal cost (§V-C).
     let num_ports = arch.spm_banks.max(1);
-    let mut port_free: Vec<u64> = vec![0; num_ports];
 
-    // NoC links: directed, 4 per PE (N, E, S, W neighbours).
-    let mut link_free: Vec<u64> = vec![0; num_pes * 4];
+    // --- Reset the arena (allocation-free once warm). ---
+    ws.remaining.clear();
+    ws.remaining.extend_from_slice(&exec.n_deps);
+    if ws.ready.len() < num_units {
+        ws.ready.resize_with(num_units, BinaryHeap::new);
+    }
+    for q in &mut ws.ready[..num_units] {
+        q.clear();
+    }
+    ws.wake_pending.clear();
+    ws.wake_pending.resize(num_units, false);
+    ws.port_heap.clear();
+    for p in 0..num_ports {
+        ws.port_heap.push(Reverse((0u64, p as u32)));
+    }
+    ws.link_free.clear();
+    ws.link_free.resize(num_pes * 4, 0);
+    ws.wheel.reset();
 
-    // DMA schedule: weight preamble then per-iteration in+out chunks.
+    // --- DMA schedule: weight preamble then per-iteration chunks. ---
     let bpc = arch.ddr_bytes_per_cycle();
     let weight_cycles = (program.meta.weight_dma_bytes as f64 / bpc).ceil() as u64;
     let chunk_in = program.meta.dma_in_bytes_per_iter as f64;
-    let chunk_out = program.meta.dma_out_bytes_per_iter as f64;
-    // Inputs prefetch ahead of compute (double buffering); outputs drain
-    // on the writeback half of the channel budget and never gate loads.
-    let _ = chunk_out;
+    // Inputs prefetch ahead of compute (double buffering).  Output
+    // drains (`meta.dma_out_bytes_per_iter`) never gate loads: they are
+    // charged to the writeback half of the channel budget — counted in
+    // `SimStats::dma_bytes` below and priced by the coordinator
+    // (`KernelResult::dma_time_s` deliberately excludes them), so they
+    // deliberately do not appear in this delivery schedule.
     let dma_ready = |iter: u32| -> u64 {
         arch.dma_setup + weight_cycles + (((iter as f64 + 1.0) * chunk_in) / bpc).ceil() as u64
     };
@@ -141,7 +333,6 @@ pub fn simulate(program: &Program, arch: &ArchConfig, opts: &SimOptions) -> SimS
     // exists, the makespan includes the cold-start fill `dma_ready(0)`
     // (setup + weight preamble + first chunk), which the coordinator's
     // streaming overlap model can hide under a preceding kernel.
-    let gated_loads = blocks.iter().any(dma_gated);
     let mut stats = SimStats {
         unit_busy_per_pe: vec![[0u64; 4]; num_pes],
         active_pes: program.meta.active_pes,
@@ -151,176 +342,157 @@ pub fn simulate(program: &Program, arch: &ArchConfig, opts: &SimOptions) -> SimS
                     + program.meta.dma_out_bytes_per_iter),
         dma_weight_bytes: program.meta.weight_dma_bytes,
         dma_in_bytes: program.meta.iters as u64 * program.meta.dma_in_bytes_per_iter,
-        dma_fill_cycles: if gated_loads { dma_ready(0) } else { 0 },
+        dma_fill_cycles: if exec.any_dma_gated { dma_ready(0) } else { 0 },
         ..Default::default()
     };
     let mut iter_done: Vec<u64> = vec![0; program.meta.iters];
 
-    // Event queue: (time, seq, event).
-    let mut seq: u64 = 0;
-    let mut events: BinaryHeap<Reverse<(u64, u64, Event)>> = BinaryHeap::new();
-    let push_event = |events: &mut BinaryHeap<Reverse<(u64, u64, Event)>>,
-                          seq: &mut u64,
-                          t: u64,
-                          e: Event| {
-        *seq += 1;
-        events.push(Reverse((t, *seq, e)));
-    };
+    // FIFO-ablation priorities are assigned in ready order (matching
+    // the reference engine's lazy `make_prio`), not block order.
+    let fifo = opts.fifo_scheduling;
+    let mut fifo_seq: u64 = 0;
 
-    // Seed ready sets.
-    let mut fifo_seq: u32 = 0;
-    let mut make_prio = |b: &Block, opts: &SimOptions| -> Prio {
-        if opts.fifo_scheduling {
-            fifo_seq += 1;
-            (0, fifo_seq, 0)
-        } else {
-            (b.layer, b.iter, 0)
+    // --- Seed: initially-ready blocks and the DMA delivery calendar. ---
+    for i in 0..nb {
+        if exec.n_deps[i] == 0 {
+            let prio = next_prio(fifo, &mut fifo_seq, exec.prio[i]);
+            ws.ready[exec.unit_slot[i] as usize].push(Reverse((prio, i as u32)));
         }
-    };
-    for (i, b) in blocks.iter().enumerate() {
-        if remaining[i] == 0 {
-            let p = make_prio(b, opts);
-            units[unit_idx(b.pe, b.unit)].ready.push(Reverse((p, i as u32)));
-        }
-        if dma_gated(b) {
-            push_event(
-                &mut events,
-                &mut seq,
-                dma_ready(b.iter),
-                Event::DmaArrive { block: i as u32 },
-            );
+        if exec.flags[i] & ExecLayout::FLAG_DMA_GATED != 0 {
+            ws.wheel.push(dma_ready(exec.iter[i]), Event::DmaArrive { block: i as u32 });
         }
     }
-    for pe in 0..num_pes as u16 {
-        for unit in 0..4u8 {
-            push_event(&mut events, &mut seq, 0, Event::UnitFree { pe, unit });
-        }
+    for slot in 0..num_units {
+        ws.wake_pending[slot] = true;
+        ws.wheel.push(0, Event::UnitFree { slot: slot as u32 });
     }
 
+    // --- Event loop. ---
     let mut now: u64 = 0;
-    while let Some(Reverse((t, _, ev))) = events.pop() {
-        now = now.max(t);
+    while let Some((t, ev)) = ws.wheel.pop() {
+        now = t; // calendar pops are time-monotone
         match ev {
             Event::BlockDone { block } => {
-                for &dep in dependents(block as usize) {
-                    remaining[dep as usize] -= 1;
-                    if remaining[dep as usize] == 0 {
-                        let b = &blocks[dep as usize];
-                        let p = make_prio(b, opts);
-                        let ui = unit_idx(b.pe, b.unit);
-                        units[ui].ready.push(Reverse((p, dep)));
-                        if units[ui].free_at <= t {
-                            push_event(
-                                &mut events,
-                                &mut seq,
-                                t,
-                                Event::UnitFree { pe: b.pe, unit: b.unit.index() as u8 },
-                            );
-                        }
+                let b = block as usize;
+                let ds = exec.dep_start[b] as usize;
+                let de = exec.dep_start[b + 1] as usize;
+                for &dep in &exec.dep_flat[ds..de] {
+                    let d = dep as usize;
+                    ws.remaining[d] -= 1;
+                    if ws.remaining[d] == 0 {
+                        let prio = next_prio(fifo, &mut fifo_seq, exec.prio[d]);
+                        enqueue_ready(
+                            &mut ws.ready,
+                            &mut ws.wake_pending,
+                            &mut ws.wheel,
+                            prio,
+                            exec.unit_slot[d] as usize,
+                            dep,
+                            t,
+                        );
                     }
                 }
-                let b = &blocks[block as usize];
-                if b.completes_iter {
-                    let d = &mut iter_done[b.iter as usize];
+                if exec.flags[b] & ExecLayout::FLAG_COMPLETES_ITER != 0 {
+                    let d = &mut iter_done[exec.iter[b] as usize];
                     *d = (*d).max(t);
                 }
             }
             Event::DmaArrive { block } => {
-                remaining[block as usize] -= 1;
-                if remaining[block as usize] == 0 {
-                    let b = &blocks[block as usize];
-                    let p = make_prio(b, opts);
-                    let ui = unit_idx(b.pe, b.unit);
-                    units[ui].ready.push(Reverse((p, block)));
-                    if units[ui].free_at <= t {
-                        push_event(
-                            &mut events,
-                            &mut seq,
-                            t,
-                            Event::UnitFree { pe: b.pe, unit: b.unit.index() as u8 },
-                        );
-                    }
+                let b = block as usize;
+                ws.remaining[b] -= 1;
+                if ws.remaining[b] == 0 {
+                    let prio = next_prio(fifo, &mut fifo_seq, exec.prio[b]);
+                    enqueue_ready(
+                        &mut ws.ready,
+                        &mut ws.wake_pending,
+                        &mut ws.wheel,
+                        prio,
+                        exec.unit_slot[b] as usize,
+                        block,
+                        t,
+                    );
                 }
             }
-            Event::UnitFree { pe, unit } => {
-                let ui = pe as usize * 4 + unit as usize;
-                if units[ui].free_at > t {
-                    continue; // stale wake-up; a real free event will come
-                }
-                let Some(Reverse((_, bid))) = units[ui].ready.pop() else {
+            Event::UnitFree { slot } => {
+                let slot = slot as usize;
+                ws.wake_pending[slot] = false;
+                let Some(Reverse((_, bid))) = ws.ready[slot].pop() else {
                     continue;
                 };
-                let b = &blocks[bid as usize];
-                let mut start = t.max(units[ui].free_at);
+                let b = bid as usize;
+                // Every queued UnitFree is live (the pending-wake flag
+                // guarantees it), so service starts at the event time.
+                let mut start = t;
                 let mut done_at; // when outputs are visible
                 let service_end; // when the unit frees
-                match b.unit {
-                    UnitKind::Cal => {
-                        let dur = arch.block_issue_overhead + b.ops;
+                let uidx = exec.unit[b];
+                match uidx {
+                    U_CAL => {
+                        let dur = arch.block_issue_overhead + exec.ops[b];
                         service_end = start + dur;
                         done_at = service_end;
                     }
-                    UnitKind::Load | UnitKind::Store => {
+                    U_LOAD | U_STORE => {
                         // (DMA gating is a DmaArrive dependency, resolved
                         // before the block ever becomes ready.)
-                        // Acquire the earliest-free SPM port.
-                        let (pi, pf) = port_free
-                            .iter()
-                            .enumerate()
-                            .min_by_key(|(i, f)| (**f, *i))
-                            .map(|(i, f)| (i, *f))
-                            .unwrap();
+                        // Acquire the earliest-free SPM port (lowest
+                        // index on ties) from the port heap.
+                        let Reverse((pf, pi)) = ws.port_heap.pop().unwrap();
                         start = start.max(pf);
-                        let wide = b.scalars_wide * w;
-                        let wide_cycles = if opts.no_multiline_spm && b.layer > 0 {
+                        let wide = exec.scalars_wide[b] * w;
+                        let wide_cycles = if opts.no_multiline_spm
+                            && exec.flags[b] & ExecLayout::FLAG_COL_ACCESS != 0
+                        {
                             // Column-gather without the multi-line design:
                             // one scalar per cycle.
                             wide
                         } else {
                             wide.div_ceil(entry)
                         };
-                        let bcast_cycles = b.scalars_bcast.div_ceil(entry);
+                        let bcast_cycles = exec.scalars_bcast[b].div_ceil(entry);
                         let dur = arch.block_issue_overhead
                             + arch.spm_latency
                             + wide_cycles
                             + bcast_cycles;
-                        port_free[pi] = start + dur;
+                        ws.port_heap.push(Reverse((start + dur, pi)));
                         stats.spm_port_busy += dur;
-                        stats.spm_scalars += wide + b.scalars_bcast;
+                        stats.spm_scalars += wide + exec.scalars_bcast[b];
                         service_end = start + dur;
                         done_at = service_end;
                     }
-                    UnitKind::Flow => {
-                        // Reserve the XY path; serialized transfer then
-                        // per-hop latency to visibility.
-                        let bytes = b.scalars_wide * w * arch.elem_bytes as u64;
+                    U_FLOW => {
+                        // Reserve the precomputed XY route; serialized
+                        // transfer then per-hop latency to visibility.
+                        let bytes = exec.scalars_wide[b] * w * arch.elem_bytes as u64;
                         let xfer = bytes.div_ceil(arch.noc_link_bytes as u64).max(1);
-                        let dest = b.dest_pe.unwrap_or(b.pe) as usize;
-                        let path = xy_path(b.pe as usize, dest, arch);
+                        let rs = exec.route_start[b] as usize;
+                        let re = exec.route_start[b + 1] as usize;
+                        let route = &exec.route_flat[rs..re];
                         let mut s = start;
-                        for &l in &path {
-                            s = s.max(link_free[l]);
+                        for &l in route {
+                            s = s.max(ws.link_free[l as usize]);
                         }
-                        for &l in &path {
-                            link_free[l] = s + xfer;
+                        for &l in route {
+                            ws.link_free[l as usize] = s + xfer;
                         }
                         let dur = arch.block_issue_overhead + (s - start) + xfer;
-                        stats.noc_scalars += b.scalars_wide * w;
+                        stats.noc_scalars += exec.scalars_wide[b] * w;
                         service_end = start + dur;
                         done_at =
-                            service_end + b.noc_hops as u64 * arch.noc_hop_latency;
+                            service_end + exec.noc_hops[b] as u64 * arch.noc_hop_latency;
                     }
+                    _ => unreachable!("unit kind index out of range"),
                 }
                 if done_at < service_end {
                     done_at = service_end;
                 }
                 let busy = service_end - start;
-                stats.unit_busy[b.unit.index()] += busy;
-                stats.unit_busy_per_pe[b.pe as usize][b.unit.index()] += busy;
+                stats.unit_busy[uidx as usize] += busy;
+                stats.unit_busy_per_pe[exec.pe[b] as usize][uidx as usize] += busy;
                 stats.blocks_run += 1;
-                units[ui].free_at = service_end;
-                push_event(&mut events, &mut seq, service_end, Event::UnitFree { pe, unit });
-                push_event(&mut events, &mut seq, done_at, Event::BlockDone { block: bid });
+                ws.wake_pending[slot] = true;
+                ws.wheel.push(service_end, Event::UnitFree { slot: slot as u32 });
+                ws.wheel.push(done_at, Event::BlockDone { block: bid });
             }
         }
     }
@@ -330,9 +502,13 @@ pub fn simulate(program: &Program, arch: &ArchConfig, opts: &SimOptions) -> SimS
     stats
 }
 
-/// Directed link ids along the XY route from `src` to `dst`.
+/// Directed link ids along the XY route from `src` to `dst` — the
+/// executable route *specification*.  The hot loop reads the
+/// [`crate::arch::RouteTable`]-derived CSR slices instead; tests assert
+/// the two stay equivalent over the full mesh.
 /// Link encoding: `pe * 4 + dir` with dir 0=E, 1=W, 2=S, 3=N, owned by the
 /// *upstream* PE.
+#[cfg(test)]
 fn xy_path(src: usize, dst: usize, arch: &ArchConfig) -> Vec<usize> {
     let cols = arch.mesh_cols;
     let (mut r, mut c) = (src / cols, src % cols);
@@ -364,6 +540,7 @@ fn xy_path(src: usize, dst: usize, arch: &ArchConfig) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::{RouteTable, UnitKind};
     use crate::dfg::graph::KernelKind;
     use crate::dfg::microcode::lower_stage;
     use crate::dfg::stages::StageDfg;
@@ -380,6 +557,14 @@ mod tests {
     }
 
     #[test]
+    fn unit_kind_constants_match_index() {
+        assert_eq!(U_LOAD as usize, UnitKind::Load.index());
+        assert_eq!(U_FLOW as usize, UnitKind::Flow.index());
+        assert_eq!(U_CAL as usize, UnitKind::Cal.index());
+        assert_eq!(U_STORE as usize, UnitKind::Store.index());
+    }
+
+    #[test]
     fn completes_and_is_deterministic() {
         let a = run(KernelKind::Bpmm, 256, 4);
         let b = run(KernelKind::Bpmm, 256, 4);
@@ -387,6 +572,25 @@ mod tests {
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.unit_busy, b.unit_busy);
         assert_eq!(a.blocks_run, b.blocks_run);
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_exact() {
+        // One workspace across heterogeneous programs must produce the
+        // same stats as fresh one-shot runs, in any order.
+        let arch = ArchConfig::full();
+        let progs = [
+            lower_stage(&stage(KernelKind::Fft, 256), &arch, 8),
+            lower_stage(&stage(KernelKind::Bpmm, 64), &arch, 3),
+            lower_stage(&stage(KernelKind::Fft, 256), &arch, 8),
+        ];
+        let mut ws = SimWorkspace::new();
+        let opts = SimOptions::default();
+        for p in &progs {
+            let reused = simulate_in(&mut ws, p, &arch, &opts);
+            let fresh = simulate(p, &arch, &opts);
+            assert_eq!(reused, fresh);
+        }
     }
 
     #[test]
@@ -481,8 +685,8 @@ mod tests {
     #[test]
     fn xy_path_lengths_match_manhattan() {
         let arch = ArchConfig::full();
-        for src in 0..16 {
-            for dst in 0..16 {
+        for src in 0..arch.num_pes() {
+            for dst in 0..arch.num_pes() {
                 let path = xy_path(src, dst, &arch);
                 assert_eq!(path.len(), arch.hop_distance(src, dst));
             }
@@ -490,11 +694,87 @@ mod tests {
     }
 
     #[test]
+    fn route_table_matches_legacy_xy_path() {
+        // The precomputed per-geometry table the engine consumes must
+        // reproduce the legacy walk link-for-link over the full mesh —
+        // including a non-square geometry.
+        for arch in [
+            ArchConfig::full(),
+            ArchConfig { mesh_rows: 2, mesh_cols: 8, ..ArchConfig::full() },
+        ] {
+            let table = RouteTable::for_arch(&arch);
+            assert_eq!(table.num_pes(), arch.num_pes());
+            for src in 0..arch.num_pes() {
+                for dst in 0..arch.num_pes() {
+                    let legacy: Vec<u32> =
+                        xy_path(src, dst, &arch).iter().map(|&l| l as u32).collect();
+                    assert_eq!(
+                        table.route(src, dst),
+                        &legacy[..],
+                        "route {src}->{dst} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn utilization_bounds() {
+        let arch = ArchConfig::full();
         let s = run(KernelKind::Fft, 256, 16);
         for k in crate::arch::UnitKind::ALL {
-            let u = s.utilization(k, 16);
+            let u = s.utilization(k, arch.num_pes());
             assert!((0.0..=1.0).contains(&u), "{k:?} {u}");
+        }
+    }
+
+    #[test]
+    fn event_wheel_orders_across_overflow() {
+        // Events pushed beyond the horizon must drain in (time,
+        // insertion) order once the cursor reaches them, interleaved
+        // correctly with direct bucket pushes at the same cycle.
+        let mut wh = EventWheel::default();
+        wh.reset();
+        let far = WHEEL_SLOTS as u64 * 3 + 17;
+        wh.push(far, Event::BlockDone { block: 1 }); // overflow
+        wh.push(0, Event::UnitFree { slot: 0 }); // bucket
+        wh.push(far + 1, Event::BlockDone { block: 2 }); // overflow
+        let (t0, e0) = wh.pop().unwrap();
+        assert_eq!((t0, e0), (0, Event::UnitFree { slot: 0 }));
+        // While at cursor 0, same-time far events land after migrated
+        // overflow entries only if pushed after the horizon crossed —
+        // push one at `far` now (still beyond horizon => overflow, with
+        // a later seq than block 1).
+        wh.push(far, Event::BlockDone { block: 3 });
+        let order: Vec<_> = std::iter::from_fn(|| wh.pop()).collect();
+        assert_eq!(
+            order,
+            vec![
+                (far, Event::BlockDone { block: 1 }),
+                (far, Event::BlockDone { block: 3 }),
+                (far + 1, Event::BlockDone { block: 2 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn matches_reference_engine_smoke() {
+        // Full-matrix equality lives in rust/tests/sim_golden.rs; keep
+        // one in-crate guard so `cargo test --lib` alone catches drift.
+        let arch = ArchConfig::full();
+        for (kind, points, iters) in
+            [(KernelKind::Fft, 128, 6), (KernelKind::Bpmm, 512, 3)]
+        {
+            let p = lower_stage(&stage(kind, points), &arch, iters);
+            for opts in [
+                SimOptions::default(),
+                SimOptions { fifo_scheduling: true, ..Default::default() },
+                SimOptions { no_multiline_spm: true, ..Default::default() },
+            ] {
+                let new = simulate(&p, &arch, &opts);
+                let old = crate::sim::reference::simulate(&p, &arch, &opts);
+                assert_eq!(new, old, "{kind:?}-{points} x{iters} {opts:?}");
+            }
         }
     }
 }

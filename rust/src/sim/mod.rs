@@ -8,12 +8,18 @@
 //! ports, a mesh NoC with per-link occupancy and XY routing, and a DMA
 //! engine streaming iteration data from DDR.
 //!
-//! [`engine`] runs one lowered [`crate::dfg::Program`]; [`result`] is the
-//! collected statistics.  Multi-stage plans, windowed extrapolation and
-//! figure-level metrics live in [`crate::coordinator`].
+//! [`engine`] runs one lowered [`crate::dfg::Program`] — rewritten for
+//! throughput around an indexed event calendar, per-unit pending-wake
+//! flags, precomputed NoC routes and a reusable [`SimWorkspace`] (see
+//! the engine module docs for the design); [`reference`] is the
+//! pre-rewrite engine frozen verbatim as the bit-exactness oracle
+//! (golden tests diff the two, the perf bench baselines against it).
+//! [`result`] is the collected statistics.  Multi-stage plans, windowed
+//! extrapolation and figure-level metrics live in [`crate::coordinator`].
 
 pub mod engine;
+pub mod reference;
 pub mod result;
 
-pub use engine::{simulate, SimOptions};
+pub use engine::{simulate, simulate_in, SimOptions, SimWorkspace};
 pub use result::SimStats;

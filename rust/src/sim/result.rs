@@ -3,7 +3,13 @@
 use crate::arch::UnitKind;
 
 /// Statistics of one simulated program (one stage DFG × window iters).
-#[derive(Debug, Clone, Default)]
+///
+/// Every field is integral and the simulator is deterministic, so two
+/// runs of equivalent engines over the same program must compare
+/// *exactly* equal — `PartialEq`/`Eq` here is the bit-exactness
+/// contract the golden suite (`rust/tests/sim_golden.rs`) checks the
+/// rewritten engine against [`crate::sim::reference`] with.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// Total simulated cycles (makespan).
     pub cycles: u64,

@@ -1,0 +1,204 @@
+//! Golden-stats gate for the simulator rewrite.
+//!
+//! The engine rewrite (`sim::engine`: event calendar, pending-wake
+//! flags, precomputed routes, SoA walk, reusable workspace) promised
+//! **bit-exact** [`SimStats`] against the pre-rewrite engine, which is
+//! frozen verbatim as `sim::reference`.  Rather than pinning numbers
+//! that silently rot when lowering legitimately changes, the goldens
+//! are *executable*: every case runs both engines over the identical
+//! `Program` and asserts exact equality of every field — cycles,
+//! per-unit and per-PE busy time, SPM/NoC/DMA counters, iteration
+//! completion times, block counts.
+//!
+//! Coverage: the fixture matrix {Fft, Bpmm} × {64, 256, 512 points} ×
+//! {1, 8, 48 iterations} × {pack 1, 4} under all simulator-option
+//! combinations, plus every stage program of every registered workload
+//! suite (windowed like the coordinator runs them).  The cache
+//! determinism and `parallel == serial` tests in `session.rs` continue
+//! to guard the coordinator layer above.
+
+use std::collections::HashSet;
+
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::session::stage_schedule;
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::dfg::microcode::lower_stage_packed;
+use butterfly_dataflow::dfg::stages::{plan_kernel, StageDfg};
+use butterfly_dataflow::sim::{self, simulate, simulate_in, SimOptions, SimWorkspace};
+use butterfly_dataflow::workloads::SUITES;
+
+fn opt_combos() -> [SimOptions; 4] {
+    [
+        SimOptions::default(),
+        SimOptions { fifo_scheduling: true, ..Default::default() },
+        SimOptions { no_multiline_spm: true, ..Default::default() },
+        SimOptions { fifo_scheduling: true, no_multiline_spm: true },
+    ]
+}
+
+fn assert_engines_agree(
+    stage: &StageDfg,
+    arch: &ArchConfig,
+    iters: usize,
+    pack: usize,
+    opts: &SimOptions,
+    label: &str,
+) {
+    let program = lower_stage_packed(stage, arch, iters, pack);
+    program.validate().unwrap();
+    let golden = sim::reference::simulate(&program, arch, opts);
+    let rewritten = simulate(&program, arch, opts);
+    assert_eq!(rewritten, golden, "engines diverged on {label} ({opts:?})");
+    // The statistics must be internally coherent too: every block ran.
+    assert_eq!(rewritten.blocks_run as usize, program.blocks.len(), "{label}");
+}
+
+#[test]
+fn golden_matrix_is_bit_exact() {
+    let arch = ArchConfig::full();
+    for kind in [KernelKind::Fft, KernelKind::Bpmm] {
+        for points in [64usize, 256, 512] {
+            for iters in [1usize, 8, 48] {
+                for pack in [1usize, 4] {
+                    let stage = StageDfg {
+                        kind,
+                        points,
+                        sub_iters: 1,
+                        twiddle_before: false,
+                        weights_from_ddr: false,
+                    };
+                    for opts in opt_combos() {
+                        assert_engines_agree(
+                            &stage,
+                            &arch,
+                            iters,
+                            pack,
+                            &opts,
+                            &format!("{}-{points} x{iters} pack{pack}", kind.name()),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_stage_variants_are_bit_exact() {
+    // Twiddle layers and DDR-streamed weights exercise the WLOAD and
+    // DMA-gating paths the plain matrix misses.
+    let arch = ArchConfig::full();
+    for (twiddle, ddr) in [(true, false), (false, true), (true, true)] {
+        for kind in [KernelKind::Fft, KernelKind::Bpmm] {
+            let stage = StageDfg {
+                kind,
+                points: 256,
+                sub_iters: 1,
+                twiddle_before: twiddle,
+                weights_from_ddr: ddr,
+            };
+            for opts in opt_combos() {
+                assert_engines_agree(
+                    &stage,
+                    &arch,
+                    8,
+                    1,
+                    &opts,
+                    &format!("{} twiddle={twiddle} ddr={ddr}", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_scaled_arch_is_bit_exact() {
+    // The §VI-H fair-comparison configuration (SIMD8, one DDR channel)
+    // changes lane scaling and the DMA schedule.
+    let arch = ArchConfig::scaled_128();
+    for kind in [KernelKind::Fft, KernelKind::Bpmm] {
+        let stage = StageDfg {
+            kind,
+            points: 256,
+            sub_iters: 1,
+            twiddle_before: false,
+            weights_from_ddr: false,
+        };
+        assert_engines_agree(
+            &stage,
+            &arch,
+            12,
+            2,
+            &SimOptions::default(),
+            &format!("scaled128 {}", kind.name()),
+        );
+    }
+}
+
+#[test]
+fn golden_all_suites_are_bit_exact() {
+    // Every stage program the registered suites actually simulate
+    // (same plan, same packing policy as the coordinator; window capped
+    // for test runtime — equality is program-for-program, so the cap
+    // does not weaken the check).
+    let arch = ArchConfig::full();
+    let mut seen: HashSet<(String, usize, bool, bool, usize, usize)> = HashSet::new();
+    let mut programs = 0usize;
+    for suite in SUITES {
+        for spec in suite.default_kernels() {
+            let plan = plan_kernel(spec.kind, spec.points, spec.vectors, &arch, None)
+                .unwrap_or_else(|e| panic!("plan {} failed: {e}", spec.name));
+            for stage in &plan.stages {
+                // The coordinator's own per-stage schedule (window
+                // capped at 16 instead of the session default 48 for
+                // test runtime — program shape is unaffected).
+                let (_, window, pack) = stage_schedule(stage, spec.vectors, &arch, 16);
+                let key = (
+                    format!("{:?}", stage.kind),
+                    stage.points,
+                    stage.twiddle_before,
+                    stage.weights_from_ddr,
+                    window,
+                    pack,
+                );
+                if !seen.insert(key) {
+                    continue; // identical stage program already diffed
+                }
+                programs += 1;
+                assert_engines_agree(
+                    stage,
+                    &arch,
+                    window,
+                    pack,
+                    &SimOptions::default(),
+                    &format!("suite {} kernel {} stage {}pt", suite.name, spec.name, stage.points),
+                );
+            }
+        }
+    }
+    assert!(programs >= 10, "suite sweep degenerated to {programs} programs");
+}
+
+#[test]
+fn golden_workspace_reuse_matches_reference() {
+    // One workspace threaded through the whole matrix (the session
+    // pool's usage pattern) must not leak state between runs.
+    let arch = ArchConfig::full();
+    let mut ws = SimWorkspace::new();
+    let opts = SimOptions::default();
+    for kind in [KernelKind::Fft, KernelKind::Bpmm] {
+        for (points, iters, pack) in [(64, 48, 4), (256, 8, 1), (512, 1, 4)] {
+            let stage = StageDfg {
+                kind,
+                points,
+                sub_iters: 1,
+                twiddle_before: false,
+                weights_from_ddr: false,
+            };
+            let program = lower_stage_packed(&stage, &arch, iters, pack);
+            let reused = simulate_in(&mut ws, &program, &arch, &opts);
+            let golden = sim::reference::simulate(&program, &arch, &opts);
+            assert_eq!(reused, golden, "{kind:?}-{points} x{iters} pack{pack}");
+        }
+    }
+}
