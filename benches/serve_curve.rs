@@ -1,0 +1,106 @@
+//! Serving load/latency curve: sweeps offered rate over a mixed-class
+//! request stream (a registered suite next to a hybrid spec string)
+//! and records p50/p95/p99, goodput vs. the capacity bound, rejection
+//! and utilization per point.
+//!
+//! Like the other benches this is a deterministic analysis program,
+//! not a statistical timer: a fixed traffic seed makes every number —
+//! including the `BENCH_serving.json` it writes — bit-reproducible.
+//! Rates are chosen as multiples of the measured capacity bound so the
+//! curve always spans light load through saturation regardless of the
+//! architecture's absolute speed.  CI runs `--quick` (fewer points,
+//! fewer arrivals) via the serve-smoke job and archives the JSON.
+
+use butterfly_dataflow::coordinator::{
+    Overlap, PipelineConfig, Report, ServeConfig, Session, Traffic,
+};
+use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads::resolve_model;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let keys = vec!["vit-256".to_string(), "att:fft2d,ffn:bpmm*x2".to_string()];
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait_s: 2e-3,
+        arrays: 1,
+        queue_cap: 256,
+        overlap: Overlap::Pipeline,
+    };
+    let session = Session::builder().build();
+
+    // Capacity of the offered mix (equal shares): arrays * max_batch
+    // over the mean full-batch service time of the classes.
+    let pipe = PipelineConfig::new(cfg.overlap, 1);
+    let mean_svc = keys
+        .iter()
+        .map(|k| {
+            let model = resolve_model(k).expect("bench classes resolve");
+            session
+                .run_network_with(&model, Some(cfg.max_batch), pipe)
+                .expect("bench classes simulate")
+                .batch_time_s
+        })
+        .sum::<f64>()
+        / keys.len() as f64;
+    let capacity = cfg.arrays as f64 * cfg.max_batch as f64 / mean_svc;
+
+    let mults: &[f64] = if quick { &[0.5, 2.0] } else { &[0.25, 0.5, 1.0, 2.0, 4.0] };
+    let arrivals_per_point = if quick { 150.0 } else { 600.0 };
+    let mut t = Table::new(
+        &format!(
+            "serving load/latency curve ({}; capacity bound {:.1} req/s)",
+            keys.join(" + "),
+            capacity
+        ),
+        &[
+            "rate r/s", "offered", "rej", "goodput r/s", "p50 ms", "p95 ms", "p99 ms", "util",
+            "batch",
+        ],
+    );
+    let mut points = Vec::new();
+    for &mult in mults {
+        let rate = mult * capacity;
+        let traffic = Traffic::poisson(&keys, rate, arrivals_per_point / rate, 42)
+            .expect("poisson traffic");
+        let r = session.serve(&traffic, &cfg).expect("serving simulation");
+        t.row(&[
+            format!("{:.1}", r.offered_rate_rps),
+            format!("{}", r.offered),
+            format!("{}", r.rejected),
+            format!("{:.1}", r.goodput_rps),
+            format!("{:.3}", r.latency_p50_ms),
+            format!("{:.3}", r.latency_p95_ms),
+            format!("{:.3}", r.latency_p99_ms),
+            format!("{:.1}%", 100.0 * r.utilization),
+            format!("{:.2}", r.mean_batch),
+        ]);
+        points.push(r);
+    }
+    t.print();
+
+    // The acceptance property the curve must exhibit: p99 never
+    // improves as offered load grows (same seed => scaled arrivals).
+    for w in points.windows(2) {
+        assert!(
+            w[1].latency_p99_ms >= w[0].latency_p99_ms - 1e-9,
+            "p99 regressed with load: {} -> {}",
+            w[0].latency_p99_ms,
+            w[1].latency_p99_ms
+        );
+    }
+    let cache = session.cache_stats();
+    println!(
+        "plan cache across the whole sweep: {} lowerings, {} stage hits, {} plan hits",
+        cache.lowerings, cache.stage_hits, cache.plan_hits
+    );
+
+    let report = Report::Serving {
+        arch: session.arch_signature().to_string(),
+        cache,
+        points,
+    };
+    let path = "BENCH_serving.json";
+    std::fs::write(path, report.render() + "\n").expect("write BENCH_serving.json");
+    println!("wrote {path}");
+}

@@ -14,7 +14,11 @@
 //! pipelining of consecutive batch elements, and batch sharding across
 //! replicated arrays (`Session::builder().overlap(..).arrays(..)`).
 //! Results serialize through [`Report`] ([`report`]) for benches and
-//! CI.
+//! CI.  On top of the batch-level schedule sits the serving layer
+//! ([`serve`]): deterministic Poisson/trace traffic over mixed request
+//! classes, a dynamic batcher (max-batch/max-wait), and a
+//! discrete-event loop across replica arrays producing SLO percentiles
+//! ([`Session::serve`], `Report::Serving`, `bfdf serve-sim`).
 //!
 //! The historical one-shot free functions ([`run_kernel`],
 //! [`run_kernel_with`], [`stream_workload`]) are deprecated wrappers
@@ -25,6 +29,7 @@ pub mod experiment;
 pub mod network;
 pub mod pipeline;
 pub mod report;
+pub mod serve;
 pub mod session;
 pub mod streaming;
 
@@ -32,6 +37,7 @@ pub use experiment::{ExperimentConfig, KernelResult};
 pub use network::{BlockResult, DenseResult, LayerResult, NetworkResult};
 pub use pipeline::{Overlap, OverlapEstimate, PipelineConfig, StageCost};
 pub use report::{Report, SweepRow};
+pub use serve::{Arrival, ClassServeStats, ServeConfig, ServeResult, Traffic};
 pub use session::{CacheStats, Session, SessionBuilder};
 pub use streaming::StreamResult;
 

@@ -2,7 +2,7 @@
 //!
 //! Every CLI subcommand, bench and CI consumer used to scrape the text
 //! tables; [`Report`] is the structured alternative, serialized through
-//! [`crate::util::json`] (the offline vendor set has no serde).  Four
+//! [`crate::util::json`] (the offline vendor set has no serde).  Five
 //! variants cover the coordinator's result shapes:
 //!
 //! * [`Report::Kernel`]  — one kernel simulation ([`KernelResult`]);
@@ -10,7 +10,10 @@
 //!   the session's cache activity;
 //! * [`Report::Network`] — a hybrid network run ([`NetworkResult`])
 //!   with the per-layer / per-block breakdown;
-//! * [`Report::Sweep`]   — a division sweep (the Fig. 14 scenario).
+//! * [`Report::Sweep`]   — a division sweep (the Fig. 14 scenario);
+//! * [`Report::Serving`] — a serving-simulation load/latency curve
+//!   ([`ServeResult`] points from `bfdf serve-sim`), with the shared
+//!   session cache stats that make multi-tenant plan reuse observable.
 //!
 //! The JSON layout is stable: a top-level `"report"` discriminator plus
 //! flat snake_case metric keys matching the `KernelResult`/
@@ -21,6 +24,7 @@ use crate::util::json::{arr, num, obj, s, Json};
 
 use super::experiment::KernelResult;
 use super::network::{BlockResult, LayerResult, NetworkResult};
+use super::serve::ServeResult;
 use super::session::CacheStats;
 use super::streaming::StreamResult;
 
@@ -62,6 +66,16 @@ pub enum Report {
         kernel: String,
         rows: Vec<SweepRow>,
     },
+    /// A serving-simulation load/latency curve: one [`ServeResult`]
+    /// per offered rate (a single rate is a one-point curve; trace
+    /// runs are always one point).
+    Serving {
+        arch: String,
+        /// Session cache totals after the whole sweep — nonzero hits
+        /// are the multi-tenant plan-sharing evidence.
+        cache: CacheStats,
+        points: Vec<ServeResult>,
+    },
 }
 
 impl Report {
@@ -91,6 +105,12 @@ impl Report {
                 ("arch", s(arch)),
                 ("kernel", s(kernel)),
                 ("rows", arr(rows.iter().map(sweep_row_json).collect())),
+            ]),
+            Report::Serving { arch, cache, points } => obj(vec![
+                ("report", s("serving")),
+                ("arch", s(arch)),
+                ("cache", cache_json(cache)),
+                ("points", arr(points.iter().map(ServeResult::to_json).collect())),
             ]),
         }
     }
@@ -320,6 +340,34 @@ mod tests {
         let blocks = layers[1].req("blocks").unwrap().as_arr().unwrap().to_vec();
         assert_eq!(blocks[0].req_str("label").unwrap(), "att:dense");
         assert!(blocks[0].req("dense").unwrap().req_f64("time_s").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn serving_report_round_trips() {
+        use crate::coordinator::serve::{ServeConfig, Traffic};
+        let session = Session::builder().build();
+        let traffic =
+            Traffic::poisson(&["att:bpmm".to_string()], 2000.0, 0.05, 11).unwrap();
+        let point = session.serve(&traffic, &ServeConfig::default()).unwrap();
+        let report = Report::Serving {
+            arch: session.arch_signature().to_string(),
+            cache: session.cache_stats(),
+            points: vec![point],
+        };
+        let parsed = json::parse(&report.render()).unwrap();
+        assert_eq!(parsed.req_str("report").unwrap(), "serving");
+        let points = parsed.req("points").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert!(p.req_f64("latency_p99_ms").unwrap() > 0.0);
+        assert!(p.req_f64("goodput_rps").unwrap() > 0.0);
+        assert!(p.req_f64("capacity_rps").unwrap() > 0.0);
+        assert_eq!(p.req_str("overlap").unwrap(), "pipeline");
+        let classes = p.req("classes").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(classes.len(), 1);
+        assert_eq!(classes[0].req_str("spec").unwrap(), "att:bpmm");
+        // Repeated batches of one class must share plans in the cache.
+        assert!(parsed.req("cache").unwrap().req_f64("stage_hits").unwrap() >= 1.0);
     }
 
     #[test]

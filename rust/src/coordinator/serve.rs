@@ -1,0 +1,788 @@
+//! Serving-at-scale simulation: trace-driven traffic, dynamic batching,
+//! and SLO percentiles under load.
+//!
+//! The paper's Table IV methodology streams one fixed batch through the
+//! array and reports its average latency — a *throughput* experiment.
+//! Serving "millions of users" is a different question: requests arrive
+//! asynchronously, latency includes queueing, and capacity is
+//! "requests/s/array at a fixed p99", not "batch time at batch 256".
+//! This module layers a discrete-event serving loop over everything the
+//! lower layers already measure:
+//!
+//! 1. **Traffic generator** ([`Traffic`]): deterministic Poisson
+//!    arrivals (seeded [`Rng::exp`] inter-arrivals, so a fixed seed is
+//!    bit-reproducible and rate sweeps are time-scaled copies of one
+//!    arrival pattern) or an explicit JSON trace file, over *mixed*
+//!    request classes — any registered suite name or spec-grammar
+//!    string ([`crate::workloads::resolve_model`]), e.g. `bert-4k` next
+//!    to `vit-256` next to `att:fft2d,ffn:bpmm*x2`.
+//! 2. **Dynamic batcher**: queued requests of one class pack into a
+//!    batch when the class reaches [`ServeConfig::max_batch`] or its
+//!    oldest request has waited [`ServeConfig::max_wait_s`], whichever
+//!    comes first (and a replica array is free).  Batch cost comes from
+//!    the plan-cached [`Session::run_network_with`] pipeline schedule,
+//!    so many concurrent classes share one session cache — the
+//!    multi-tenant property that keeps per-request marginal simulation
+//!    cost near zero ([`Session::cache_stats`] makes it observable).
+//! 3. **Serving loop**: a deterministic discrete-event simulation over
+//!    [`ServeConfig::arrays`] replica arrays (each executes one batch
+//!    at a time) with a bounded admission queue
+//!    ([`ServeConfig::queue_cap`]) — arrivals beyond it are rejected —
+//!    tracking per-request queueing delay and end-to-end latency.
+//! 4. **Report** ([`ServeResult`]): p50/p95/p99/mean latency, goodput
+//!    (completed requests/s over the makespan), the analytic capacity
+//!    bound goodput saturates at, utilization, queue-depth stats and a
+//!    per-class breakdown — serialized as `Report::Serving` and plotted
+//!    by `bfdf serve-sim` / `BENCH_serving.json`.
+//!
+//! The layering, bottom-up: the cycle-level simulator prices one kernel
+//! window; the analytic overlap model ([`super::pipeline`]) prices one
+//! *batch* (DMA double buffering + inter-kernel pipelining on one
+//! array); this module prices a *workload of batches over time*.  All
+//! three are deterministic, so a fixed traffic seed reproduces the
+//! whole load/latency curve bit-for-bit.
+//!
+//! ```no_run
+//! use butterfly_dataflow::coordinator::{Session, serve::{ServeConfig, Traffic}};
+//!
+//! let session = Session::builder().build();
+//! let traffic = Traffic::poisson(
+//!     &["vanilla".into(), "att:fft2d,ffn:bpmm*x2".into()], 500.0, 1.0, 42)?;
+//! let result = session.serve(&traffic, &ServeConfig::default())?;
+//! println!("p99 {:.2} ms at {:.0} req/s", result.latency_p99_ms, result.goodput_rps);
+//! # anyhow::Ok(())
+//! ```
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{ensure, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::workloads::{resolve_model, spec::ModelSpec};
+
+use super::pipeline::{Overlap, PipelineConfig};
+use super::session::Session;
+
+/// Dynamic-batcher and serving-loop knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max requests packed into one batch (per class).
+    pub max_batch: usize,
+    /// Max time the oldest queued request of a class waits before a
+    /// partial batch dispatches anyway (seconds).
+    pub max_wait_s: f64,
+    /// Replica dataflow arrays; each serves one batch at a time (this
+    /// is concurrency *across* batches — per-batch sharding stays a
+    /// [`super::pipeline`] concern and is not applied here).
+    pub arrays: usize,
+    /// Bounded admission queue (total across classes); arrivals beyond
+    /// it are rejected.
+    pub queue_cap: usize,
+    /// Per-batch streaming overlap model (the paper-faithful default is
+    /// [`Overlap::Pipeline`], matching the CLI).
+    pub overlap: Overlap,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            max_wait_s: 2e-3,
+            arrays: 1,
+            queue_cap: 256,
+            overlap: Overlap::Pipeline,
+        }
+    }
+}
+
+/// One request arrival: a time and an index into [`Traffic::classes`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub t_s: f64,
+    pub class: usize,
+}
+
+/// A request stream over mixed request classes.
+#[derive(Debug, Clone)]
+pub struct Traffic {
+    /// The distinct request classes (each one whole network to run per
+    /// request), resolved via [`resolve_model`].
+    pub classes: Vec<ModelSpec>,
+    /// Arrivals sorted by time.
+    pub arrivals: Vec<Arrival>,
+    /// Arrival horizon (s): Poisson generation stops here; for traces,
+    /// the last arrival time.  Denominator of the offered rate.
+    pub duration_s: f64,
+}
+
+impl Traffic {
+    /// Deterministic Poisson traffic: exponential inter-arrivals at
+    /// `rate_rps` over `[0, duration_s)`, class drawn uniformly per
+    /// arrival.  Exactly one `exp` draw plus one class draw per arrival
+    /// (in that order), so two rates from the same seed produce
+    /// time-scaled copies of one arrival/class sequence — rate sweeps
+    /// compare the *same* workload under compression, which is what
+    /// makes their latency curves monotone.
+    pub fn poisson(keys: &[String], rate_rps: f64, duration_s: f64, seed: u64) -> Result<Traffic> {
+        ensure!(!keys.is_empty(), "poisson traffic needs at least one workload class");
+        ensure!(
+            rate_rps > 0.0 && rate_rps.is_finite(),
+            "arrival rate must be positive and finite (got {rate_rps})"
+        );
+        ensure!(
+            duration_s > 0.0 && duration_s.is_finite(),
+            "traffic duration must be positive and finite (got {duration_s})"
+        );
+        let classes: Vec<ModelSpec> =
+            keys.iter().map(|k| resolve_model(k)).collect::<Result<_>>()?;
+        let mut rng = Rng::new(seed);
+        let mut arrivals = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exp(rate_rps);
+            // Class draw happens unconditionally so the per-arrival
+            // draw count is rate-independent (see the scaling note).
+            let class = rng.below(classes.len() as u64) as usize;
+            if t >= duration_s {
+                break;
+            }
+            arrivals.push(Arrival { t_s: t, class });
+        }
+        Ok(Traffic { classes, arrivals, duration_s })
+    }
+
+    /// Parse a JSON trace document (see the README "Serving simulation"
+    /// section):
+    ///
+    /// ```json
+    /// {"arrivals": [{"t": 0.000, "workload": "bert-4k"},
+    ///               {"t": 0.0012, "workload": "att:fft2d,ffn:bpmm*x2"}]}
+    /// ```
+    ///
+    /// `t` is the arrival time in seconds; `workload` is a suite name
+    /// or spec string.  Arrivals may appear in any order (they are
+    /// stably sorted by time); classes are numbered by first
+    /// appearance.
+    pub fn from_trace_str(text: &str) -> Result<Traffic> {
+        let doc = json::parse(text)?;
+        let items = doc
+            .req("arrivals")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("trace \"arrivals\" must be an array"))?;
+        ensure!(!items.is_empty(), "trace has no arrivals");
+        let mut keys: Vec<String> = Vec::new();
+        let mut arrivals = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            let t = item
+                .req_f64("t")
+                .map_err(|e| anyhow::anyhow!("trace arrival {i}: {e}"))?;
+            ensure!(
+                t.is_finite() && t >= 0.0,
+                "trace arrival {i}: time must be finite and >= 0 (got {t})"
+            );
+            let w = item
+                .req_str("workload")
+                .map_err(|e| anyhow::anyhow!("trace arrival {i}: {e}"))?;
+            let class = match keys.iter().position(|k| k == w) {
+                Some(c) => c,
+                None => {
+                    keys.push(w.to_string());
+                    keys.len() - 1
+                }
+            };
+            arrivals.push(Arrival { t_s: t, class });
+        }
+        arrivals.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).expect("finite times"));
+        let classes: Vec<ModelSpec> =
+            keys.iter().map(|k| resolve_model(k)).collect::<Result<_>>()?;
+        let duration_s = arrivals.last().map(|a| a.t_s).unwrap_or(0.0);
+        Ok(Traffic { classes, arrivals, duration_s })
+    }
+
+    /// [`Traffic::from_trace_str`] over a file path.
+    pub fn from_trace_file(path: &str) -> Result<Traffic> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace file '{path}': {e}"))?;
+        Self::from_trace_str(&text)
+    }
+}
+
+/// Per-class slice of a serving run.
+#[derive(Debug, Clone)]
+pub struct ClassServeStats {
+    /// Class name (suite name, or the spec string itself).
+    pub name: String,
+    /// Canonical spec-grammar string of the class network.
+    pub spec: String,
+    pub offered: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+/// Result of one serving simulation (one point of a load/latency
+/// curve).
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    /// Offered load: arrivals / duration (req/s).
+    pub offered_rate_rps: f64,
+    /// Arrival horizon of the traffic (s).
+    pub duration_s: f64,
+    pub offered: u64,
+    pub admitted: u64,
+    /// Arrivals bounced off the full admission queue.
+    pub rejected: u64,
+    pub completed: u64,
+    /// Last event time: queue drain may extend past `duration_s`.
+    pub makespan_s: f64,
+    /// Completed requests/s over the makespan — saturates at
+    /// `capacity_rps` under overload.
+    pub goodput_rps: f64,
+    /// Analytic ceiling: `arrays × max_batch / (mix-weighted service
+    /// time of a full batch)`.
+    pub capacity_rps: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_mean_ms: f64,
+    pub latency_max_ms: f64,
+    pub queue_delay_mean_ms: f64,
+    pub queue_delay_p99_ms: f64,
+    /// Event-sampled queue depth (total across classes).
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
+    /// Batches dispatched and their mean size.
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Mean busy fraction across the replica arrays over the makespan.
+    pub utilization: f64,
+    /// Active service energy of all dispatched batches (J).
+    pub energy_j: f64,
+    pub energy_per_req_j: f64,
+    pub arrays: usize,
+    pub max_batch: usize,
+    pub max_wait_s: f64,
+    pub queue_cap: usize,
+    pub overlap: Overlap,
+    pub classes: Vec<ClassServeStats>,
+}
+
+impl ServeResult {
+    /// JSON view (one point of `Report::Serving`).
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::{arr, num, obj, s};
+        obj(vec![
+            ("offered_rate_rps", num(self.offered_rate_rps)),
+            ("duration_s", num(self.duration_s)),
+            ("offered", num(self.offered as f64)),
+            ("admitted", num(self.admitted as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("completed", num(self.completed as f64)),
+            ("makespan_s", num(self.makespan_s)),
+            ("goodput_rps", num(self.goodput_rps)),
+            ("capacity_rps", num(self.capacity_rps)),
+            ("latency_p50_ms", num(self.latency_p50_ms)),
+            ("latency_p95_ms", num(self.latency_p95_ms)),
+            ("latency_p99_ms", num(self.latency_p99_ms)),
+            ("latency_mean_ms", num(self.latency_mean_ms)),
+            ("latency_max_ms", num(self.latency_max_ms)),
+            ("queue_delay_mean_ms", num(self.queue_delay_mean_ms)),
+            ("queue_delay_p99_ms", num(self.queue_delay_p99_ms)),
+            ("queue_depth_mean", num(self.queue_depth_mean)),
+            ("queue_depth_max", num(self.queue_depth_max as f64)),
+            ("batches", num(self.batches as f64)),
+            ("mean_batch", num(self.mean_batch)),
+            ("utilization", num(self.utilization)),
+            ("energy_j", num(self.energy_j)),
+            ("energy_per_req_j", num(self.energy_per_req_j)),
+            ("arrays", num(self.arrays as f64)),
+            ("max_batch", num(self.max_batch as f64)),
+            ("max_wait_ms", num(self.max_wait_s * 1e3)),
+            ("queue_cap", num(self.queue_cap as f64)),
+            ("overlap", s(self.overlap.name())),
+            (
+                "classes",
+                arr(self
+                    .classes
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("name", s(&c.name)),
+                            ("spec", s(&c.spec)),
+                            ("offered", num(c.offered as f64)),
+                            ("rejected", num(c.rejected as f64)),
+                            ("completed", num(c.completed as f64)),
+                            ("latency_p50_ms", num(c.latency_p50_ms)),
+                            ("latency_p99_ms", num(c.latency_p99_ms)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Raw counters and samples the event loop produces (assembled into a
+/// [`ServeResult`] by [`simulate`]).
+struct LoopStats {
+    offered: u64,
+    admitted: u64,
+    rejected: u64,
+    completed: u64,
+    batches: u64,
+    batch_elems: u64,
+    latency_ms: Summary,
+    queue_delay_ms: Summary,
+    depth: Summary,
+    depth_max: usize,
+    busy_s: Vec<f64>,
+    free_at: Vec<f64>,
+    energy_j: f64,
+    last_event_s: f64,
+    class_offered: Vec<u64>,
+    class_rejected: Vec<u64>,
+    class_completed: Vec<u64>,
+    class_latency_ms: Vec<Summary>,
+}
+
+impl LoopStats {
+    fn new(nclasses: usize, arrays: usize) -> Self {
+        LoopStats {
+            offered: 0,
+            admitted: 0,
+            rejected: 0,
+            completed: 0,
+            batches: 0,
+            batch_elems: 0,
+            latency_ms: Summary::new(),
+            queue_delay_ms: Summary::new(),
+            depth: Summary::new(),
+            depth_max: 0,
+            busy_s: vec![0.0; arrays],
+            free_at: vec![0.0; arrays],
+            energy_j: 0.0,
+            last_event_s: 0.0,
+            class_offered: vec![0; nclasses],
+            class_rejected: vec![0; nclasses],
+            class_completed: vec![0; nclasses],
+            class_latency_ms: vec![Summary::new(); nclasses],
+        }
+    }
+
+    fn sample_depth(&mut self, queued: usize) {
+        self.depth.push(queued as f64);
+        self.depth_max = self.depth_max.max(queued);
+    }
+}
+
+/// The deterministic discrete-event loop.  `service(class, batch)`
+/// returns the batch's `(service_seconds, energy_joules)`; in
+/// production it is the memoized pipeline schedule, in unit tests a
+/// synthetic closure.  Event order is total and deterministic: at each
+/// step the earliest of (next arrival, earliest eligible dispatch)
+/// fires, arrivals winning ties so a request arriving exactly at a
+/// dispatch instant still joins the batch.
+fn run_loop(
+    arrivals: &[Arrival],
+    nclasses: usize,
+    cfg: &ServeConfig,
+    service: &mut dyn FnMut(usize, usize) -> Result<(f64, f64)>,
+) -> Result<LoopStats> {
+    let mut st = LoopStats::new(nclasses, cfg.arrays);
+    let mut queues: Vec<VecDeque<f64>> = vec![VecDeque::new(); nclasses];
+    let mut queued = 0usize;
+    let mut i = 0usize;
+    let mut now = 0.0f64;
+    loop {
+        let t_arr = arrivals.get(i).map(|a| a.t_s);
+        // Earliest-free replica (lowest index on ties).
+        let (srv, t_free) = st
+            .free_at
+            .iter()
+            .copied()
+            .enumerate()
+            .fold((0usize, f64::INFINITY), |acc, (j, t)| if t < acc.1 { (j, t) } else { acc });
+        // Earliest eligible dispatch across nonempty classes: a class
+        // is ready when full (max_batch queued) or its head request has
+        // waited max_wait; either way a replica must be free.  Ties go
+        // to the earliest head arrival (closest to starvation), then
+        // the lowest class index — a total, deterministic order.
+        let mut best: Option<(f64, f64, usize)> = None;
+        for (c, q) in queues.iter().enumerate() {
+            if let Some(&head) = q.front() {
+                let trigger =
+                    if q.len() >= cfg.max_batch { now } else { head + cfg.max_wait_s };
+                let cand = (t_free.max(trigger).max(now), head, c);
+                best = Some(match best {
+                    Some(b) if (b.0, b.1, b.2) <= (cand.0, cand.1, cand.2) => b,
+                    _ => cand,
+                });
+            }
+        }
+        // Decide the next event: the earlier of (next arrival, chosen
+        // dispatch), arrivals winning exact ties so a request arriving
+        // at a dispatch instant still joins the batch.
+        enum Next {
+            Done,
+            Arrival(f64),
+            Dispatch(f64, usize),
+        }
+        let next = match (t_arr, best) {
+            (None, None) => Next::Done,
+            (Some(ta), None) => Next::Arrival(ta),
+            (None, Some((td, _, c))) => Next::Dispatch(td, c),
+            (Some(ta), Some((td, _, c))) => {
+                if ta <= td {
+                    Next::Arrival(ta)
+                } else {
+                    Next::Dispatch(td, c)
+                }
+            }
+        };
+        match next {
+            Next::Done => break,
+            Next::Arrival(ta) => {
+                now = now.max(ta);
+                let a = arrivals[i];
+                i += 1;
+                st.offered += 1;
+                st.class_offered[a.class] += 1;
+                if queued >= cfg.queue_cap {
+                    st.rejected += 1;
+                    st.class_rejected[a.class] += 1;
+                } else {
+                    queues[a.class].push_back(a.t_s);
+                    queued += 1;
+                    st.admitted += 1;
+                }
+                st.sample_depth(queued);
+                st.last_event_s = st.last_event_s.max(now);
+            }
+            Next::Dispatch(td, c) => {
+                now = now.max(td);
+                let b = queues[c].len().min(cfg.max_batch);
+                let (svc_s, energy_j) = service(c, b)?;
+                let done = now + svc_s;
+                st.free_at[srv] = done;
+                st.busy_s[srv] += svc_s;
+                st.energy_j += energy_j;
+                st.batches += 1;
+                st.batch_elems += b as u64;
+                for _ in 0..b {
+                    let arr_t = queues[c].pop_front().expect("batch size <= queue len");
+                    queued -= 1;
+                    st.queue_delay_ms.push((now - arr_t) * 1e3);
+                    let lat_ms = (done - arr_t) * 1e3;
+                    st.latency_ms.push(lat_ms);
+                    st.class_latency_ms[c].push(lat_ms);
+                }
+                st.completed += b as u64;
+                st.class_completed[c] += b as u64;
+                st.sample_depth(queued);
+                st.last_event_s = st.last_event_s.max(done);
+            }
+        }
+    }
+    Ok(st)
+}
+
+/// Run the serving simulation: batch costs come from the session's
+/// plan-cached pipeline schedule (`run_network_with` on one array under
+/// [`ServeConfig::overlap`]), memoized per `(class, batch-size)` so the
+/// event loop pays for each distinct shape once.
+pub fn simulate(session: &Session, traffic: &Traffic, cfg: &ServeConfig) -> Result<ServeResult> {
+    ensure!(cfg.max_batch >= 1, "serve max_batch must be >= 1");
+    ensure!(cfg.arrays >= 1, "serve arrays must be >= 1");
+    ensure!(cfg.queue_cap >= 1, "serve queue_cap must be >= 1");
+    ensure!(
+        cfg.max_wait_s >= 0.0 && cfg.max_wait_s.is_finite(),
+        "serve max_wait must be finite and >= 0 (got {})",
+        cfg.max_wait_s
+    );
+    ensure!(!traffic.classes.is_empty(), "traffic has no request classes");
+    for a in &traffic.arrivals {
+        ensure!(
+            a.class < traffic.classes.len(),
+            "arrival references class {} but only {} classes exist",
+            a.class,
+            traffic.classes.len()
+        );
+    }
+    let pipe = PipelineConfig::new(cfg.overlap, 1);
+    let mut memo: HashMap<(usize, usize), (f64, f64)> = HashMap::new();
+    let mut service = |c: usize, b: usize| -> Result<(f64, f64)> {
+        if let Some(&hit) = memo.get(&(c, b)) {
+            return Ok(hit);
+        }
+        let r = session.run_network_with(&traffic.classes[c], Some(b), pipe)?;
+        let v = (r.batch_time_s, r.energy_j);
+        memo.insert((c, b), v);
+        Ok(v)
+    };
+    let st = run_loop(&traffic.arrivals, traffic.classes.len(), cfg, &mut service)?;
+
+    // Capacity bound: one replica serving full batches of the offered
+    // mix sustains max_batch / (mix-weighted full-batch service time)
+    // requests/s.  This is what goodput saturates at under overload.
+    let mut weighted_svc = 0.0f64;
+    if st.offered > 0 {
+        for c in 0..traffic.classes.len() {
+            if st.class_offered[c] > 0 {
+                let (svc, _) = service(c, cfg.max_batch)?;
+                weighted_svc += st.class_offered[c] as f64 / st.offered as f64 * svc;
+            }
+        }
+    }
+    let capacity_rps = if weighted_svc > 0.0 {
+        cfg.arrays as f64 * cfg.max_batch as f64 / weighted_svc
+    } else {
+        0.0
+    };
+
+    let makespan_s = st.last_event_s;
+    let lat = st.latency_ms.percentiles(&[50.0, 95.0, 99.0]);
+    let served = !st.latency_ms.is_empty();
+    let classes = traffic
+        .classes
+        .iter()
+        .enumerate()
+        .map(|(c, m)| {
+            let p = st.class_latency_ms[c].percentiles(&[50.0, 99.0]);
+            let has = !st.class_latency_ms[c].is_empty();
+            ClassServeStats {
+                name: m.name().to_string(),
+                spec: m.spec_string(),
+                offered: st.class_offered[c],
+                rejected: st.class_rejected[c],
+                completed: st.class_completed[c],
+                latency_p50_ms: if has { p[0] } else { 0.0 },
+                latency_p99_ms: if has { p[1] } else { 0.0 },
+            }
+        })
+        .collect();
+    Ok(ServeResult {
+        offered_rate_rps: if traffic.duration_s > 0.0 {
+            st.offered as f64 / traffic.duration_s
+        } else {
+            0.0
+        },
+        duration_s: traffic.duration_s,
+        offered: st.offered,
+        admitted: st.admitted,
+        rejected: st.rejected,
+        completed: st.completed,
+        makespan_s,
+        goodput_rps: if makespan_s > 0.0 { st.completed as f64 / makespan_s } else { 0.0 },
+        capacity_rps,
+        latency_p50_ms: if served { lat[0] } else { 0.0 },
+        latency_p95_ms: if served { lat[1] } else { 0.0 },
+        latency_p99_ms: if served { lat[2] } else { 0.0 },
+        latency_mean_ms: if served { st.latency_ms.mean() } else { 0.0 },
+        latency_max_ms: if served { st.latency_ms.max() } else { 0.0 },
+        queue_delay_mean_ms: if served { st.queue_delay_ms.mean() } else { 0.0 },
+        queue_delay_p99_ms: if served { st.queue_delay_ms.percentile(99.0) } else { 0.0 },
+        queue_depth_mean: if st.depth.is_empty() { 0.0 } else { st.depth.mean() },
+        queue_depth_max: st.depth_max,
+        batches: st.batches,
+        mean_batch: if st.batches > 0 {
+            st.batch_elems as f64 / st.batches as f64
+        } else {
+            0.0
+        },
+        utilization: if makespan_s > 0.0 {
+            st.busy_s.iter().sum::<f64>() / (cfg.arrays as f64 * makespan_s)
+        } else {
+            0.0
+        },
+        energy_j: st.energy_j,
+        energy_per_req_j: if st.completed > 0 {
+            st.energy_j / st.completed as f64
+        } else {
+            0.0
+        },
+        arrays: cfg.arrays,
+        max_batch: cfg.max_batch,
+        max_wait_s: cfg.max_wait_s,
+        queue_cap: cfg.queue_cap,
+        overlap: cfg.overlap,
+        classes,
+    })
+}
+
+impl Session {
+    /// Run the discrete-event serving simulation on this session (see
+    /// [`simulate`]): traffic arrives, the dynamic batcher packs
+    /// it, replica arrays execute plan-cached pipeline schedules, and
+    /// the result is the SLO view — latency percentiles, goodput and
+    /// utilization under load.
+    pub fn serve(&self, traffic: &Traffic, cfg: &ServeConfig) -> Result<ServeResult> {
+        simulate(self, traffic, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, max_wait_s: f64, arrays: usize, queue_cap: usize) -> ServeConfig {
+        ServeConfig { max_batch, max_wait_s, arrays, queue_cap, overlap: Overlap::Pipeline }
+    }
+
+    fn arrivals(ts: &[(f64, usize)]) -> Vec<Arrival> {
+        ts.iter().map(|&(t_s, class)| Arrival { t_s, class }).collect()
+    }
+
+    /// Constant 10 ms service regardless of class/batch; 1 J per batch.
+    fn flat_service() -> impl FnMut(usize, usize) -> Result<(f64, f64)> {
+        |_c, _b| Ok((0.010, 1.0))
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let a = arrivals(&[(0.0, 0), (0.0, 0), (0.0, 0), (0.0, 0)]);
+        let st = run_loop(&a, 1, &cfg(4, 1.0, 1, 64), &mut flat_service()).unwrap();
+        assert_eq!(st.batches, 1);
+        assert_eq!(st.completed, 4);
+        // No queueing: dispatched the instant the batch filled.
+        assert_eq!(st.queue_delay_ms.max(), 0.0);
+        assert_eq!(st.latency_ms.max(), 10.0);
+        assert_eq!(st.last_event_s, 0.010);
+    }
+
+    #[test]
+    fn max_wait_flushes_partial_batches() {
+        // One lonely request must not wait for a batch that never
+        // fills: it dispatches after max_wait.
+        let a = arrivals(&[(0.0, 0)]);
+        let st = run_loop(&a, 1, &cfg(8, 0.005, 1, 64), &mut flat_service()).unwrap();
+        assert_eq!(st.batches, 1);
+        assert_eq!(st.batch_elems, 1);
+        assert!((st.queue_delay_ms.max() - 5.0).abs() < 1e-9);
+        assert!((st.latency_ms.max() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow() {
+        let a = arrivals(&[(0.0, 0), (0.0, 0), (0.0, 0), (0.0, 0), (0.0, 0)]);
+        let st = run_loop(&a, 1, &cfg(2, 1.0, 1, 2), &mut flat_service()).unwrap();
+        assert_eq!(st.offered, 5);
+        assert_eq!(st.admitted, 2);
+        assert_eq!(st.rejected, 3);
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.class_rejected[0], 3);
+        assert_eq!(st.depth_max, 2);
+    }
+
+    #[test]
+    fn classes_batch_separately_and_fifo_by_head_age() {
+        // Class 1 arrives first; both time out; the single replica must
+        // serve class 1 first (earliest head), then class 0.
+        let a = arrivals(&[(0.0, 1), (0.001, 0)]);
+        let st = run_loop(&a, 2, &cfg(4, 0.010, 1, 64), &mut flat_service()).unwrap();
+        assert_eq!(st.batches, 2, "classes never share a batch");
+        assert_eq!(st.class_completed, vec![1, 1]);
+        // Class 1: waits its full max_wait (dispatch 0.010, done 0.020).
+        assert!((st.class_latency_ms[1].max() - 20.0).abs() < 1e-9);
+        // Class 0: its deadline (0.011) coincides with the replica
+        // freeing at 0.020 -> dispatched then, done 0.030.
+        assert!((st.class_latency_ms[0].max() - (0.030 - 0.001) * 1e3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replicas_serve_batches_concurrently() {
+        let a = arrivals(&[(0.0, 0), (0.0, 0)]);
+        let one = run_loop(&a, 1, &cfg(1, 0.0, 1, 64), &mut flat_service()).unwrap();
+        let two = run_loop(&a, 1, &cfg(1, 0.0, 2, 64), &mut flat_service()).unwrap();
+        assert_eq!(one.batches, 2);
+        assert_eq!(two.batches, 2);
+        assert!((one.last_event_s - 0.020).abs() < 1e-12, "serial replicas");
+        assert!((two.last_event_s - 0.010).abs() < 1e-12, "parallel replicas");
+        assert_eq!(two.busy_s, vec![0.010, 0.010]);
+    }
+
+    #[test]
+    fn compressed_arrivals_never_lower_tail_latency() {
+        // The rate-sweep property at loop level: the same arrival
+        // pattern compressed in time (higher offered rate) cannot
+        // reduce the latency percentiles.
+        let base: Vec<(f64, usize)> = (0..64).map(|i| (i as f64 * 0.004, 0)).collect();
+        let mut last_p99 = 0.0f64;
+        for compress in [1.0, 2.0, 8.0] {
+            let a: Vec<Arrival> = base
+                .iter()
+                .map(|&(t, c)| Arrival { t_s: t / compress, class: c })
+                .collect();
+            let st = run_loop(&a, 1, &cfg(4, 0.002, 1, 32), &mut flat_service()).unwrap();
+            let p99 = st.latency_ms.percentile(99.0);
+            assert!(
+                p99 >= last_p99 - 1e-9,
+                "compression {compress}: p99 {p99} < previous {last_p99}"
+            );
+            last_p99 = p99;
+        }
+        assert!(last_p99 > 10.0, "overload must show queueing beyond pure service");
+    }
+
+    #[test]
+    fn poisson_traffic_is_seed_deterministic_and_rate_scaled() {
+        let keys = vec!["att:bpmm".to_string()];
+        let a = Traffic::poisson(&keys, 100.0, 0.5, 9).unwrap();
+        let b = Traffic::poisson(&keys, 100.0, 0.5, 9).unwrap();
+        assert_eq!(a.arrivals, b.arrivals);
+        assert!(!a.arrivals.is_empty());
+        assert!(a.arrivals.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        // Doubled rate = halved times, element for element (common
+        // prefix; the faster stream has at least as many arrivals).
+        let fast = Traffic::poisson(&keys, 200.0, 0.5, 9).unwrap();
+        assert!(fast.arrivals.len() >= a.arrivals.len());
+        for (s, f) in a.arrivals.iter().zip(&fast.arrivals) {
+            assert!((s.t_s - 2.0 * f.t_s).abs() < 1e-12);
+            assert_eq!(s.class, f.class);
+        }
+    }
+
+    #[test]
+    fn poisson_traffic_mixes_classes() {
+        let keys = vec!["att:bpmm".to_string(), "att:fft2d".to_string()];
+        let t = Traffic::poisson(&keys, 2000.0, 0.5, 3).unwrap();
+        assert_eq!(t.classes.len(), 2);
+        let ones = t.arrivals.iter().filter(|a| a.class == 1).count();
+        assert!(ones > 0 && ones < t.arrivals.len(), "both classes must appear");
+    }
+
+    #[test]
+    fn trace_parses_sorts_and_dedups_classes() {
+        let text = r#"{"arrivals": [
+            {"t": 0.002, "workload": "att:bpmm"},
+            {"t": 0.000, "workload": "vanilla"},
+            {"t": 0.001, "workload": "att:bpmm"}
+        ]}"#;
+        let t = Traffic::from_trace_str(text).unwrap();
+        assert_eq!(t.classes.len(), 2);
+        assert_eq!(t.arrivals.len(), 3);
+        assert!(t.arrivals.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        assert_eq!(t.arrivals[0].class, 1, "vanilla arrived first after sorting");
+        assert!((t.duration_s - 0.002).abs() < 1e-15);
+        assert!(Traffic::from_trace_str(r#"{"arrivals": []}"#).is_err());
+        assert!(Traffic::from_trace_str(r#"{"arrivals": [{"t": -1.0, "workload": "x"}]}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn degenerate_config_is_rejected() {
+        let session = Session::builder().build();
+        let traffic =
+            Traffic::poisson(&["att:bpmm".to_string()], 100.0, 0.05, 1).unwrap();
+        for bad in [
+            ServeConfig { max_batch: 0, ..ServeConfig::default() },
+            ServeConfig { arrays: 0, ..ServeConfig::default() },
+            ServeConfig { queue_cap: 0, ..ServeConfig::default() },
+            ServeConfig { max_wait_s: f64::NAN, ..ServeConfig::default() },
+        ] {
+            assert!(session.serve(&traffic, &bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -57,9 +57,17 @@
 //!   ([`coordinator::pipeline`]: DMA double buffering, inter-layer
 //!   pipelining, batch sharding across replicated arrays).  Results
 //!   serialize to JSON through [`coordinator::Report`] for benches and
-//!   CI.  The old free functions (`run_kernel`, `run_kernel_with`,
-//!   `stream_workload`) remain as deprecated wrappers over a
-//!   process-wide shared-session pool.
+//!   CI.  On top sits the serving layer ([`coordinator::serve`]):
+//!   deterministic Poisson or trace-file traffic over mixed request
+//!   classes (suite names or spec strings), a dynamic batcher
+//!   (max-batch / max-wait knobs) packing queued requests into
+//!   plan-cached batch executions, and a discrete-event loop across
+//!   replica arrays that reports p50/p95/p99 latency, goodput against
+//!   the capacity bound and utilization
+//!   ([`coordinator::Session::serve`], `Report::Serving`, the
+//!   `bfdf serve-sim` subcommand).  The old free functions
+//!   (`run_kernel`, `run_kernel_with`, `stream_workload`) remain as
+//!   deprecated wrappers over a process-wide shared-session pool.
 
 pub mod arch;
 pub mod baselines;

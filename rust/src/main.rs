@@ -19,7 +19,9 @@
 use anyhow::Result;
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
-use butterfly_dataflow::coordinator::{NetworkResult, Overlap, Report, Session, SweepRow};
+use butterfly_dataflow::coordinator::{
+    NetworkResult, Overlap, Report, ServeConfig, ServeResult, Session, SweepRow, Traffic,
+};
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
 use butterfly_dataflow::energy;
@@ -105,6 +107,38 @@ fn app() -> App {
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
+            Command::new(
+                "serve-sim",
+                "serving simulation: trace-driven traffic, dynamic batching, SLO percentiles",
+            )
+            .opt(
+                "workloads",
+                "vanilla",
+                "space-separated request classes (quote the list): suite names and/or \
+                 spec strings, e.g. 'vit-256 att:fft2d,ffn:bpmm*x2'",
+            )
+            .opt("rate", "500", "offered load in req/s; a comma-separated list sweeps rates")
+            .opt("duration", "0.5", "arrival horizon in simulated seconds")
+            .opt(
+                "trace",
+                "",
+                "JSON arrival-trace file (overrides --workloads/--rate/--duration)",
+            )
+            .opt("max-batch", "8", "dynamic batcher: max requests packed per batch")
+            .opt(
+                "max-wait-ms",
+                "2",
+                "dynamic batcher: max wait before a partial batch dispatches (ms)",
+            )
+            .opt("arrays", "1", "replica dataflow arrays, each serving one batch at a time")
+            .opt("queue-cap", "256", "bounded admission queue; overflow arrivals are rejected")
+            .opt("seed", "42", "traffic seed (a fixed seed reproduces the run bit-for-bit)")
+            .opt("arch", "scaled128", "architecture preset: full | scaled128")
+            .opt("overlap", "pipeline", "per-batch overlap model: none | dma | pipeline")
+            .opt("out", "", "also write the JSON report to this path (e.g. BENCH_serving.json)")
+            .flag("json", "emit a machine-readable report"),
+        )
+        .command(
             Command::new("gpu-model", "run the Jetson GPU baseline on a butterfly kernel")
                 .opt("kind", "fft", "kernel kind: fft | bpmm")
                 .opt("points", "1024", "transform length")
@@ -172,6 +206,7 @@ fn run(args: &[String]) -> Result<()> {
         "energy-model" => cmd_energy_model(&m),
         "validate" => cmd_validate(&m),
         "stream" => cmd_stream(&m),
+        "serve-sim" => cmd_serve_sim(&m),
         "gpu-model" => cmd_gpu_model(&m),
         other => anyhow::bail!("unhandled command {other}"),
     }
@@ -700,7 +735,129 @@ fn cmd_stream(m: &Matches) -> Result<()> {
     t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
     t.row(&["energy eff.".into(), format!("{:.1} pred/J", r.energy_eff)]);
     t.print();
+    let cache = session.cache_stats();
+    println!(
+        "plan cache: {} lowerings for {} kernels ({} stage hits, {} plan hits)",
+        cache.lowerings,
+        r.kernels.len(),
+        cache.stage_hits,
+        cache.plan_hits
+    );
     Ok(())
+}
+
+fn cmd_serve_sim(m: &Matches) -> Result<()> {
+    let (overlap, arrays) = parse_pipeline(m)?;
+    let max_batch = m.get_usize("max-batch")?;
+    let max_wait_ms = m.get_f64("max-wait-ms")?;
+    let queue_cap = m.get_usize("queue-cap")?;
+    let seed: u64 = m
+        .get("seed")
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--seed expects an integer, got '{}'", m.get("seed")))?;
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait_s: max_wait_ms * 1e-3,
+        arrays,
+        queue_cap,
+        overlap,
+    };
+    let session = Session::builder().arch(parse_arch(m.get("arch"))?).build();
+    let trace = m.get("trace");
+    let mut points = Vec::new();
+    if !trace.is_empty() {
+        let traffic = Traffic::from_trace_file(trace)?;
+        points.push(session.serve(&traffic, &cfg)?);
+    } else {
+        // Whitespace-separated, NOT comma-separated: spec strings use
+        // commas internally ('att:fft2d,ffn:bpmm*x2' is one class).
+        let keys: Vec<String> =
+            m.get("workloads").split_whitespace().map(str::to_string).collect();
+        anyhow::ensure!(!keys.is_empty(), "--workloads needs at least one class");
+        let duration = m.get_f64("duration")?;
+        for raw in m.get("rate").split(',') {
+            let rate: f64 = raw
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--rate expects numbers, got '{raw}'"))?;
+            let traffic = Traffic::poisson(&keys, rate, duration, seed)?;
+            points.push(session.serve(&traffic, &cfg)?);
+        }
+    }
+    let report = Report::Serving {
+        arch: session.arch_signature().to_string(),
+        cache: session.cache_stats(),
+        points,
+    };
+    let out = m.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, report.render() + "\n")
+            .map_err(|e| anyhow::anyhow!("cannot write report to '{out}': {e}"))?;
+    }
+    if m.flag("json") {
+        println!("{}", report.render());
+        return Ok(());
+    }
+    if let Report::Serving { cache, points, .. } = &report {
+        print_serving(points, cache);
+    }
+    Ok(())
+}
+
+/// Text tables for a serving run: the load/latency curve plus the
+/// per-class breakdown of the heaviest point.
+fn print_serving(points: &[ServeResult], cache: &butterfly_dataflow::coordinator::CacheStats) {
+    let mut t = Table::new(
+        "serve-sim load/latency curve",
+        &[
+            "rate r/s", "offered", "rej", "goodput r/s", "capacity r/s", "p50 ms", "p95 ms",
+            "p99 ms", "util", "batch",
+        ],
+    );
+    for p in points {
+        t.row(&[
+            format!("{:.1}", p.offered_rate_rps),
+            format!("{}", p.offered),
+            format!("{}", p.rejected),
+            format!("{:.1}", p.goodput_rps),
+            format!("{:.1}", p.capacity_rps),
+            format!("{:.3}", p.latency_p50_ms),
+            format!("{:.3}", p.latency_p95_ms),
+            format!("{:.3}", p.latency_p99_ms),
+            format!("{:.1}%", 100.0 * p.utilization),
+            format!("{:.2}", p.mean_batch),
+        ]);
+    }
+    t.print();
+    if let Some(last) = points.last() {
+        let mut t = Table::new(
+            &format!(
+                "per-class breakdown at {:.1} req/s ({} arrays, max batch {}, max wait {:.1} ms)",
+                last.offered_rate_rps,
+                last.arrays,
+                last.max_batch,
+                last.max_wait_s * 1e3
+            ),
+            &["class", "spec", "offered", "rej", "done", "p50 ms", "p99 ms"],
+        );
+        for c in &last.classes {
+            t.row(&[
+                c.name.clone(),
+                c.spec.clone(),
+                format!("{}", c.offered),
+                format!("{}", c.rejected),
+                format!("{}", c.completed),
+                format!("{:.3}", c.latency_p50_ms),
+                format!("{:.3}", c.latency_p99_ms),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "plan cache (shared across all classes and batch sizes): {} lowerings, \
+         {} stage hits, {} plan hits",
+        cache.lowerings, cache.stage_hits, cache.plan_hits
+    );
 }
 
 fn cmd_gpu_model(m: &Matches) -> Result<()> {

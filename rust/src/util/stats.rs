@@ -63,13 +63,35 @@ impl Summary {
         }
         let mut sorted = self.values.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-        sorted[rank.min(sorted.len() - 1)]
+        percentile_of_sorted(&sorted, p)
+    }
+
+    /// Several percentiles of one sample in a single pass: the sample is
+    /// sorted once and every requested point is read off it, so batch
+    /// consumers (the serving report asks for p50/p95/p99 of thousands
+    /// of latencies) don't pay one sort per point.  Returns values in
+    /// the order the points were requested; empty samples yield NaNs
+    /// exactly like [`Summary::percentile`].
+    pub fn percentiles(&self, points: &[f64]) -> Vec<f64> {
+        if self.values.is_empty() {
+            return points.iter().map(|_| f64::NAN).collect();
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        points.iter().map(|&p| percentile_of_sorted(&sorted, p)).collect()
     }
 
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }
+}
+
+/// Nearest-rank percentile lookup on an already-sorted sample.  The
+/// single implementation both [`Summary::percentile`] and
+/// [`Summary::percentiles`] call, so the two can never disagree.
+fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
 }
 
 /// Geometric mean of positive values (speedup aggregation).
@@ -135,6 +157,57 @@ mod tests {
         let s = Summary::from_values((1..=100).map(|i| i as f64));
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_single_sample_is_that_sample() {
+        let s = Summary::from_values([42.0]);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 42.0, "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentile_with_duplicated_values() {
+        // Heavy duplication must not confuse the nearest-rank lookup:
+        // the p99 of 99 ones and a single hundred is the outlier.
+        let mut vals = vec![1.0; 99];
+        vals.push(100.0);
+        let s = Summary::from_values(vals);
+        assert_eq!(s.percentile(50.0), 1.0);
+        assert_eq!(s.percentile(98.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        let all_same = Summary::from_values([7.0; 10]);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(all_same.percentile(p), 7.0);
+        }
+    }
+
+    #[test]
+    fn percentile_is_insertion_order_invariant() {
+        let a = Summary::from_values([5.0, 1.0, 4.0, 2.0, 3.0]);
+        let b = Summary::from_values([1.0, 2.0, 3.0, 4.0, 5.0]);
+        for p in [0.0, 25.0, 50.0, 75.0, 100.0] {
+            assert_eq!(a.percentile(p), b.percentile(p), "p{p}");
+        }
+        assert_eq!(a.percentile(0.0), 1.0);
+        assert_eq!(a.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_single_calls() {
+        let s = Summary::from_values((1..=1000).rev().map(|i| i as f64));
+        let pts = [50.0, 95.0, 99.0, 0.0, 100.0];
+        let batch = s.percentiles(&pts);
+        assert_eq!(batch.len(), pts.len());
+        for (p, v) in pts.iter().zip(&batch) {
+            assert_eq!(*v, s.percentile(*p), "p{p}");
+        }
+        // Empty sample: NaNs, same as the single-point path.
+        let empty = Summary::new();
+        let nan = empty.percentiles(&[50.0, 99.0]);
+        assert_eq!(nan.len(), 2);
+        assert!(nan.iter().all(|v| v.is_nan()));
     }
 
     #[test]

@@ -476,10 +476,34 @@ pub fn find_suite(name: &str) -> anyhow::Result<&'static WorkloadSuite> {
         .find(|s| s.name.eq_ignore_ascii_case(name))
         .ok_or_else(|| {
             anyhow::anyhow!(
-                "unknown workload '{name}'; available: {}",
+                "unknown workload '{name}'; registered suites: {}; or pass a \
+                 spec string like 'att:fft2d,ffn:bpmm*x2'",
                 suite_names().join(", ")
             )
         })
+}
+
+/// Resolve a workload key the way `bfdf serve-sim` request classes do:
+/// a registered suite name first (case-insensitive, returning the
+/// suite's [`ModelSpec`] at its default shape), falling back to the
+/// spec grammar (`att:fft2d,ffn:bpmm*x2`, at the builder's default
+/// hidden/seq/heads) when the key contains a `:`.  Unknown plain names
+/// keep [`find_suite`]'s registry-enumerating error.
+pub fn resolve_model(key: &str) -> anyhow::Result<ModelSpec> {
+    match find_suite(key) {
+        Ok(suite) => Ok(suite.model()),
+        Err(e) => {
+            if key.contains(':') {
+                NetworkBuilder::from_spec(key, key)
+                    .and_then(|b| b.build())
+                    .map_err(|spec_err| {
+                        anyhow::anyhow!("workload spec '{key}' is invalid: {spec_err}")
+                    })
+            } else {
+                Err(e)
+            }
+        }
+    }
 }
 
 /// Names of all registered suites, registry order.
@@ -579,8 +603,38 @@ mod tests {
 
     #[test]
     fn unknown_suite_error_lists_alternatives() {
+        // The message is pinned: it must enumerate the whole registry
+        // (every name, registry order) and hint at the spec-string
+        // fallback `serve-sim` accepts.
         let err = find_suite("resnet").unwrap_err().to_string();
-        assert!(err.contains("vanilla") && err.contains("bert-64k"), "{err}");
+        let expected = format!(
+            "unknown workload 'resnet'; registered suites: {}; or pass a spec \
+             string like 'att:fft2d,ffn:bpmm*x2'",
+            suite_names().join(", ")
+        );
+        assert_eq!(err, expected);
+        for suite in SUITES {
+            assert!(err.contains(suite.name), "missing {} in: {err}", suite.name);
+        }
+    }
+
+    #[test]
+    fn resolve_model_accepts_suites_and_spec_strings() {
+        // Suite names resolve to the registry model (case-insensitive).
+        let vanilla = resolve_model("VANILLA").unwrap();
+        assert_eq!(vanilla.name(), "vanilla");
+        assert_eq!(vanilla.spec_string(), find_suite("vanilla").unwrap().model().spec_string());
+        // Spec strings resolve through the grammar at default shapes.
+        let hybrid = resolve_model("att:fft2d,ffn:bpmm*x2").unwrap();
+        assert_eq!(hybrid.spec_string(), "att:fft2d,ffn:bpmm*x2");
+        assert_eq!(hybrid.hidden(), 512);
+        // Unknown plain names keep the registry-enumerating error.
+        let err = resolve_model("resnet").unwrap_err().to_string();
+        assert!(err.contains("registered suites") && err.contains("vanilla"), "{err}");
+        // Invalid spec strings surface the grammar error, not the
+        // registry message.
+        let err = resolve_model("att:wat").unwrap_err().to_string();
+        assert!(!err.contains("registered suites"), "{err}");
     }
 
     #[test]
