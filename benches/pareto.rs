@@ -1,0 +1,93 @@
+//! Design-space Pareto sweep: runs `coordinator::autotune` over a
+//! fixed architecture grid and a representative slice of the suite
+//! registry, prints each class's latency/energy/area frontier, and
+//! writes the `BENCH_pareto.json` artifact.
+//!
+//! Like the other benches this is a deterministic analysis program,
+//! not a statistical timer: the sweep's evaluation order is fixed and
+//! every metric comes from the cycle-accurate-in-the-window simulator,
+//! so the JSON is bit-reproducible run over run (and across `--resume`
+//! from a journal — the property CI's pareto-smoke job checks through
+//! the CLI).  `--quick` shrinks the grid and the class list for CI.
+
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::{
+    autotune, AutotuneConfig, Journal, Report, SearchSpace, WorkloadClass,
+};
+use butterfly_dataflow::util::table::Table;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let grammar = if quick {
+        "mesh=2x2,4x4;arrays=1,2"
+    } else {
+        "mesh=2x2,4x4;simd=8,32;ddr=1,2;arrays=1,2"
+    };
+    let space = SearchSpace::parse(grammar).expect("bench grammar parses");
+    let base = ArchConfig::scaled_128();
+    let keys: Vec<String> = if quick {
+        vec!["fabnet-128".to_string()]
+    } else {
+        vec!["fabnet-128".to_string(), "fabnet-1k".to_string(), "bert-4k".to_string()]
+    };
+    let classes = WorkloadClass::resolve(&keys, Some(8)).expect("bench classes resolve");
+    let cfg = AutotuneConfig { window: if quick { 16 } else { 48 }, ..AutotuneConfig::default() };
+
+    let r = autotune::sweep(&space, &base, &classes, &cfg, &Journal::in_memory())
+        .expect("design-space sweep");
+
+    for c in &r.classes {
+        let title = format!(
+            "{} (batch {}): Pareto frontier, objective {}",
+            c.name,
+            c.batch,
+            r.objective.name()
+        );
+        let mut t = Table::new(
+            &title,
+            &["point", "arrays", "latency s", "energy J", "area mm2", "pred/J", "best"],
+        );
+        for &fi in &c.frontier {
+            let e = &c.evals[fi];
+            t.row(&[
+                r.points[e.point].id.clone(),
+                format!("{}", r.points[e.point].arrays),
+                format!("{:.6}", e.metrics.latency_s),
+                format!("{:.3}", e.metrics.energy_j),
+                format!("{:.1}", e.metrics.area_mm2),
+                format!("{:.1}", e.metrics.efficiency),
+                if fi == c.best_eval { "*".to_string() } else { String::new() },
+            ]);
+        }
+        t.print();
+    }
+
+    // The acceptance properties the sweep must exhibit: the paper's
+    // default design is always evaluated (never pruned), frontiers are
+    // non-empty, and the pruner's accounting covers the whole grid.
+    for c in &r.classes {
+        assert!(!c.frontier.is_empty(), "{}: empty frontier", c.name);
+        assert!(r.points[c.evals[c.default_eval].point].is_default);
+    }
+    assert_eq!(
+        r.evaluated + r.pruned_shard + r.pruned_roofline,
+        r.units_total(),
+        "pruner accounting must cover the whole grid"
+    );
+    println!(
+        "{} of {} evaluations run ({} shard-pruned, {} roofline-pruned); \
+         plan cache: {} lowerings, {} stage hits, {} plan hits",
+        r.evaluated,
+        r.units_total(),
+        r.pruned_shard,
+        r.pruned_roofline,
+        r.cache.lowerings,
+        r.cache.stage_hits,
+        r.cache.plan_hits
+    );
+
+    let report = Report::Pareto { result: r };
+    let path = "BENCH_pareto.json";
+    std::fs::write(path, report.render() + "\n").expect("write BENCH_pareto.json");
+    println!("wrote {path}");
+}

@@ -1,0 +1,60 @@
+//! Design-space autotuning in ~40 lines: sweep a small architecture
+//! grid over two FABNet scales and print each class's
+//! latency/energy/area Pareto frontier.
+//!
+//! Run with: cargo run --release --example pareto_sweep
+
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::{
+    autotune, AutotuneConfig, Journal, SearchSpace, WorkloadClass,
+};
+use butterfly_dataflow::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    // Four candidate designs around the paper's scaled-128 default:
+    // two mesh sizes, optionally doubled-up replica arrays.
+    let space = SearchSpace::parse("mesh=2x2,4x4;arrays=1,2")?;
+    let base = ArchConfig::scaled_128();
+    let keys = vec!["fabnet-128".to_string(), "fabnet-256".to_string()];
+    let classes = WorkloadClass::resolve(&keys, Some(8))?;
+
+    // In-memory journal: pass Journal::open("sweep.jsonl", resume)
+    // instead to checkpoint and resume long sweeps.
+    let cfg = AutotuneConfig::default();
+    let r = autotune::sweep(&space, &base, &classes, &cfg, &Journal::in_memory())?;
+
+    for c in &r.classes {
+        let mut t = Table::new(
+            &format!("{} (batch {}): Pareto frontier", c.name, c.batch),
+            &["point", "arrays", "latency s", "energy J", "area mm2", "pred/J"],
+        );
+        for &fi in &c.frontier {
+            let e = &c.evals[fi];
+            let p = &r.points[e.point];
+            t.row(&[
+                p.id.clone(),
+                format!("{}", p.arrays),
+                format!("{:.6}", e.metrics.latency_s),
+                format!("{:.3}", e.metrics.energy_j),
+                format!("{:.1}", e.metrics.area_mm2),
+                format!("{:.1}", e.metrics.efficiency),
+            ]);
+        }
+        t.print();
+        let d = &c.evals[c.default_eval];
+        println!(
+            "default design {} is {} the frontier",
+            r.points[d.point].id,
+            if c.default_on_frontier() { "on" } else { "off" }
+        );
+    }
+    println!(
+        "{} of {} evaluations run ({} pruned); shared plan cache: {} lowerings, {} plan hits",
+        r.evaluated,
+        r.units_total(),
+        r.pruned_shard + r.pruned_roofline,
+        r.cache.lowerings,
+        r.cache.plan_hits
+    );
+    Ok(())
+}

@@ -179,6 +179,69 @@ impl ArchConfig {
     pub fn signature(&self) -> String {
         format!("{self:?}")
     }
+
+    /// Reject configurations the compiler/simulator cannot execute.
+    ///
+    /// The design-space enumerator (`coordinator::autotune`) builds
+    /// `ArchConfig`s from user-supplied grids; every candidate passes
+    /// through here before it can reach lowering or simulation, so a
+    /// malformed grid fails with a message naming the knob instead of a
+    /// divide-by-zero panic deep in the engine.  Error messages are
+    /// pinned by unit tests — treat them as API.
+    pub fn validate(&self) -> crate::Result<()> {
+        use anyhow::bail;
+        if self.mesh_rows == 0 || self.mesh_cols == 0 {
+            bail!(
+                "invalid arch: PE mesh must be non-empty (got {}x{} rows x cols)",
+                self.mesh_rows,
+                self.mesh_cols
+            );
+        }
+        if self.simd_width == 0 {
+            bail!("invalid arch: simd_width must be >= 1 lane (got 0)");
+        }
+        if self.spm_banks == 0 {
+            bail!("invalid arch: SPM must expose at least one bank/port (got 0 banks)");
+        }
+        if self.spm_lines_per_bank == 0 {
+            bail!("invalid arch: SPM banks need at least one line (got 0 lines per bank)");
+        }
+        if self.spm_bytes == 0 {
+            bail!("invalid arch: SPM capacity must be positive (got 0 bytes)");
+        }
+        if self.spm_entry_width == 0 {
+            bail!("invalid arch: SPM entry width must be >= 1 element (got 0)");
+        }
+        if self.ddr_channels == 0 {
+            bail!("invalid arch: at least one DDR channel is required (got 0)");
+        }
+        if !(self.ddr_chan_bw > 0.0) {
+            bail!(
+                "invalid arch: DMA bandwidth per DDR channel must be positive (got {} B/s)",
+                self.ddr_chan_bw
+            );
+        }
+        if !(self.freq_hz > 0.0) {
+            bail!("invalid arch: clock frequency must be positive (got {} Hz)", self.freq_hz);
+        }
+        if self.elem_bytes == 0 {
+            bail!("invalid arch: element size must be >= 1 byte (got 0)");
+        }
+        if self.noc_link_bytes == 0 {
+            bail!("invalid arch: NoC link width must be >= 1 byte/cycle (got 0)");
+        }
+        if self.inflight_iters == 0 {
+            bail!("invalid arch: inflight_iters must be >= 1 (got 0)");
+        }
+        if self.max_fft_points < 2 || self.max_bpmm_points < 2 {
+            bail!(
+                "invalid arch: single-DFG capacity limits must be >= 2 points (got fft {} / bpmm {})",
+                self.max_fft_points,
+                self.max_bpmm_points
+            );
+        }
+        Ok(())
+    }
 }
 
 impl Default for ArchConfig {
@@ -351,6 +414,64 @@ mod tests {
                 }
                 assert_eq!(at, dst);
             }
+        }
+    }
+
+    #[test]
+    fn presets_validate() {
+        ArchConfig::full().validate().unwrap();
+        ArchConfig::scaled_128().validate().unwrap();
+        ArchConfig::table4().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_pins_error_messages() {
+        // The autotune enumerator surfaces these verbatim; pin them.
+        let cases: &[(ArchConfig, &str)] = &[
+            (
+                ArchConfig { mesh_rows: 0, ..ArchConfig::full() },
+                "invalid arch: PE mesh must be non-empty (got 0x4 rows x cols)",
+            ),
+            (
+                ArchConfig { mesh_cols: 0, ..ArchConfig::full() },
+                "invalid arch: PE mesh must be non-empty (got 4x0 rows x cols)",
+            ),
+            (
+                ArchConfig { simd_width: 0, ..ArchConfig::full() },
+                "invalid arch: simd_width must be >= 1 lane (got 0)",
+            ),
+            (
+                ArchConfig { spm_banks: 0, ..ArchConfig::full() },
+                "invalid arch: SPM must expose at least one bank/port (got 0 banks)",
+            ),
+            (
+                ArchConfig { spm_lines_per_bank: 0, ..ArchConfig::full() },
+                "invalid arch: SPM banks need at least one line (got 0 lines per bank)",
+            ),
+            (
+                ArchConfig { spm_bytes: 0, ..ArchConfig::full() },
+                "invalid arch: SPM capacity must be positive (got 0 bytes)",
+            ),
+            (
+                ArchConfig { ddr_channels: 0, ..ArchConfig::full() },
+                "invalid arch: at least one DDR channel is required (got 0)",
+            ),
+            (
+                ArchConfig { ddr_chan_bw: 0.0, ..ArchConfig::full() },
+                "invalid arch: DMA bandwidth per DDR channel must be positive (got 0 B/s)",
+            ),
+            (
+                ArchConfig { ddr_chan_bw: -1.0, ..ArchConfig::full() },
+                "invalid arch: DMA bandwidth per DDR channel must be positive (got -1 B/s)",
+            ),
+            (
+                ArchConfig { freq_hz: 0.0, ..ArchConfig::full() },
+                "invalid arch: clock frequency must be positive (got 0 Hz)",
+            ),
+        ];
+        for (arch, want) in cases {
+            let err = arch.validate().expect_err("must reject");
+            assert_eq!(err.to_string(), *want);
         }
     }
 

@@ -1,0 +1,1320 @@
+//! Design-space autotuning: sweep the architecture, publish a Pareto
+//! frontier (ROADMAP item 3).
+//!
+//! The paper evaluates one fixed design point; with the fast simulator
+//! (PR 4) and the shared plan cache (PR 1) the experiment inverts: for
+//! every workload class, which `{mesh, SIMD width, SPM capacity/ports,
+//! DDR channels, inflight pack factor, replica arrays}` combination is
+//! on the latency/energy/area frontier?  Three layers:
+//!
+//! 1. **Search space + pruning** — [`SearchSpace`] builds the grid over
+//!    [`ArchConfig`] knobs (every candidate passes
+//!    [`ArchConfig::validate`]).  Before any cycle-level simulation,
+//!    two *provably sound* filters drop dominated points, and the
+//!    dropped counts are reported — never silently capped:
+//!    * *equal-shard*: for a batch of `B`, replicas `a1 < a2` with
+//!      `ceil(B/a1) == ceil(B/a2)` run the identical per-shard
+//!      schedule, so the larger design pays equal latency, at least as
+//!      much energy (extra idle replicas) and strictly more area — it
+//!      cannot reach the frontier.
+//!    * *roofline*: analytic lower bounds on latency (dense roofline:
+//!      `max(flops/peak, input bytes/DDR bw)`, scaled by the shard
+//!      fraction, plus the exact analytic dense-block cost) and energy
+//!      (idle power over the compute floor plus the FuncUnits dynamic
+//!      floor, [`crate::energy::compute_energy_floor_j`]) are compared
+//!      against the *measured* metrics of a few evaluated anchor
+//!      points; a point whose bounds are already dominated by an
+//!      anchor's actuals cannot be non-dominated.  Bounds carry a
+//!      [`ROOFLINE_SLACK`] safety factor and prune-soundness is pinned
+//!      by an exhaustive-grid test (`rust/tests/autotune.rs`).
+//! 2. **Resumable parallel sweep driver** — [`sweep`] shards
+//!    `(point, class)` evaluations across a `std::thread::scope` worker
+//!    pool (the same pattern as `Session::run_many`, which each
+//!    evaluation uses internally for its kernels).  Points that differ
+//!    only in `arrays` — and all workload classes — share one
+//!    [`Session`] per distinct architecture, so cross-point and
+//!    cross-class plan-cache hits make the sweep affordable; the summed
+//!    [`CacheStats`] are surfaced on [`AutotuneResult`].  Every
+//!    completed evaluation is checkpointed to a JSON-lines [`Journal`]
+//!    keyed by `(arch signature, arrays, model, batch, overlap)`;
+//!    `--resume` replays completed entries instead of simulating.  The
+//!    report is rebuilt in canonical enumeration order from either
+//!    source — and the JSON float codec round-trips exactly — so a
+//!    resumed run renders byte-identical to a fresh one.
+//! 3. **Frontier + reporting** — per class, the non-dominated set over
+//!    `(latency_s, energy_j, area_mm2)` (all minimized), where the
+//!    paper's default design point lands, and the best point under a
+//!    selectable [`Objective`].  Serialized via `Report::Pareto`
+//!    (`BENCH_pareto.json`) and the `bfdf autotune` CLI tables.  The
+//!    artifact deliberately excludes run-dependent fields (cache hits,
+//!    journal hits) so fresh and resumed runs stay byte-identical;
+//!    those live on the result struct and the text output.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::arch::ArchConfig;
+use crate::energy::{compute_energy_floor_j, design_area_mm2, idle_power_w};
+use crate::sim::SimOptions;
+use crate::util::json::{self, Json};
+use crate::workloads::spec::{DenseCost, ModelSpec};
+use crate::Result;
+
+use super::network::eval_dense;
+use super::pipeline::{Overlap, PipelineConfig};
+use super::session::{CacheStats, Session};
+
+/// Safety factor on roofline lower bounds.  The latency bound excludes
+/// cold-start DMA fills (batch-independent, hidden by the pipeline
+/// capacity bound) and the energy bound assumes unclamped peak-rate
+/// utilization; the slack keeps both strictly below anything the
+/// simulator can report even at the extrapolation's edges.  Smaller is
+/// safer but prunes less.
+pub const ROOFLINE_SLACK: f64 = 0.85;
+
+// ---------------------------------------------------------------------------
+// Search space
+// ---------------------------------------------------------------------------
+
+/// Grid of architecture knobs the autotuner sweeps.  Empty knob lists
+/// are pinned to the base architecture's value at enumeration time, so
+/// a space can perturb one axis at a time.
+#[derive(Debug, Clone, Default)]
+pub struct SearchSpace {
+    /// PE mesh geometries `(rows, cols)`.
+    pub mesh: Vec<(usize, usize)>,
+    /// SIMD lanes per PE.
+    pub simd: Vec<usize>,
+    /// SPM capacity in KiB.
+    pub spm_kib: Vec<usize>,
+    /// SPM banks (= concurrently served ports).
+    pub spm_banks: Vec<usize>,
+    /// DDR channels (DMA bandwidth multiplier).
+    pub ddr_channels: Vec<usize>,
+    /// Iteration contexts resident per PE (the streaming pack factor).
+    pub inflight: Vec<usize>,
+    /// Replicated dataflow arrays the batch shards across.
+    pub arrays: Vec<usize>,
+}
+
+impl SearchSpace {
+    /// The built-in grid: 32 points spanning the paper's full and
+    /// scaled designs on every axis the evaluation varies.
+    pub fn default_grid() -> SearchSpace {
+        SearchSpace {
+            mesh: vec![(2, 2), (4, 4)],
+            simd: vec![8, 32],
+            spm_kib: vec![2048, 4096],
+            spm_banks: vec![4],
+            ddr_channels: vec![1, 2],
+            inflight: vec![],
+            arrays: vec![1, 2],
+        }
+    }
+
+    /// Parse a space description:
+    /// `mesh=2x2,4x4;simd=8,32;spm=2m,4m;ports=4;ddr=1,2;arrays=1,2`.
+    /// SPM sizes take `k`/`m` suffixes (KiB without one); omitted knobs
+    /// pin to the base architecture; `default` (or empty) is
+    /// [`SearchSpace::default_grid`].
+    pub fn parse(text: &str) -> Result<SearchSpace> {
+        let text = text.trim();
+        if text.is_empty() || text == "default" {
+            return Ok(SearchSpace::default_grid());
+        }
+        let mut sp = SearchSpace::default();
+        for term in text.split(';') {
+            let term = term.trim();
+            if term.is_empty() {
+                continue;
+            }
+            let Some((knob, vals)) = term.split_once('=') else {
+                bail!("search-space term '{term}' is not 'knob=v1,v2,...'");
+            };
+            let list = || -> Result<Vec<usize>> {
+                vals.split(',').map(|t| parse_count(knob.trim(), t)).collect()
+            };
+            match knob.trim() {
+                "mesh" => sp.mesh = vals.split(',').map(parse_mesh).collect::<Result<_>>()?,
+                "simd" => sp.simd = list()?,
+                "spm" => sp.spm_kib = vals.split(',').map(parse_kib).collect::<Result<_>>()?,
+                "ports" | "banks" => sp.spm_banks = list()?,
+                "ddr" => sp.ddr_channels = list()?,
+                "inflight" | "pack" => sp.inflight = list()?,
+                "arrays" => sp.arrays = list()?,
+                other => bail!(
+                    "unknown search-space knob '{other}' \
+                     (mesh | simd | spm | ports | ddr | inflight | arrays)"
+                ),
+            }
+        }
+        Ok(sp)
+    }
+
+    /// This space with empty knobs pinned to `base` and duplicate
+    /// values removed (first occurrence wins) — the form [`sweep`]
+    /// enumerates and [`SearchSpace::canonical`] renders.
+    pub fn resolved(&self, base: &ArchConfig) -> SearchSpace {
+        fn fill<T: PartialEq + Copy>(v: &[T], default: T) -> Vec<T> {
+            let mut out: Vec<T> = Vec::new();
+            for &x in v {
+                if !out.contains(&x) {
+                    out.push(x);
+                }
+            }
+            if out.is_empty() {
+                out.push(default);
+            }
+            out
+        }
+        SearchSpace {
+            mesh: fill(&self.mesh, (base.mesh_rows, base.mesh_cols)),
+            simd: fill(&self.simd, base.simd_width),
+            spm_kib: fill(&self.spm_kib, base.spm_bytes / 1024),
+            spm_banks: fill(&self.spm_banks, base.spm_banks),
+            ddr_channels: fill(&self.ddr_channels, base.ddr_channels),
+            inflight: fill(&self.inflight, base.inflight_iters),
+            arrays: fill(&self.arrays, 1),
+        }
+    }
+
+    /// Canonical grammar string (of a resolved space) — stable across
+    /// parse/render, stored in the report.
+    pub fn canonical(&self) -> String {
+        let ints = |v: &[usize]| {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+        };
+        let mesh = self
+            .mesh
+            .iter()
+            .map(|(r, c)| format!("{r}x{c}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let spm = self
+            .spm_kib
+            .iter()
+            .map(|&k| if k % 1024 == 0 { format!("{}m", k / 1024) } else { format!("{k}k") })
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "mesh={mesh};simd={};spm={spm};ports={};ddr={};inflight={};arrays={}",
+            ints(&self.simd),
+            ints(&self.spm_banks),
+            ints(&self.ddr_channels),
+            ints(&self.inflight),
+            ints(&self.arrays),
+        )
+    }
+
+    /// Grid size of the resolved space (before default-point injection).
+    pub fn num_points(&self, base: &ArchConfig) -> usize {
+        let sp = self.resolved(base);
+        sp.mesh.len()
+            * sp.simd.len()
+            * sp.spm_kib.len()
+            * sp.spm_banks.len()
+            * sp.ddr_channels.len()
+            * sp.inflight.len()
+            * sp.arrays.len()
+    }
+
+    /// Enumerate the grid over `base` in fixed nested order
+    /// (mesh → simd → spm → ports → ddr → inflight → arrays), validate
+    /// every candidate, and inject the base design (`arrays = 1`) if
+    /// the grid itself does not contain it — the frontier report always
+    /// shows where the paper's default point lands.
+    pub fn enumerate(&self, base: &ArchConfig) -> Result<Vec<DesignPoint>> {
+        let sp = self.resolved(base);
+        let base_sig = base.signature();
+        let mut points = Vec::new();
+        for &(rows, cols) in &sp.mesh {
+            for &simd in &sp.simd {
+                for &spm in &sp.spm_kib {
+                    for &banks in &sp.spm_banks {
+                        for &ddr in &sp.ddr_channels {
+                            for &inflight in &sp.inflight {
+                                let arch = ArchConfig {
+                                    mesh_rows: rows,
+                                    mesh_cols: cols,
+                                    simd_width: simd,
+                                    spm_bytes: spm * 1024,
+                                    spm_banks: banks,
+                                    ddr_channels: ddr,
+                                    inflight_iters: inflight,
+                                    ..base.clone()
+                                };
+                                arch.validate().with_context(|| {
+                                    format!(
+                                        "search-space point m{rows}x{cols}-s{simd}-spm{spm}k\
+                                         -p{banks}-d{ddr}-i{inflight}"
+                                    )
+                                })?;
+                                let is_base = arch.signature() == base_sig;
+                                for &arrays in &sp.arrays {
+                                    ensure!(arrays >= 1, "arrays must be >= 1 (got 0)");
+                                    points.push(DesignPoint {
+                                        id: point_id(&arch, arrays),
+                                        arch: arch.clone(),
+                                        arrays,
+                                        is_default: is_base && arrays == 1,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !points.iter().any(|p| p.is_default) {
+            base.validate().context("base architecture")?;
+            points.push(DesignPoint {
+                id: point_id(base, 1),
+                arch: base.clone(),
+                arrays: 1,
+                is_default: true,
+            });
+        }
+        Ok(points)
+    }
+}
+
+fn parse_count(knob: &str, tok: &str) -> Result<usize> {
+    let v: usize = tok
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad {knob} value '{}' (expected an integer)", tok.trim()))?;
+    ensure!(v >= 1, "{knob} values must be >= 1 (got {v})");
+    Ok(v)
+}
+
+fn parse_mesh(tok: &str) -> Result<(usize, usize)> {
+    let t = tok.trim();
+    let parse = |s: &str| s.parse::<usize>().ok().filter(|&v| v >= 1);
+    if let Some((r, c)) = t.split_once('x') {
+        if let (Some(r), Some(c)) = (parse(r), parse(c)) {
+            return Ok((r, c));
+        }
+    }
+    bail!("bad mesh value '{t}' (expected RxC, e.g. 4x4)");
+}
+
+fn parse_kib(tok: &str) -> Result<usize> {
+    let t = tok.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(p) = t.strip_suffix('m') {
+        (p, 1024)
+    } else if let Some(p) = t.strip_suffix('k') {
+        (p, 1)
+    } else {
+        (t.as_str(), 1)
+    };
+    let v: usize = digits
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad spm size '{}' (KiB, or a k/m suffix)", tok.trim()))?;
+    ensure!(v >= 1, "spm sizes must be >= 1 KiB (got {v})");
+    Ok(v * mult)
+}
+
+fn point_id(arch: &ArchConfig, arrays: usize) -> String {
+    format!(
+        "m{}x{}-s{}-spm{}k-p{}-d{}-i{}-a{}",
+        arch.mesh_rows,
+        arch.mesh_cols,
+        arch.simd_width,
+        arch.spm_bytes / 1024,
+        arch.spm_banks,
+        arch.ddr_channels,
+        arch.inflight_iters,
+        arrays
+    )
+}
+
+/// One candidate design: an architecture plus its replica count.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    /// Stable knob-derived identifier, e.g. `m4x4-s32-spm4096k-p4-d2-i4-a1`.
+    pub id: String,
+    pub arch: ArchConfig,
+    pub arrays: usize,
+    /// Whether this is the paper's base design point (never pruned).
+    pub is_default: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Workload classes, objectives, metrics
+// ---------------------------------------------------------------------------
+
+/// One workload class swept against every design point.
+#[derive(Debug, Clone)]
+pub struct WorkloadClass {
+    /// Display name (suite name or spec string).
+    pub name: String,
+    pub model: ModelSpec,
+    /// Lowering batch (resolved; never 0).
+    pub batch: usize,
+}
+
+impl WorkloadClass {
+    /// Resolve workload keys (suite names and/or spec strings) into
+    /// classes, applying an optional batch override to all of them.
+    pub fn resolve(keys: &[String], batch: Option<usize>) -> Result<Vec<WorkloadClass>> {
+        ensure!(batch != Some(0), "autotune batch must be >= 1 (got 0)");
+        keys.iter()
+            .map(|key| {
+                let model = crate::workloads::resolve_model(key)?;
+                let batch = batch.unwrap_or_else(|| model.default_batch());
+                Ok(WorkloadClass { name: key.clone(), model, batch })
+            })
+            .collect()
+    }
+}
+
+/// Ranking objective for the per-class "best point" callout (the
+/// frontier itself is always the full 3-axis non-dominated set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Latency,
+    Energy,
+    Area,
+    Efficiency,
+    /// Energy-delay product (`latency_s * energy_j`), the default.
+    Edp,
+}
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Area => "area",
+            Objective::Efficiency => "efficiency",
+            Objective::Edp => "edp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "latency" => Ok(Objective::Latency),
+            "energy" => Ok(Objective::Energy),
+            "area" => Ok(Objective::Area),
+            "efficiency" => Ok(Objective::Efficiency),
+            "edp" => Ok(Objective::Edp),
+            other => bail!(
+                "unknown objective '{other}' (latency | energy | area | efficiency | edp)"
+            ),
+        }
+    }
+
+    /// Scalar score, lower is better.
+    pub fn score(self, m: &Metrics) -> f64 {
+        match self {
+            Objective::Latency => m.latency_s,
+            Objective::Energy => m.energy_j,
+            Objective::Area => m.area_mm2,
+            Objective::Efficiency => -m.efficiency,
+            Objective::Edp => m.latency_s * m.energy_j,
+        }
+    }
+}
+
+/// Measured (or journal-replayed) metrics of one `(point, class)`
+/// evaluation.  Latency/energy/efficiency/throughput/power come from
+/// the cycle-level [`Session::run_network_with`] schedule; area is the
+/// analytic [`design_area_mm2`] times the replica count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub area_mm2: f64,
+    pub efficiency: f64,
+    pub throughput: f64,
+    pub power_w: f64,
+}
+
+impl Metrics {
+    fn to_json_pairs(self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("latency_s", json::num(self.latency_s)),
+            ("energy_j", json::num(self.energy_j)),
+            ("area_mm2", json::num(self.area_mm2)),
+            ("efficiency", json::num(self.efficiency)),
+            ("throughput", json::num(self.throughput)),
+            ("power_w", json::num(self.power_w)),
+        ]
+    }
+
+    fn from_json(j: &Json) -> Option<Metrics> {
+        Some(Metrics {
+            latency_s: j.get("latency_s")?.as_f64()?,
+            energy_j: j.get("energy_j")?.as_f64()?,
+            area_mm2: j.get("area_mm2")?.as_f64()?,
+            efficiency: j.get("efficiency")?.as_f64()?,
+            throughput: j.get("throughput")?.as_f64()?,
+            power_w: j.get("power_w")?.as_f64()?,
+        })
+    }
+}
+
+/// `a` Pareto-dominates `b` on (latency, energy, area): no worse on
+/// every axis, strictly better on at least one.
+pub fn dominates(a: &Metrics, b: &Metrics) -> bool {
+    a.latency_s <= b.latency_s
+        && a.energy_j <= b.energy_j
+        && a.area_mm2 <= b.area_mm2
+        && (a.latency_s < b.latency_s || a.energy_j < b.energy_j || a.area_mm2 < b.area_mm2)
+}
+
+// ---------------------------------------------------------------------------
+// Roofline lower bounds
+// ---------------------------------------------------------------------------
+
+/// Batch-lowered analytic costs of one class, shared by every point's
+/// bound computation.
+struct ClassCosts {
+    /// Total butterfly-kernel FLOPs at the class batch.
+    flops: f64,
+    /// Scalar elements every kernel must stream in at least once.
+    input_elems: f64,
+    /// Dense blocks, priced exactly per point via `eval_dense`.
+    dense: Vec<DenseCost>,
+}
+
+fn class_costs(class: &WorkloadClass) -> ClassCosts {
+    let mut flops = 0.0;
+    let mut input_elems = 0.0;
+    let mut dense = Vec::new();
+    for block in class.model.lower(Some(class.batch)) {
+        for k in &block.kernels {
+            flops += k.sparse_flops();
+            input_elems += (k.vectors as f64) * (k.points as f64);
+        }
+        if let Some(d) = block.dense {
+            dense.push(d);
+        }
+    }
+    ClassCosts { flops, input_elems, dense }
+}
+
+/// Analytic lower bounds on what any simulation of `point` over this
+/// class can report.  Soundness argument per axis:
+///
+/// * latency — the pipeline capacity bound floors the per-shard
+///   makespan at `max(Σ compute body, Σ gating DMA) × frac` plus dense
+///   bodies; kernel bodies cannot beat `flops/peak` and gating DMA
+///   cannot beat one input pass over the DDR interface (both slacked by
+///   [`ROOFLINE_SLACK`]); dense bodies are priced by the exact same
+///   `eval_dense` the evaluator uses.  `frac = ceil(B/arrays)/B` is the
+///   widest shard every schedule must finish.
+/// * energy — active kernel energy is at least idle power over the
+///   compute floor plus the FuncUnits dynamic floor; dense energy is
+///   exact; idle-replica energy only adds.
+/// * area — exact (the same analytic model the evaluator reports).
+fn lower_bounds(point: &DesignPoint, costs: &ClassCosts, batch: usize) -> Bounds {
+    let arch = &point.arch;
+    let frac = batch.div_ceil(point.arrays) as f64 / batch as f64;
+    let mut dense_time = 0.0;
+    let mut dense_energy = 0.0;
+    for cost in &costs.dense {
+        let d = eval_dense(arch, cost);
+        dense_time += d.time_s;
+        dense_energy += d.energy_j;
+    }
+    let compute_lb = ROOFLINE_SLACK * costs.flops / arch.peak_flops();
+    let dma_lb = ROOFLINE_SLACK * costs.input_elems * arch.elem_bytes as f64 / arch.ddr_bw();
+    Bounds {
+        latency_s: (compute_lb + dense_time).max(dma_lb) * frac,
+        energy_j: idle_power_w(arch) * compute_lb
+            + ROOFLINE_SLACK * compute_energy_floor_j(arch, costs.flops)
+            + dense_energy,
+        area_mm2: design_area_mm2(arch) * point.arrays as f64,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bounds {
+    latency_s: f64,
+    energy_j: f64,
+    area_mm2: f64,
+}
+
+/// An evaluated anchor with actual metrics `a` proves a candidate with
+/// lower bounds `lb` off the frontier when the actuals dominate even
+/// the bounds (the candidate's real metrics can only be worse).
+fn bounds_dominated(a: &Metrics, lb: &Bounds) -> bool {
+    a.latency_s <= lb.latency_s
+        && a.energy_j <= lb.energy_j
+        && a.area_mm2 <= lb.area_mm2
+        && (a.latency_s < lb.latency_s || a.energy_j < lb.energy_j || a.area_mm2 < lb.area_mm2)
+}
+
+// ---------------------------------------------------------------------------
+// Journal (checkpoint/resume)
+// ---------------------------------------------------------------------------
+
+/// JSON-lines evaluation checkpoint.  Line 1 is the header
+/// `{"journal":"bfdf-pareto","version":1}`; every other line is one
+/// completed evaluation `{"key":..., latency_s, energy_j, area_mm2,
+/// efficiency, throughput, power_w}`.  The journal is strictly a cache:
+/// a resumed sweep looks up exactly the keys it was going to evaluate
+/// and ignores everything else (stale entries from other grids are
+/// harmless), appends are flushed per entry so a killed sweep loses at
+/// most the evaluation in flight, and unparseable tail lines from a
+/// crash are skipped on load.
+pub struct Journal {
+    entries: HashMap<String, Metrics>,
+    sink: Option<Mutex<std::fs::File>>,
+    loaded: usize,
+}
+
+impl Journal {
+    /// Checkpoint-free journal (unit tests, throwaway sweeps).
+    pub fn in_memory() -> Journal {
+        Journal { entries: HashMap::new(), sink: None, loaded: 0 }
+    }
+
+    /// Open `path` for checkpointing.  With `resume`, completed entries
+    /// are loaded and replayed; otherwise the file is truncated.
+    pub fn open(path: &str, resume: bool) -> Result<Journal> {
+        let mut entries = HashMap::new();
+        if resume {
+            if let Ok(text) = std::fs::read_to_string(path) {
+                for line in text.lines() {
+                    let Ok(j) = json::parse(line) else { continue };
+                    let Some(key) = j.get("key").and_then(Json::as_str) else { continue };
+                    if let Some(m) = Metrics::from_json(&j) {
+                        entries.insert(key.to_string(), m);
+                    }
+                }
+            }
+        }
+        let loaded = entries.len();
+        let mut file = if resume {
+            std::fs::OpenOptions::new().create(true).append(true).open(path)
+        } else {
+            std::fs::File::create(path)
+        }
+        .with_context(|| format!("opening journal '{path}'"))?;
+        if !resume || file.metadata().map(|m| m.len() == 0).unwrap_or(false) {
+            let header = json::obj(vec![
+                ("journal", json::s("bfdf-pareto")),
+                ("version", json::num(1.0)),
+            ]);
+            writeln!(file, "{}", header.render())
+                .with_context(|| format!("writing journal header to '{path}'"))?;
+        }
+        Ok(Journal { entries, sink: Some(Mutex::new(file)), loaded })
+    }
+
+    /// Entries loaded from disk at open time.
+    pub fn loaded(&self) -> usize {
+        self.loaded
+    }
+
+    fn lookup(&self, key: &str) -> Option<Metrics> {
+        self.entries.get(key).copied()
+    }
+
+    fn record(&self, key: &str, m: Metrics) -> Result<()> {
+        if let Some(sink) = &self.sink {
+            let mut pairs = vec![("key", json::s(key))];
+            pairs.extend(m.to_json_pairs());
+            let line = json::obj(pairs).render();
+            let mut file = sink.lock().unwrap();
+            writeln!(file, "{line}").context("appending to journal")?;
+            file.flush().context("flushing journal")?;
+        }
+        Ok(())
+    }
+}
+
+/// Journal key of one evaluation.  Replicates the session signature
+/// (arch + simulator options + window) so a journal can never replay an
+/// entry the current configuration would compute differently; a format
+/// change simply misses and re-evaluates.
+fn eval_key(point: &DesignPoint, class: &WorkloadClass, cfg: &AutotuneConfig) -> String {
+    format!(
+        "{}|{:?}|w{}|{}|a{}|{}|h{}|q{}|e{}|b{}",
+        point.arch.signature(),
+        SimOptions::default(),
+        cfg.window,
+        cfg.overlap.name(),
+        point.arrays,
+        class.model.spec_string(),
+        class.model.hidden(),
+        class.model.seq(),
+        class.model.heads(),
+        class.batch
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Sweep driver
+// ---------------------------------------------------------------------------
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct AutotuneConfig {
+    pub objective: Objective,
+    /// Overlap mode every evaluation schedules with.
+    pub overlap: Overlap,
+    /// Simulation window (DFG iterations) of the per-arch sessions.
+    pub window: usize,
+    /// Batch override applied to every class (`None` = per-class default).
+    pub batch: Option<usize>,
+    /// Enable the shard/roofline pruner (reported, never silent).
+    pub prune: bool,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        AutotuneConfig {
+            objective: Objective::Edp,
+            overlap: Overlap::Pipeline,
+            window: 48,
+            batch: None,
+            prune: true,
+        }
+    }
+}
+
+/// One evaluated `(point, class)` pair.
+#[derive(Debug, Clone, Copy)]
+pub struct PointEval {
+    /// Index into [`AutotuneResult::points`].
+    pub point: usize,
+    pub metrics: Metrics,
+}
+
+/// Sweep outcome for one workload class.
+#[derive(Debug, Clone)]
+pub struct ClassSweep {
+    pub name: String,
+    pub spec: String,
+    pub batch: usize,
+    /// Evaluated points in canonical enumeration order.
+    pub evals: Vec<PointEval>,
+    /// Indices into `evals` of the non-dominated set, latency-ascending.
+    pub frontier: Vec<usize>,
+    /// Index into `evals` of the paper's default design point.
+    pub default_eval: usize,
+    /// Index into `evals` of the best point under the objective.
+    pub best_eval: usize,
+    pub pruned_shard: usize,
+    pub pruned_roofline: usize,
+}
+
+impl ClassSweep {
+    /// Whether the default design point made the frontier.
+    pub fn default_on_frontier(&self) -> bool {
+        self.frontier.contains(&self.default_eval)
+    }
+}
+
+/// Full autotune result.  `journal_hits` and `cache` are run-dependent
+/// diagnostics — surfaced by the CLI text output and tests but excluded
+/// from the JSON artifact, which must be byte-identical between fresh
+/// and resumed runs.
+#[derive(Debug, Clone)]
+pub struct AutotuneResult {
+    /// Base architecture signature the space perturbs.
+    pub base_arch: String,
+    /// Canonical resolved search-space grammar.
+    pub space: String,
+    pub objective: Objective,
+    pub overlap: Overlap,
+    pub window: usize,
+    pub points: Vec<DesignPoint>,
+    pub classes: Vec<ClassSweep>,
+    /// Cycle-level evaluations performed or replayed.
+    pub evaluated: usize,
+    pub pruned_shard: usize,
+    pub pruned_roofline: usize,
+    /// Evaluations replayed from the journal this run.
+    pub journal_hits: usize,
+    /// Summed plan-cache statistics across every per-arch session.
+    pub cache: CacheStats,
+}
+
+impl AutotuneResult {
+    /// Total `(point, class)` grid size before pruning.
+    pub fn units_total(&self) -> usize {
+        self.points.len() * self.classes.len()
+    }
+
+    /// JSON form of the artifact (`Report::Pareto` delegates here).
+    pub fn to_json(&self) -> Json {
+        let classes = self
+            .classes
+            .iter()
+            .map(|c| {
+                let point_obj = |e: &PointEval| {
+                    let p = &self.points[e.point];
+                    let mut pairs = vec![
+                        ("id", json::s(&p.id)),
+                        ("mesh", json::s(&format!("{}x{}", p.arch.mesh_rows, p.arch.mesh_cols))),
+                        ("simd", json::num(p.arch.simd_width as f64)),
+                        ("spm_kib", json::num((p.arch.spm_bytes / 1024) as f64)),
+                        ("spm_banks", json::num(p.arch.spm_banks as f64)),
+                        ("ddr_channels", json::num(p.arch.ddr_channels as f64)),
+                        ("inflight", json::num(p.arch.inflight_iters as f64)),
+                        ("arrays", json::num(p.arrays as f64)),
+                    ];
+                    pairs.extend(e.metrics.to_json_pairs());
+                    json::obj(pairs)
+                };
+                let frontier = c.frontier.iter().map(|&i| point_obj(&c.evals[i])).collect();
+                let default = {
+                    let Json::Obj(mut m) = point_obj(&c.evals[c.default_eval]) else {
+                        unreachable!("point_obj builds an object")
+                    };
+                    m.insert("on_frontier".to_string(), Json::Bool(c.default_on_frontier()));
+                    Json::Obj(m)
+                };
+                json::obj(vec![
+                    ("class", json::s(&c.name)),
+                    ("spec", json::s(&c.spec)),
+                    ("batch", json::num(c.batch as f64)),
+                    ("evaluated", json::num(c.evals.len() as f64)),
+                    ("pruned_shard", json::num(c.pruned_shard as f64)),
+                    ("pruned_roofline", json::num(c.pruned_roofline as f64)),
+                    ("frontier", json::arr(frontier)),
+                    ("default_point", default),
+                    ("best", point_obj(&c.evals[c.best_eval])),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("report", json::s("pareto")),
+            ("base_arch", json::s(&self.base_arch)),
+            ("space", json::s(&self.space)),
+            ("objective", json::s(self.objective.name())),
+            ("overlap", json::s(self.overlap.name())),
+            ("window", json::num(self.window as f64)),
+            ("points_total", json::num(self.points.len() as f64)),
+            ("evaluations_total", json::num(self.units_total() as f64)),
+            ("evaluated", json::num(self.evaluated as f64)),
+            ("pruned_shard", json::num(self.pruned_shard as f64)),
+            ("pruned_roofline", json::num(self.pruned_roofline as f64)),
+            ("classes", json::arr(classes)),
+        ])
+    }
+}
+
+/// Lazily-built per-architecture sessions shared by every worker: all
+/// classes and every point that differs only in `arrays` hit the same
+/// plan cache.
+struct SessionPool {
+    window: usize,
+    sessions: Mutex<HashMap<String, Arc<Session>>>,
+}
+
+impl SessionPool {
+    fn new(window: usize) -> SessionPool {
+        SessionPool { window, sessions: Mutex::new(HashMap::new()) }
+    }
+
+    fn get(&self, arch: &ArchConfig) -> Arc<Session> {
+        let mut map = self.sessions.lock().unwrap();
+        map.entry(arch.signature())
+            .or_insert_with(|| {
+                Arc::new(Session::builder().arch(arch.clone()).window(self.window).build())
+            })
+            .clone()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        let map = self.sessions.lock().unwrap();
+        let mut total = CacheStats::default();
+        for session in map.values() {
+            let s = session.cache_stats();
+            total.plan_hits += s.plan_hits;
+            total.plan_misses += s.plan_misses;
+            total.stage_hits += s.stage_hits;
+            total.stage_misses += s.stage_misses;
+            total.lowerings += s.lowerings;
+        }
+        total
+    }
+}
+
+fn eval_one(
+    point: &DesignPoint,
+    class: &WorkloadClass,
+    cfg: &AutotuneConfig,
+    pool: &SessionPool,
+    journal: &Journal,
+    journal_hits: &AtomicUsize,
+) -> Result<Metrics> {
+    let key = eval_key(point, class, cfg);
+    if let Some(m) = journal.lookup(&key) {
+        journal_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(m);
+    }
+    let session = pool.get(&point.arch);
+    let pipe = PipelineConfig::new(cfg.overlap, point.arrays);
+    let r = session.run_network_with(&class.model, Some(class.batch), pipe)?;
+    let m = Metrics {
+        latency_s: r.batch_time_s,
+        energy_j: r.energy_j,
+        area_mm2: design_area_mm2(&point.arch) * point.arrays as f64,
+        efficiency: r.energy_eff,
+        throughput: r.throughput,
+        power_w: r.power_w,
+    };
+    journal.record(&key, m)?;
+    Ok(m)
+}
+
+/// Evaluate `(class, point)` units across a worker pool; results come
+/// back in unit order regardless of completion order (the
+/// `Session::run_many` pattern).  The outer pool is kept narrow because
+/// every evaluation fans its kernels out across threads internally.
+fn eval_units(
+    units: &[(usize, usize)],
+    points: &[DesignPoint],
+    classes: &[WorkloadClass],
+    cfg: &AutotuneConfig,
+    pool: &SessionPool,
+    journal: &Journal,
+    journal_hits: &AtomicUsize,
+) -> Result<Vec<Metrics>> {
+    if units.is_empty() {
+        return Ok(Vec::new());
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 4)
+        .min(units.len());
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, Result<Metrics>)>> = Mutex::new(Vec::with_capacity(units.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= units.len() {
+                    break;
+                }
+                let (ci, pi) = units[i];
+                let r = eval_one(&points[pi], &classes[ci], cfg, pool, journal, journal_hits);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut slots: Vec<Option<Result<Metrics>>> = units.iter().map(|_| None).collect();
+    for (i, r) in done.into_inner().unwrap() {
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            let (ci, pi) = units[i];
+            slot.expect("every unit was claimed by a worker").with_context(|| {
+                format!("evaluating point '{}' on class '{}'", points[pi].id, classes[ci].name)
+            })
+        })
+        .collect()
+}
+
+/// Indices into `evals` of the non-dominated set, sorted by
+/// (latency, energy, point index) ascending.
+fn pareto_frontier(evals: &[PointEval]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..evals.len())
+        .filter(|&i| {
+            !evals
+                .iter()
+                .enumerate()
+                .any(|(j, other)| j != i && dominates(&other.metrics, &evals[i].metrics))
+        })
+        .collect();
+    idx.sort_by(|&a, &b| {
+        evals[a]
+            .metrics
+            .latency_s
+            .total_cmp(&evals[b].metrics.latency_s)
+            .then(evals[a].metrics.energy_j.total_cmp(&evals[b].metrics.energy_j))
+            .then(evals[a].point.cmp(&evals[b].point))
+    });
+    idx
+}
+
+/// Run the full design-space sweep: enumerate, prune (reported),
+/// evaluate in parallel through shared per-arch sessions with journal
+/// checkpointing, and compute the per-class frontier.
+pub fn sweep(
+    space: &SearchSpace,
+    base: &ArchConfig,
+    classes: &[WorkloadClass],
+    cfg: &AutotuneConfig,
+    journal: &Journal,
+) -> Result<AutotuneResult> {
+    ensure!(!classes.is_empty(), "autotune needs at least one workload class");
+    ensure!(cfg.window >= 1, "autotune window must be >= 1");
+    base.validate().context("base architecture")?;
+    let space = space.resolved(base);
+    let points = space.enumerate(base)?;
+    let default_pi = points
+        .iter()
+        .position(|p| p.is_default)
+        .expect("enumerate always injects the default point");
+    let costs: Vec<ClassCosts> = classes.iter().map(class_costs).collect();
+    let (nc, np) = (classes.len(), points.len());
+
+    // Layer 1a: equal-shard prune.  Among points sharing an architecture,
+    // only the smallest replica count per distinct shard width can be
+    // non-dominated (equal latency, <= energy, strictly less area).
+    let mut pruned_shard = vec![vec![false; np]; nc];
+    if cfg.prune {
+        let mut groups: HashMap<String, Vec<usize>> = HashMap::new();
+        for (pi, p) in points.iter().enumerate() {
+            groups.entry(p.arch.signature()).or_default().push(pi);
+        }
+        for (ci, class) in classes.iter().enumerate() {
+            for idxs in groups.values() {
+                if idxs.len() < 2 {
+                    continue;
+                }
+                let mut keep: HashMap<usize, usize> = HashMap::new();
+                for &pi in idxs {
+                    let shards = class.batch.div_ceil(points[pi].arrays);
+                    keep.entry(shards)
+                        .and_modify(|best| {
+                            if points[pi].arrays < points[*best].arrays {
+                                *best = pi;
+                            }
+                        })
+                        .or_insert(pi);
+                }
+                for &pi in idxs {
+                    let shards = class.batch.div_ceil(points[pi].arrays);
+                    if keep[&shards] != pi && !points[pi].is_default {
+                        pruned_shard[ci][pi] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    let pool = SessionPool::new(cfg.window);
+    let journal_hits = AtomicUsize::new(0);
+    let mut results: Vec<Vec<Option<Metrics>>> = vec![vec![None; np]; nc];
+
+    // Layer 1b: roofline prune, anchored on measured points.  Anchors —
+    // the default design plus the per-axis bound minimizers — are
+    // evaluated first; any surviving point whose *bounds* they dominate
+    // cannot be on the frontier and is skipped.
+    let mut bounds: Vec<Vec<Option<Bounds>>> = vec![vec![None; np]; nc];
+    let mut anchor_units: Vec<(usize, usize)> = Vec::new();
+    if cfg.prune {
+        for ci in 0..nc {
+            let survivors: Vec<usize> =
+                (0..np).filter(|&pi| !pruned_shard[ci][pi]).collect();
+            for &pi in &survivors {
+                bounds[ci][pi] = Some(lower_bounds(&points[pi], &costs[ci], classes[ci].batch));
+            }
+            let argmin = |key: fn(&Bounds) -> f64| -> usize {
+                let mut best = survivors[0];
+                for &pi in &survivors[1..] {
+                    let (b, cur) = (bounds[ci][pi].unwrap(), bounds[ci][best].unwrap());
+                    if key(&b).total_cmp(&key(&cur)) == std::cmp::Ordering::Less {
+                        best = pi;
+                    }
+                }
+                best
+            };
+            let mut set = vec![
+                default_pi,
+                argmin(|b| b.latency_s),
+                argmin(|b| b.energy_j),
+                argmin(|b| b.area_mm2),
+            ];
+            set.sort_unstable();
+            set.dedup();
+            anchor_units.extend(set.into_iter().map(|pi| (ci, pi)));
+        }
+    }
+    let anchor_metrics =
+        eval_units(&anchor_units, &points, classes, cfg, &pool, journal, &journal_hits)?;
+    for (&(ci, pi), m) in anchor_units.iter().zip(anchor_metrics) {
+        results[ci][pi] = Some(m);
+    }
+
+    let mut pruned_roofline = vec![vec![false; np]; nc];
+    if cfg.prune {
+        for ci in 0..nc {
+            let anchors: Vec<usize> = anchor_units
+                .iter()
+                .filter(|&&(c, _)| c == ci)
+                .map(|&(_, pi)| pi)
+                .collect();
+            for pi in 0..np {
+                if pruned_shard[ci][pi] || results[ci][pi].is_some() || points[pi].is_default {
+                    continue;
+                }
+                let lb = bounds[ci][pi].expect("bounds computed for every survivor");
+                if anchors
+                    .iter()
+                    .any(|&a| bounds_dominated(results[ci][a].as_ref().unwrap(), &lb))
+                {
+                    pruned_roofline[ci][pi] = true;
+                }
+            }
+        }
+    }
+
+    // Layer 2: evaluate everything that survived, in fixed order.
+    let rest: Vec<(usize, usize)> = (0..nc)
+        .flat_map(|ci| (0..np).map(move |pi| (ci, pi)))
+        .filter(|&(ci, pi)| {
+            !pruned_shard[ci][pi] && !pruned_roofline[ci][pi] && results[ci][pi].is_none()
+        })
+        .collect();
+    let rest_metrics = eval_units(&rest, &points, classes, cfg, &pool, journal, &journal_hits)?;
+    for (&(ci, pi), m) in rest.iter().zip(rest_metrics) {
+        results[ci][pi] = Some(m);
+    }
+
+    // Layer 3: per-class frontier + report assembly, in canonical order.
+    let mut sweeps = Vec::with_capacity(nc);
+    let (mut evaluated, mut tot_shard, mut tot_roofline) = (0, 0, 0);
+    for (ci, class) in classes.iter().enumerate() {
+        let evals: Vec<PointEval> = (0..np)
+            .filter_map(|pi| results[ci][pi].map(|metrics| PointEval { point: pi, metrics }))
+            .collect();
+        let frontier = pareto_frontier(&evals);
+        let default_eval = evals
+            .iter()
+            .position(|e| e.point == default_pi)
+            .expect("the default point is always evaluated");
+        let mut best_eval = 0;
+        for i in 1..evals.len() {
+            let (a, b) = (
+                cfg.objective.score(&evals[i].metrics),
+                cfg.objective.score(&evals[best_eval].metrics),
+            );
+            if a.total_cmp(&b) == std::cmp::Ordering::Less {
+                best_eval = i;
+            }
+        }
+        let pruned_shard_n = (0..np).filter(|&pi| pruned_shard[ci][pi]).count();
+        let pruned_roofline_n = (0..np).filter(|&pi| pruned_roofline[ci][pi]).count();
+        evaluated += evals.len();
+        tot_shard += pruned_shard_n;
+        tot_roofline += pruned_roofline_n;
+        sweeps.push(ClassSweep {
+            name: class.name.clone(),
+            spec: class.model.spec_string(),
+            batch: class.batch,
+            evals,
+            frontier,
+            default_eval,
+            best_eval,
+            pruned_shard: pruned_shard_n,
+            pruned_roofline: pruned_roofline_n,
+        });
+    }
+
+    Ok(AutotuneResult {
+        base_arch: base.signature(),
+        space: space.canonical(),
+        objective: cfg.objective,
+        overlap: cfg.overlap,
+        window: cfg.window,
+        points,
+        classes: sweeps,
+        evaluated,
+        pruned_shard: tot_shard,
+        pruned_roofline: tot_roofline,
+        journal_hits: journal_hits.load(Ordering::Relaxed),
+        cache: pool.cache_stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(latency_s: f64, energy_j: f64, area_mm2: f64) -> Metrics {
+        Metrics {
+            latency_s,
+            energy_j,
+            area_mm2,
+            efficiency: 1.0,
+            throughput: 1.0,
+            power_w: 1.0,
+        }
+    }
+
+    #[test]
+    fn parse_default_and_round_trip() {
+        let d = SearchSpace::parse("default").unwrap();
+        assert_eq!(d.mesh, vec![(2, 2), (4, 4)]);
+        let base = ArchConfig::scaled_128();
+        let canon = d.resolved(&base).canonical();
+        assert_eq!(
+            canon,
+            "mesh=2x2,4x4;simd=8,32;spm=2m,4m;ports=4;ddr=1,2;inflight=4;arrays=1,2"
+        );
+        // parse(canonical) == resolved space, point for point.
+        let again = SearchSpace::parse(&canon).unwrap().resolved(&base);
+        assert_eq!(again.canonical(), canon);
+        assert_eq!(d.num_points(&base), 32);
+    }
+
+    #[test]
+    fn parse_sizes_and_errors() {
+        let sp = SearchSpace::parse("spm=512k,2m,4096").unwrap();
+        assert_eq!(sp.spm_kib, vec![512, 2048, 4096]);
+        assert!(SearchSpace::parse("mesh=4").unwrap_err().to_string().contains("bad mesh"));
+        assert_eq!(
+            SearchSpace::parse("warp=4").unwrap_err().to_string(),
+            "unknown search-space knob 'warp' \
+             (mesh | simd | spm | ports | ddr | inflight | arrays)"
+        );
+        assert!(SearchSpace::parse("simd=0").is_err());
+        assert!(SearchSpace::parse("simd").unwrap_err().to_string().contains("not 'knob="));
+    }
+
+    #[test]
+    fn enumerate_pins_omitted_knobs_and_injects_default() {
+        let base = ArchConfig::scaled_128();
+        // A grid that does not contain the base design.
+        let sp = SearchSpace::parse("mesh=2x2;arrays=2").unwrap();
+        let points = sp.enumerate(&base).unwrap();
+        assert_eq!(points.len(), 2); // 1 grid point + injected default
+        assert!(!points[0].is_default);
+        assert_eq!(points[0].arch.simd_width, base.simd_width); // pinned
+        let def = &points[1];
+        assert!(def.is_default && def.arrays == 1);
+        assert_eq!(def.arch.signature(), base.signature());
+        // A grid that does contain it marks in place instead.
+        let sp = SearchSpace::parse("arrays=1,2").unwrap();
+        let points = sp.enumerate(&base).unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(points[0].is_default && !points[1].is_default);
+    }
+
+    #[test]
+    fn enumerate_rejects_invalid_candidates() {
+        let base = ArchConfig { spm_banks: 0, ..ArchConfig::full() };
+        let err = SearchSpace::parse("simd=8").unwrap().enumerate(&base).unwrap_err();
+        assert!(format!("{err:#}").contains("SPM must expose at least one bank/port"));
+    }
+
+    #[test]
+    fn frontier_drops_dominated_points() {
+        let evals = vec![
+            PointEval { point: 0, metrics: m(1.0, 1.0, 1.0) },
+            PointEval { point: 1, metrics: m(2.0, 2.0, 2.0) }, // dominated
+            PointEval { point: 2, metrics: m(0.5, 3.0, 1.0) }, // trade-off
+            PointEval { point: 3, metrics: m(1.0, 1.0, 1.0) }, // tie: kept
+        ];
+        assert_eq!(pareto_frontier(&evals), vec![2, 0, 3]);
+        assert!(dominates(&m(1.0, 1.0, 1.0), &m(1.0, 1.0, 2.0)));
+        assert!(!dominates(&m(1.0, 1.0, 1.0), &m(1.0, 1.0, 1.0)));
+    }
+
+    #[test]
+    fn objective_scores() {
+        let a = m(2.0, 3.0, 5.0);
+        assert_eq!(Objective::parse("edp").unwrap().score(&a), 6.0);
+        assert_eq!(Objective::Latency.score(&a), 2.0);
+        assert_eq!(Objective::Efficiency.score(&a), -1.0);
+        assert_eq!(
+            Objective::parse("speed").unwrap_err().to_string(),
+            "unknown objective 'speed' (latency | energy | area | efficiency | edp)"
+        );
+    }
+
+    #[test]
+    fn bounds_dominated_needs_strictness() {
+        let lb = Bounds { latency_s: 1.0, energy_j: 1.0, area_mm2: 1.0 };
+        assert!(bounds_dominated(&m(1.0, 1.0, 0.5), &lb));
+        assert!(!bounds_dominated(&m(1.0, 1.0, 1.0), &lb));
+        assert!(!bounds_dominated(&m(0.5, 1.5, 0.5), &lb));
+    }
+
+    #[test]
+    fn journal_round_trips_metrics_exactly() {
+        let path = std::env::temp_dir().join(format!(
+            "bfdf_autotune_journal_{}.jsonl",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let written = Metrics {
+            latency_s: 1.0 / 3.0,
+            energy_j: 2.718281828459045,
+            area_mm2: 15.76,
+            efficiency: 1e-7 / 3.0,
+            throughput: 123456.789,
+            power_w: 3.94,
+        };
+        {
+            let j = Journal::open(&path, false).unwrap();
+            j.record("k1", written).unwrap();
+        }
+        let j = Journal::open(&path, true).unwrap();
+        assert_eq!(j.loaded(), 1);
+        assert_eq!(j.lookup("k1"), Some(written)); // bit-exact round trip
+        assert_eq!(j.lookup("k2"), None);
+        // Fresh open truncates.
+        let j = Journal::open(&path, false).unwrap();
+        assert_eq!(j.loaded(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn journal_load_skips_corrupt_tail() {
+        let path = std::env::temp_dir().join(format!(
+            "bfdf_autotune_corrupt_{}.jsonl",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        {
+            let j = Journal::open(&path, false).unwrap();
+            j.record("good", m(1.0, 2.0, 3.0)).unwrap();
+        }
+        // Simulate a crash mid-append.
+        {
+            use std::io::Write;
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"key\":\"trunc").unwrap();
+        }
+        let j = Journal::open(&path, true).unwrap();
+        assert_eq!(j.loaded(), 1);
+        assert!(j.lookup("good").is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn eval_key_separates_configs() {
+        let class = &WorkloadClass::resolve(&["fabnet-128".into()], Some(2)).unwrap()[0];
+        let cfg = AutotuneConfig::default();
+        let p1 = DesignPoint {
+            id: "a".into(),
+            arch: ArchConfig::full(),
+            arrays: 1,
+            is_default: false,
+        };
+        let p2 = DesignPoint { arrays: 2, ..p1.clone() };
+        let p3 = DesignPoint { arch: ArchConfig::scaled_128(), ..p1.clone() };
+        let k1 = eval_key(&p1, class, &cfg);
+        assert_ne!(k1, eval_key(&p2, class, &cfg));
+        assert_ne!(k1, eval_key(&p3, class, &cfg));
+        let other = &WorkloadClass::resolve(&["fabnet-128".into()], Some(4)).unwrap()[0];
+        assert_ne!(k1, eval_key(&p1, other, &cfg));
+        let cfg2 = AutotuneConfig { overlap: Overlap::None, ..cfg.clone() };
+        assert_ne!(k1, eval_key(&p1, class, &cfg2));
+    }
+
+    #[test]
+    fn workload_class_resolve_rejects_zero_batch() {
+        let err = WorkloadClass::resolve(&["vanilla".into()], Some(0)).unwrap_err();
+        assert_eq!(err.to_string(), "autotune batch must be >= 1 (got 0)");
+    }
+}

@@ -18,13 +18,19 @@
 //! ([`serve`]): deterministic Poisson/trace traffic over mixed request
 //! classes, a dynamic batcher (max-batch/max-wait), and a
 //! discrete-event loop across replica arrays producing SLO percentiles
-//! ([`Session::serve`], `Report::Serving`, `bfdf serve-sim`).
+//! ([`Session::serve`], `Report::Serving`, `bfdf serve-sim`).  The
+//! design-space autotuner ([`autotune`]) closes the loop: a
+//! [`SearchSpace`] over `ArchConfig` knobs, sound shard/roofline
+//! pruning, a resumable journal-checkpointed parallel sweep through
+//! shared per-arch sessions, and per-class latency/energy/area Pareto
+//! frontiers (`Report::Pareto`, `bfdf autotune`).
 //!
 //! The historical one-shot free functions ([`run_kernel`],
 //! [`run_kernel_with`], [`stream_workload`]) are deprecated wrappers
 //! routed through a process-wide pool of shared sessions (one per
 //! configuration signature).
 
+pub mod autotune;
 pub mod experiment;
 pub mod network;
 pub mod pipeline;
@@ -33,6 +39,10 @@ pub mod serve;
 pub mod session;
 pub mod streaming;
 
+pub use autotune::{
+    AutotuneConfig, AutotuneResult, ClassSweep, DesignPoint, Journal, Metrics, Objective,
+    PointEval, SearchSpace, WorkloadClass,
+};
 pub use experiment::{ExperimentConfig, KernelResult};
 pub use network::{BlockResult, DenseResult, LayerResult, NetworkResult};
 pub use pipeline::{Overlap, OverlapEstimate, PipelineConfig, StageCost};

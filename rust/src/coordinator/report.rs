@@ -2,7 +2,7 @@
 //!
 //! Every CLI subcommand, bench and CI consumer used to scrape the text
 //! tables; [`Report`] is the structured alternative, serialized through
-//! [`crate::util::json`] (the offline vendor set has no serde).  Five
+//! [`crate::util::json`] (the offline vendor set has no serde).  Six
 //! variants cover the coordinator's result shapes:
 //!
 //! * [`Report::Kernel`]  — one kernel simulation ([`KernelResult`]);
@@ -13,7 +13,15 @@
 //! * [`Report::Sweep`]   — a division sweep (the Fig. 14 scenario);
 //! * [`Report::Serving`] — a serving-simulation load/latency curve
 //!   ([`ServeResult`] points from `bfdf serve-sim`), with the shared
-//!   session cache stats that make multi-tenant plan reuse observable.
+//!   session cache stats that make multi-tenant plan reuse observable;
+//! * [`Report::Pareto`]  — a design-space autotune sweep
+//!   ([`AutotuneResult`] from `bfdf autotune`): per-class
+//!   latency/energy/area frontiers, the default design point's
+//!   placement and the prune counts.  Unlike the other variants this
+//!   one deliberately omits cache statistics: the artifact must be
+//!   byte-identical between a fresh sweep and a journal-`--resume`d
+//!   one, and cache activity is run-dependent (it lives on
+//!   [`AutotuneResult`] and in the CLI text output instead).
 //!
 //! The JSON layout is stable: a top-level `"report"` discriminator plus
 //! flat snake_case metric keys matching the `KernelResult`/
@@ -22,6 +30,7 @@
 use crate::arch::UnitKind;
 use crate::util::json::{arr, num, obj, s, Json};
 
+use super::autotune::AutotuneResult;
 use super::experiment::KernelResult;
 use super::network::{BlockResult, LayerResult, NetworkResult};
 use super::serve::ServeResult;
@@ -76,6 +85,9 @@ pub enum Report {
         cache: CacheStats,
         points: Vec<ServeResult>,
     },
+    /// A design-space autotune sweep: per-workload-class Pareto
+    /// frontiers over `(latency_s, energy_j, area_mm2)`.
+    Pareto { result: AutotuneResult },
 }
 
 impl Report {
@@ -112,6 +124,7 @@ impl Report {
                 ("cache", cache_json(cache)),
                 ("points", arr(points.iter().map(ServeResult::to_json).collect())),
             ]),
+            Report::Pareto { result } => result.to_json(),
         }
     }
 
@@ -368,6 +381,42 @@ mod tests {
         assert_eq!(classes[0].req_str("spec").unwrap(), "att:bpmm");
         // Repeated batches of one class must share plans in the cache.
         assert!(parsed.req("cache").unwrap().req_f64("stage_hits").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn pareto_report_round_trips() {
+        use crate::arch::ArchConfig;
+        use crate::coordinator::autotune::{
+            sweep, AutotuneConfig, Journal, SearchSpace, WorkloadClass,
+        };
+        let space = SearchSpace::parse("arrays=1,2").unwrap();
+        let classes = WorkloadClass::resolve(&["fabnet-128".to_string()], Some(2)).unwrap();
+        let cfg = AutotuneConfig { window: 16, ..AutotuneConfig::default() };
+        let result = sweep(
+            &space,
+            &ArchConfig::scaled_128(),
+            &classes,
+            &cfg,
+            &Journal::in_memory(),
+        )
+        .unwrap();
+        let report = Report::Pareto { result };
+        let parsed = json::parse(&report.render()).unwrap();
+        assert_eq!(parsed.req_str("report").unwrap(), "pareto");
+        assert_eq!(parsed.req_str("objective").unwrap(), "edp");
+        assert!(parsed.req_f64("points_total").unwrap() >= 2.0);
+        let classes = parsed.req("classes").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(classes.len(), 1);
+        let c = &classes[0];
+        assert_eq!(c.req_str("class").unwrap(), "fabnet-128");
+        let frontier = c.req("frontier").unwrap().as_arr().unwrap().to_vec();
+        assert!(!frontier.is_empty());
+        assert!(frontier[0].req_f64("latency_s").unwrap() > 0.0);
+        assert!(frontier[0].req_f64("area_mm2").unwrap() > 0.0);
+        let def = c.req("default_point").unwrap();
+        assert!(def.get("on_frontier").is_some());
+        // Run-dependent diagnostics stay out of the artifact.
+        assert!(parsed.get("cache").is_none());
     }
 
     #[test]

@@ -189,6 +189,52 @@ pub fn array_area_mm2(arch: &ArchConfig) -> f64 {
     (units + glue) * arch.num_pes() as f64
 }
 
+/// SPM SRAM density (mm² per MiB) at the Table III node.  Derived from
+/// the SIMD RAM row: 0.106 mm² buys a PE's context RAM; scaled to the
+/// shared 4 MiB SPM of the full design it puts the SPM at roughly the
+/// same order as the 16-PE array, matching the die-photo proportions of
+/// comparable 12 nm dataflow accelerators.
+pub const SPM_MM2_PER_MIB: f64 = 0.55;
+
+/// Synthesized area (mm²) of one complete design point: the PE array
+/// (Table III per-PE total, with the width-dependent rows — FuncUnits
+/// and SIMD RAM — scaled linearly from their SIMD32 reference) plus the
+/// shared SPM at [`SPM_MM2_PER_MIB`].  DDR channels are off-chip PHY +
+/// DIMMs and contribute no die area here; they still differentiate
+/// designs through bandwidth (latency) and are reported alongside.
+///
+/// This is the area axis of the autotuner's Pareto frontier
+/// (`coordinator::autotune`): unlike [`array_area_mm2`] it must *rank*
+/// heterogeneous design points, so it cannot ignore SIMD width or SPM
+/// capacity.
+pub fn design_area_mm2(arch: &ArchConfig) -> f64 {
+    let rows = table3_rows();
+    let simd_scale = arch.simd_width as f64 / 32.0;
+    let units: f64 = rows
+        .iter()
+        .map(|r| match r.class {
+            PowerClass::FuncUnits | PowerClass::SimdRam => r.area_mm2 * simd_scale,
+            _ => r.area_mm2,
+        })
+        .sum();
+    let glue = PE_AREA_MM2 - rows.iter().map(|r| r.area_mm2).sum::<f64>();
+    let pe_array = (units + glue) * arch.num_pes() as f64;
+    let spm = SPM_MM2_PER_MIB * arch.spm_bytes as f64 / (1024.0 * 1024.0);
+    pe_array + spm
+}
+
+/// Lower bound (J) on the *compute* energy of executing `flops` on this
+/// array: the FuncUnits' dynamic power over the minimum Cal busy time
+/// the roofline allows.  Every additional joule a real run spends —
+/// idle fractions, data movers, control plane, utilization below peak —
+/// only adds to this, so the autotuner may prune a design point whose
+/// floor is already dominated without simulating it
+/// (see `coordinator::autotune`).
+pub fn compute_energy_floor_j(arch: &ArchConfig, flops: f64) -> f64 {
+    let (p_func, _, _, _) = power_partition(arch);
+    (1.0 - IDLE_FRACTION) * p_func * flops / arch.peak_flops()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +292,49 @@ mod tests {
     fn area_scales_with_pes() {
         let full = array_area_mm2(&ArchConfig::full());
         assert!((full - 0.985 * 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn design_area_ranks_knobs() {
+        // Full design: simd scale 1 ⇒ PE array term equals
+        // array_area_mm2; SPM adds its own term.
+        let full = ArchConfig::full();
+        let a_full = design_area_mm2(&full);
+        let spm_mib = full.spm_bytes as f64 / (1024.0 * 1024.0);
+        assert!(
+            (a_full - (array_area_mm2(&full) + SPM_MM2_PER_MIB * spm_mib)).abs() < 1e-9,
+            "{a_full}"
+        );
+        // Narrower SIMD shrinks the die but not below the uncore floor.
+        let narrow = ArchConfig::scaled_128();
+        assert!(design_area_mm2(&narrow) < a_full);
+        assert!(design_area_mm2(&narrow) > SPM_MM2_PER_MIB * spm_mib);
+        // Fewer PEs, less SPM, fewer DDR channels: only the first two
+        // change the die area (DDR is off-chip by construction).
+        let small_mesh = ArchConfig { mesh_rows: 2, mesh_cols: 2, ..full.clone() };
+        assert!(design_area_mm2(&small_mesh) < a_full);
+        let small_spm = ArchConfig { spm_bytes: 1 << 20, ..full.clone() };
+        assert!(design_area_mm2(&small_spm) < a_full);
+        let one_ddr = ArchConfig { ddr_channels: 1, ..full.clone() };
+        assert!((design_area_mm2(&one_ddr) - a_full).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_energy_floor_is_a_floor() {
+        // The floor at peak-rate execution must sit below the energy the
+        // activity model charges for the same work: a fully-busy run of
+        // exactly the roofline duration burns the FuncUnits dynamic term
+        // *plus* idle fractions, movers and control.
+        for arch in [ArchConfig::full(), ArchConfig::scaled_128()] {
+            let flops = 1.0e9;
+            let floor = compute_energy_floor_j(&arch, flops);
+            assert!(floor > 0.0);
+            let t = flops / arch.peak_flops();
+            let mut busy = SimStats { cycles: 1000, ..Default::default() };
+            busy.unit_busy = [16_000, 16_000, 16_000, 16_000];
+            let modeled = effective_power_w(&arch, &busy) * t;
+            assert!(floor < modeled, "floor {floor} >= modeled {modeled}");
+        }
     }
 
     #[test]

@@ -65,9 +65,18 @@
 //!   replica arrays that reports p50/p95/p99 latency, goodput against
 //!   the capacity bound and utilization
 //!   ([`coordinator::Session::serve`], `Report::Serving`, the
-//!   `bfdf serve-sim` subcommand).  The old free functions
-//!   (`run_kernel`, `run_kernel_with`, `stream_workload`) remain as
-//!   deprecated wrappers over a process-wide shared-session pool.
+//!   `bfdf serve-sim` subcommand).  Design-space autotuning
+//!   ([`coordinator::autotune`]) closes the loop: a
+//!   [`coordinator::SearchSpace`] grid over the `ArchConfig` knobs
+//!   (mesh, SIMD width, SPM ports/capacity, DDR channels, replica
+//!   arrays), sound equal-shard/roofline pruning with reported skip
+//!   counts, a resumable journal-checkpointed parallel sweep through
+//!   shared per-arch sessions, and a per-class latency/energy/area
+//!   Pareto frontier ([`coordinator::autotune::sweep`],
+//!   `Report::Pareto`, the `bfdf autotune` subcommand).  The old free
+//!   functions (`run_kernel`, `run_kernel_with`, `stream_workload`)
+//!   remain as deprecated wrappers over a process-wide shared-session
+//!   pool.
 
 pub mod arch;
 pub mod baselines;

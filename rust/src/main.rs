@@ -19,8 +19,10 @@
 use anyhow::Result;
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
+use butterfly_dataflow::coordinator::autotune;
 use butterfly_dataflow::coordinator::{
-    NetworkResult, Overlap, Report, ServeConfig, ServeResult, Session, SweepRow, Traffic,
+    AutotuneConfig, AutotuneResult, Journal, NetworkResult, Objective, Overlap, Report,
+    SearchSpace, ServeConfig, ServeResult, Session, SweepRow, Traffic, WorkloadClass,
 };
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
@@ -139,6 +141,38 @@ fn app() -> App {
             .flag("json", "emit a machine-readable report"),
         )
         .command(
+            Command::new(
+                "autotune",
+                "design-space sweep: latency/energy/area Pareto frontier per workload class",
+            )
+            .opt(
+                "space",
+                "default",
+                "search-space grammar, e.g. 'mesh=2x2,4x4;simd=8,32;spm=2m,4m;ports=4;ddr=1,2;\
+                 arrays=1,2', or 'default'",
+            )
+            .opt(
+                "suites",
+                "all",
+                "space-separated workload classes (quote the list): suite names and/or spec \
+                 strings, or 'all' for every registered suite",
+            )
+            .opt("batch", "default", "batch override for every class ('default' = per-class)")
+            .opt(
+                "objective",
+                "edp",
+                "best-point ranking: latency | energy | area | efficiency | edp",
+            )
+            .opt("arch", "scaled128", "base architecture preset: full | scaled128")
+            .opt("window", "48", "simulation window (DFG iterations)")
+            .opt("overlap", "pipeline", "per-batch overlap model: none | dma | pipeline")
+            .opt("journal", "", "checkpoint journal path (JSON lines); enables --resume")
+            .flag("resume", "replay completed evaluations from --journal instead of re-running")
+            .flag("no-prune", "disable the shard/roofline pruner (evaluate the full grid)")
+            .opt("out", "", "also write the JSON report to this path (e.g. BENCH_pareto.json)")
+            .flag("json", "emit a machine-readable report"),
+        )
+        .command(
             Command::new("gpu-model", "run the Jetson GPU baseline on a butterfly kernel")
                 .opt("kind", "fft", "kernel kind: fft | bpmm")
                 .opt("points", "1024", "transform length")
@@ -207,6 +241,7 @@ fn run(args: &[String]) -> Result<()> {
         "validate" => cmd_validate(&m),
         "stream" => cmd_stream(&m),
         "serve-sim" => cmd_serve_sim(&m),
+        "autotune" => cmd_autotune(&m),
         "gpu-model" => cmd_gpu_model(&m),
         other => anyhow::bail!("unhandled command {other}"),
     }
@@ -857,6 +892,123 @@ fn print_serving(points: &[ServeResult], cache: &butterfly_dataflow::coordinator
         "plan cache (shared across all classes and batch sizes): {} lowerings, \
          {} stage hits, {} plan hits",
         cache.lowerings, cache.stage_hits, cache.plan_hits
+    );
+}
+
+fn cmd_autotune(m: &Matches) -> Result<()> {
+    let space = SearchSpace::parse(m.get("space"))?;
+    let base = parse_arch(m.get("arch"))?;
+    // Whitespace-separated, NOT comma-separated: spec strings use
+    // commas internally ('att:fft2d,ffn:bpmm*x2' is one class).
+    let keys: Vec<String> = match m.get("suites") {
+        "all" => workloads::suite_names().iter().map(|s| s.to_string()).collect(),
+        list => list.split_whitespace().map(str::to_string).collect(),
+    };
+    anyhow::ensure!(!keys.is_empty(), "--suites needs at least one workload class");
+    let batch = parse_batch(m)?;
+    let classes = WorkloadClass::resolve(&keys, batch)?;
+    let cfg = AutotuneConfig {
+        objective: Objective::parse(m.get("objective"))?,
+        overlap: Overlap::parse(m.get("overlap"))?,
+        window: m.get_usize("window")?,
+        batch,
+        prune: !m.flag("no-prune"),
+    };
+    let journal_path = m.get("journal");
+    let journal = if journal_path.is_empty() {
+        anyhow::ensure!(!m.flag("resume"), "--resume needs --journal to replay from");
+        Journal::in_memory()
+    } else {
+        Journal::open(journal_path, m.flag("resume"))?
+    };
+    let result = autotune::sweep(&space, &base, &classes, &cfg, &journal)?;
+    let report = Report::Pareto { result };
+    let out = m.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, report.render() + "\n")
+            .map_err(|e| anyhow::anyhow!("cannot write report to '{out}': {e}"))?;
+    }
+    if m.flag("json") {
+        println!("{}", report.render());
+        return Ok(());
+    }
+    if let Report::Pareto { result } = &report {
+        print_pareto(result);
+    }
+    Ok(())
+}
+
+/// Text tables for an autotune sweep: one Pareto-frontier table per
+/// workload class, where the paper's default design point lands, and
+/// the prune/journal/plan-cache accounting.
+fn print_pareto(r: &AutotuneResult) {
+    println!(
+        "autotune: {} points x {} classes (base {}, objective {})",
+        r.points.len(),
+        r.classes.len(),
+        r.base_arch,
+        r.objective.name()
+    );
+    println!("space: {}", r.space);
+    for c in &r.classes {
+        let mut t = Table::new(
+            &format!("{} (batch {}): Pareto frontier", c.name, c.batch),
+            &[
+                "point", "mesh", "simd", "spm KiB", "ports", "ddr", "arrays", "latency",
+                "energy J", "area mm2", "pred/J", "best",
+            ],
+        );
+        for &fi in &c.frontier {
+            let e = &c.evals[fi];
+            let p = &r.points[e.point];
+            t.row(&[
+                p.id.clone(),
+                format!("{}x{}", p.arch.mesh_rows, p.arch.mesh_cols),
+                format!("{}", p.arch.simd_width),
+                format!("{}", p.arch.spm_bytes / 1024),
+                format!("{}", p.arch.spm_banks),
+                format!("{}", p.arch.ddr_channels),
+                format!("{}", p.arrays),
+                fmt_time(e.metrics.latency_s),
+                format!("{:.3}", e.metrics.energy_j),
+                format!("{:.1}", e.metrics.area_mm2),
+                format!("{:.1}", e.metrics.efficiency),
+                if fi == c.best_eval { r.objective.name().into() } else { String::new() },
+            ]);
+        }
+        t.print();
+        let d = &c.evals[c.default_eval];
+        let place = if c.default_on_frontier() {
+            "on the frontier".to_string()
+        } else {
+            let b = &c.evals[c.best_eval];
+            format!(
+                "dominated ({:.2}x latency, {:.2}x energy of the {} best)",
+                d.metrics.latency_s / b.metrics.latency_s,
+                d.metrics.energy_j / b.metrics.energy_j,
+                r.objective.name()
+            )
+        };
+        println!(
+            "default design {}: {} -- pruned {} shard + {} roofline of {} points",
+            r.points[d.point].id,
+            place,
+            c.pruned_shard,
+            c.pruned_roofline,
+            r.points.len()
+        );
+    }
+    println!(
+        "sweep: {} of {} evaluations run ({} shard-pruned, {} roofline-pruned, \
+         {} journal hits); plan cache: {} lowerings, {} stage hits, {} plan hits",
+        r.evaluated,
+        r.units_total(),
+        r.pruned_shard,
+        r.pruned_roofline,
+        r.journal_hits,
+        r.cache.lowerings,
+        r.cache.stage_hits,
+        r.cache.plan_hits
     );
 }
 

@@ -1,0 +1,170 @@
+//! Integration tests for the design-space autotuner
+//! (`coordinator::autotune`): the ISSUE-7 acceptance criteria — the
+//! pruner skips provably-dominated work without ever discarding a
+//! frontier point, resumed sweeps render byte-identical reports while
+//! simulating nothing, every frontier metric matches an individually
+//! run session, and multi-suite sweeps share one plan cache.
+
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::{
+    autotune, AutotuneConfig, AutotuneResult, Journal, Metrics, Overlap, PipelineConfig, Report,
+    SearchSpace, Session, WorkloadClass,
+};
+use butterfly_dataflow::energy::design_area_mm2;
+use butterfly_dataflow::util::json;
+
+fn classes(keys: &[&str], batch: Option<usize>) -> Vec<WorkloadClass> {
+    let keys: Vec<String> = keys.iter().map(|k| k.to_string()).collect();
+    WorkloadClass::resolve(&keys, batch).unwrap()
+}
+
+fn cfg(window: usize, prune: bool) -> AutotuneConfig {
+    AutotuneConfig { window, prune, ..AutotuneConfig::default() }
+}
+
+/// The frontier of one single-class result as `(point id, metrics)` in
+/// frontier order — comparable across runs that evaluated different
+/// subsets of the same grid.
+fn frontier_ids(r: &AutotuneResult) -> Vec<(String, Metrics)> {
+    let c = &r.classes[0];
+    c.frontier
+        .iter()
+        .map(|&fi| {
+            let e = &c.evals[fi];
+            (r.points[e.point].id.clone(), e.metrics)
+        })
+        .collect()
+}
+
+#[test]
+fn equal_shard_replicas_are_pruned_not_simulated() {
+    // bert-1k defaults to batch 1: ceil(1/1) == ceil(1/2), so the
+    // arrays=2 replica point runs the identical per-shard schedule on
+    // strictly more silicon and must be pruned without simulation.
+    let space = SearchSpace::parse("arrays=1,2").unwrap();
+    let base = ArchConfig::scaled_128();
+    let cls = classes(&["bert-1k"], None);
+    let r = autotune::sweep(&space, &base, &cls, &cfg(12, true), &Journal::in_memory()).unwrap();
+    assert_eq!(r.points.len(), 2);
+    assert_eq!(r.pruned_shard, 1, "arrays=2 at batch 1 must be shard-pruned");
+    assert_eq!(r.evaluated, 1);
+    assert_eq!(r.evaluated + r.pruned_shard + r.pruned_roofline, r.units_total());
+    let c = &r.classes[0];
+    assert_eq!(c.evals.len(), 1);
+    let p = &r.points[c.evals[0].point];
+    assert!(p.is_default && p.arrays == 1, "only the default design survives: {p:?}");
+    assert!(c.default_on_frontier());
+}
+
+#[test]
+fn pruner_never_discards_a_fully_simulated_frontier_point() {
+    // Exhaustive small grid, swept twice: pruned and brute-force.  The
+    // prune-soundness property is that both agree on the frontier,
+    // point for point and bit for bit.
+    let space = SearchSpace::parse("mesh=2x2,4x4;simd=8,32;arrays=1,2").unwrap();
+    let base = ArchConfig::scaled_128();
+    let cls = classes(&["fabnet-128"], Some(1));
+    let on = autotune::sweep(&space, &base, &cls, &cfg(12, true), &Journal::in_memory()).unwrap();
+    let off = autotune::sweep(&space, &base, &cls, &cfg(12, false), &Journal::in_memory()).unwrap();
+    assert!(on.pruned_shard + on.pruned_roofline > 0, "grid must exercise the pruner: {on:?}");
+    assert_eq!(off.pruned_shard + off.pruned_roofline, 0);
+    assert_eq!(off.evaluated, off.units_total());
+    assert_eq!(frontier_ids(&on), frontier_ids(&off), "pruning changed the frontier");
+    // Every brute-force frontier point was actually simulated (never
+    // pruned) in the pruned run.
+    let evaluated: Vec<&str> =
+        on.classes[0].evals.iter().map(|e| on.points[e.point].id.as_str()).collect();
+    for (id, _) in frontier_ids(&off) {
+        assert!(evaluated.contains(&id.as_str()), "frontier point {id} was pruned");
+    }
+}
+
+#[test]
+fn resumed_sweep_reproduces_the_report_byte_for_byte() {
+    let path = std::env::temp_dir()
+        .join(format!("bfdf_autotune_resume_{}.jsonl", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&path);
+    let space = SearchSpace::parse("simd=8,32").unwrap();
+    let base = ArchConfig::scaled_128();
+    let cls = classes(&["fabnet-128"], Some(2));
+    let c = cfg(12, true);
+    let run = |resume: bool| {
+        let journal = Journal::open(&path, resume).unwrap();
+        let result = autotune::sweep(&space, &base, &cls, &c, &journal).unwrap();
+        (Report::Pareto { result: result.clone() }.render(), result)
+    };
+    let (a, fresh) = run(false);
+    assert_eq!(fresh.journal_hits, 0);
+    assert!(fresh.evaluated > 0 && fresh.cache.lowerings > 0);
+    let (b, resumed) = run(true);
+    assert_eq!(a, b, "resumed report must be byte-identical to the fresh run");
+    assert_eq!(resumed.journal_hits, resumed.evaluated, "resume must replay every evaluation");
+    assert_eq!(resumed.cache.lowerings, 0, "a fully-journaled resume simulates nothing");
+    // The artifact is valid discriminated JSON and excludes the
+    // run-dependent cache/journal diagnostics (they differ between the
+    // two runs above, which is exactly why they cannot be in it).
+    let parsed = json::parse(&a).unwrap();
+    assert_eq!(parsed.req_str("report").unwrap(), "pareto");
+    assert!(parsed.get("cache").is_none());
+    assert!(parsed.get("journal_hits").is_none());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn frontier_metrics_match_individually_run_sessions() {
+    // Acceptance: every frontier point's stats must be reproducible by
+    // a fresh single-point Session run — the sweep adds sharding,
+    // journaling and pruning around the evaluations, never arithmetic.
+    let space = SearchSpace::parse("mesh=2x2;simd=8,32;arrays=1,2").unwrap();
+    let base = ArchConfig::scaled_128();
+    let cls = classes(&["fabnet-128"], Some(2));
+    let r = autotune::sweep(&space, &base, &cls, &cfg(12, true), &Journal::in_memory()).unwrap();
+    let c = &r.classes[0];
+    assert!(!c.frontier.is_empty());
+    for &fi in &c.frontier {
+        let e = &c.evals[fi];
+        let p = &r.points[e.point];
+        let session = Session::builder().arch(p.arch.clone()).window(12).build();
+        let pipe = PipelineConfig::new(Overlap::Pipeline, p.arrays);
+        let nr = session.run_network_with(&cls[0].model, Some(2), pipe).unwrap();
+        assert_eq!(e.metrics.latency_s, nr.batch_time_s, "{}", p.id);
+        assert_eq!(e.metrics.energy_j, nr.energy_j, "{}", p.id);
+        assert_eq!(e.metrics.efficiency, nr.energy_eff, "{}", p.id);
+        assert_eq!(e.metrics.throughput, nr.throughput, "{}", p.id);
+        assert_eq!(e.metrics.power_w, nr.power_w, "{}", p.id);
+        assert_eq!(e.metrics.area_mm2, design_area_mm2(&p.arch) * p.arrays as f64, "{}", p.id);
+    }
+}
+
+#[test]
+fn multi_suite_sweep_shares_one_plan_cache_across_classes() {
+    // fabnet-128 and fabnet-256 run the same hidden-256 FFT/BPMM
+    // kernels (plan keys ignore the vector count), so the second class
+    // must ride the first class's cached plans within one sweep.
+    let space = SearchSpace::parse("arrays=1").unwrap();
+    let base = ArchConfig::scaled_128();
+    let cls = classes(&["fabnet-128", "fabnet-256"], Some(2));
+    let r = autotune::sweep(&space, &base, &cls, &cfg(12, true), &Journal::in_memory()).unwrap();
+    assert_eq!(r.points.len(), 1);
+    assert_eq!(r.evaluated, 2);
+    assert!(r.cache.plan_hits > 0, "cross-class sweep must hit the plan cache: {:?}", r.cache);
+    assert!(r.cache.stage_hits > 0, "cross-class sweep must hit the stage cache: {:?}", r.cache);
+}
+
+#[test]
+fn default_grid_pruner_skips_work_and_reports_it() {
+    // Acceptance: on the default grid the pruner must skip at least one
+    // evaluation, and the accounting must cover the whole grid — no
+    // silent caps.
+    let space = SearchSpace::parse("default").unwrap();
+    let base = ArchConfig::scaled_128();
+    let cls = classes(&["bert-1k"], None);
+    let r = autotune::sweep(&space, &base, &cls, &cfg(8, true), &Journal::in_memory()).unwrap();
+    assert!(r.pruned_shard >= 1, "default grid must shard-prune at batch 1: {r:?}");
+    assert_eq!(r.evaluated + r.pruned_shard + r.pruned_roofline, r.units_total());
+    assert!(r.evaluated < r.units_total());
+    let c = &r.classes[0];
+    assert!(!c.frontier.is_empty());
+    assert!(c.evals.iter().any(|e| r.points[e.point].is_default));
+}
