@@ -1,0 +1,85 @@
+//! Dataflow-strategy comparison: runs every registered suite under
+//! every selectable [`Strategy`] (paper, spm-adaptive, auto) with
+//! serial per-kernel accounting and writes the `BENCH_strategy.json`
+//! artifact recording total simulated latency per (suite, strategy)
+//! plus Auto's per-shape picks.
+//!
+//! Like the other benches this is a deterministic analysis program,
+//! not a statistical timer: every number comes from the simulator over
+//! a fixed kernel list, so the JSON is bit-reproducible run over run.
+//! The acceptance property baked in as an assertion is the Auto
+//! contract: simulate-and-pick may never lose to the paper recipe on
+//! any suite total.  CI runs `--quick` (one suite, small batch) via
+//! the strategy-smoke job and archives the JSON.
+
+use butterfly_dataflow::coordinator::Session;
+use butterfly_dataflow::dfg::strategy::Strategy;
+use butterfly_dataflow::util::json::{arr, num, obj, s, Json};
+use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads::SUITES;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let batch = if quick { 2 } else { 8 };
+    let window = if quick { 12 } else { 48 };
+    let suites: Vec<_> = if quick {
+        SUITES.iter().take(1).collect()
+    } else {
+        SUITES.iter().collect()
+    };
+
+    let mut t = Table::new(
+        &format!("dataflow strategies: total simulated latency per suite (batch {batch})"),
+        &["suite", "paper s", "spm-adaptive s", "auto s", "auto vs paper"],
+    );
+    let mut arch_sig = String::new();
+    let mut suite_objs: Vec<Json> = Vec::new();
+    for suite in &suites {
+        let kernels = suite.kernels_at(Some(batch));
+        let mut totals: Vec<(&'static str, f64)> = Vec::new();
+        let mut picks: Vec<Json> = Vec::new();
+        for &strategy in &Strategy::ALL {
+            let session = Session::builder().window(window).strategy(strategy).build();
+            arch_sig = session.arch_signature().to_string();
+            let runs = session.run_many(&kernels).expect("bench suite simulates");
+            totals.push((strategy.name(), runs.iter().map(|k| k.time_s).sum()));
+            if strategy == Strategy::Auto {
+                for ((kind, points, vectors), winner) in session.auto_selections() {
+                    picks.push(obj(vec![
+                        ("kernel", s(kind)),
+                        ("points", num(points as f64)),
+                        ("vectors", num(vectors as f64)),
+                        ("strategy", s(winner)),
+                    ]));
+                }
+            }
+        }
+        let total = |name: &str| totals.iter().find(|(n, _)| *n == name).unwrap().1;
+        let (paper, auto) = (total("paper"), total("auto"));
+        assert!(auto <= paper, "{}: auto total {auto} s > paper total {paper} s", suite.name);
+        t.row(&[
+            suite.name.to_string(),
+            format!("{paper:.6}"),
+            format!("{:.6}", total("spm-adaptive")),
+            format!("{auto:.6}"),
+            format!("{:.3}x", paper / auto),
+        ]);
+        suite_objs.push(obj(vec![
+            ("suite", s(suite.name)),
+            ("latency_s", obj(totals.iter().map(|&(n, v)| (n, num(v))).collect())),
+            ("auto_speedup", num(paper / auto)),
+            ("auto_picks", arr(picks)),
+        ]));
+    }
+    t.print();
+
+    let report = obj(vec![
+        ("report", s("strategy")),
+        ("arch", s(&arch_sig)),
+        ("batch", num(batch as f64)),
+        ("suites", arr(suite_objs)),
+    ]);
+    let path = "BENCH_strategy.json";
+    std::fs::write(path, report.render() + "\n").expect("write BENCH_strategy.json");
+    println!("wrote {path}");
+}

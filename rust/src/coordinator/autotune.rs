@@ -4,8 +4,9 @@
 //! The paper evaluates one fixed design point; with the fast simulator
 //! (PR 4) and the shared plan cache (PR 1) the experiment inverts: for
 //! every workload class, which `{mesh, SIMD width, SPM capacity/ports,
-//! DDR channels, inflight pack factor, replica arrays}` combination is
-//! on the latency/energy/area frontier?  Three layers:
+//! DDR channels, inflight pack factor, replica arrays, dataflow
+//! strategy}` combination is on the latency/energy/area frontier?
+//! Three layers:
 //!
 //! 1. **Search space + pruning** — [`SearchSpace`] builds the grid over
 //!    [`ArchConfig`] knobs (every candidate passes
@@ -58,6 +59,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, ensure, Context};
 
 use crate::arch::ArchConfig;
+use crate::dfg::strategy::Strategy;
 use crate::energy::{compute_energy_floor_j, design_area_mm2, idle_power_w};
 use crate::sim::SimOptions;
 use crate::util::json::{self, Json};
@@ -99,6 +101,9 @@ pub struct SearchSpace {
     pub inflight: Vec<usize>,
     /// Replicated dataflow arrays the batch shards across.
     pub arrays: Vec<usize>,
+    /// Dataflow strategies to sweep (empty = pin to [`Strategy::Paper`],
+    /// keeping prior grids and journals byte-compatible).
+    pub strategy: Vec<Strategy>,
 }
 
 impl SearchSpace {
@@ -113,6 +118,7 @@ impl SearchSpace {
             ddr_channels: vec![1, 2],
             inflight: vec![],
             arrays: vec![1, 2],
+            strategy: vec![],
         }
     }
 
@@ -146,9 +152,13 @@ impl SearchSpace {
                 "ddr" => sp.ddr_channels = list()?,
                 "inflight" | "pack" => sp.inflight = list()?,
                 "arrays" => sp.arrays = list()?,
+                "strategy" => {
+                    sp.strategy =
+                        vals.split(',').map(|t| Strategy::parse(t.trim())).collect::<Result<_>>()?
+                }
                 other => bail!(
                     "unknown search-space knob '{other}' \
-                     (mesh | simd | spm | ports | ddr | inflight | arrays)"
+                     (mesh | simd | spm | ports | ddr | inflight | arrays | strategy)"
                 ),
             }
         }
@@ -179,11 +189,14 @@ impl SearchSpace {
             ddr_channels: fill(&self.ddr_channels, base.ddr_channels),
             inflight: fill(&self.inflight, base.inflight_iters),
             arrays: fill(&self.arrays, 1),
+            strategy: fill(&self.strategy, Strategy::Paper),
         }
     }
 
     /// Canonical grammar string (of a resolved space) — stable across
-    /// parse/render, stored in the report.
+    /// parse/render, stored in the report.  The `strategy` segment is
+    /// rendered only when the axis departs from the pinned default
+    /// (`[paper]`), so prior reports stay byte-identical.
     pub fn canonical(&self) -> String {
         let ints = |v: &[usize]| {
             v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
@@ -200,14 +213,20 @@ impl SearchSpace {
             .map(|&k| if k % 1024 == 0 { format!("{}m", k / 1024) } else { format!("{k}k") })
             .collect::<Vec<_>>()
             .join(",");
-        format!(
+        let mut out = format!(
             "mesh={mesh};simd={};spm={spm};ports={};ddr={};inflight={};arrays={}",
             ints(&self.simd),
             ints(&self.spm_banks),
             ints(&self.ddr_channels),
             ints(&self.inflight),
             ints(&self.arrays),
-        )
+        );
+        if !self.strategy.is_empty() && self.strategy != [Strategy::Paper] {
+            let names =
+                self.strategy.iter().map(|s| s.name()).collect::<Vec<_>>().join(",");
+            out.push_str(&format!(";strategy={names}"));
+        }
+        out
     }
 
     /// Grid size of the resolved space (before default-point injection).
@@ -220,13 +239,15 @@ impl SearchSpace {
             * sp.ddr_channels.len()
             * sp.inflight.len()
             * sp.arrays.len()
+            * sp.strategy.len()
     }
 
     /// Enumerate the grid over `base` in fixed nested order
-    /// (mesh → simd → spm → ports → ddr → inflight → arrays), validate
-    /// every candidate, and inject the base design (`arrays = 1`) if
-    /// the grid itself does not contain it — the frontier report always
-    /// shows where the paper's default point lands.
+    /// (mesh → simd → spm → ports → ddr → inflight → arrays →
+    /// strategy), validate every candidate, and inject the base design
+    /// (`arrays = 1`, paper strategy) if the grid itself does not
+    /// contain it — the frontier report always shows where the paper's
+    /// default point lands.
     pub fn enumerate(&self, base: &ArchConfig) -> Result<Vec<DesignPoint>> {
         let sp = self.resolved(base);
         let base_sig = base.signature();
@@ -256,12 +277,17 @@ impl SearchSpace {
                                 let is_base = arch.signature() == base_sig;
                                 for &arrays in &sp.arrays {
                                     ensure!(arrays >= 1, "arrays must be >= 1 (got 0)");
-                                    points.push(DesignPoint {
-                                        id: point_id(&arch, arrays),
-                                        arch: arch.clone(),
-                                        arrays,
-                                        is_default: is_base && arrays == 1,
-                                    });
+                                    for &strategy in &sp.strategy {
+                                        points.push(DesignPoint {
+                                            id: point_id(&arch, arrays, strategy),
+                                            arch: arch.clone(),
+                                            arrays,
+                                            strategy,
+                                            is_default: is_base
+                                                && arrays == 1
+                                                && strategy == Strategy::Paper,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -272,9 +298,10 @@ impl SearchSpace {
         if !points.iter().any(|p| p.is_default) {
             base.validate().context("base architecture")?;
             points.push(DesignPoint {
-                id: point_id(base, 1),
+                id: point_id(base, 1, Strategy::Paper),
                 arch: base.clone(),
                 arrays: 1,
+                strategy: Strategy::Paper,
                 is_default: true,
             });
         }
@@ -318,8 +345,8 @@ fn parse_kib(tok: &str) -> Result<usize> {
     Ok(v * mult)
 }
 
-fn point_id(arch: &ArchConfig, arrays: usize) -> String {
-    format!(
+fn point_id(arch: &ArchConfig, arrays: usize, strategy: Strategy) -> String {
+    let mut id = format!(
         "m{}x{}-s{}-spm{}k-p{}-d{}-i{}-a{}",
         arch.mesh_rows,
         arch.mesh_cols,
@@ -329,16 +356,26 @@ fn point_id(arch: &ArchConfig, arrays: usize) -> String {
         arch.ddr_channels,
         arch.inflight_iters,
         arrays
-    )
+    );
+    // Paper points keep their historical ids; only alternatives are
+    // suffixed (no collision: a non-paper point always carries one).
+    if strategy != Strategy::Paper {
+        id.push_str(&format!("-st{}", strategy.name()));
+    }
+    id
 }
 
-/// One candidate design: an architecture plus its replica count.
+/// One candidate design: an architecture plus its replica count and
+/// dataflow strategy.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
-    /// Stable knob-derived identifier, e.g. `m4x4-s32-spm4096k-p4-d2-i4-a1`.
+    /// Stable knob-derived identifier, e.g. `m4x4-s32-spm4096k-p4-d2-i4-a1`
+    /// (with an `-st<name>` suffix for non-paper strategies).
     pub id: String,
     pub arch: ArchConfig,
     pub arrays: usize,
+    /// Dataflow strategy the point's sessions lower with.
+    pub strategy: Strategy,
     /// Whether this is the paper's base design point (never pruned).
     pub is_default: bool,
 }
@@ -631,11 +668,12 @@ impl Journal {
 }
 
 /// Journal key of one evaluation.  Replicates the session signature
-/// (arch + simulator options + window) so a journal can never replay an
-/// entry the current configuration would compute differently; a format
-/// change simply misses and re-evaluates.
+/// (arch + simulator options + window + strategy) so a journal can
+/// never replay an entry the current configuration would compute
+/// differently; a format change simply misses and re-evaluates.  Paper
+/// points keep the historical suffix-free key so old journals replay.
 fn eval_key(point: &DesignPoint, class: &WorkloadClass, cfg: &AutotuneConfig) -> String {
-    format!(
+    let mut key = format!(
         "{}|{:?}|w{}|{}|a{}|{}|h{}|q{}|e{}|b{}",
         point.arch.signature(),
         SimOptions::default(),
@@ -647,7 +685,11 @@ fn eval_key(point: &DesignPoint, class: &WorkloadClass, cfg: &AutotuneConfig) ->
         class.model.seq(),
         class.model.heads(),
         class.batch
-    )
+    );
+    if point.strategy != Strategy::Paper {
+        key.push_str(&format!("|st{}", point.strategy.name()));
+    }
+    key
 }
 
 // ---------------------------------------------------------------------------
@@ -762,6 +804,11 @@ impl AutotuneResult {
                         ("inflight", json::num(p.arch.inflight_iters as f64)),
                         ("arrays", json::num(p.arrays as f64)),
                     ];
+                    // Keep paper-only artifacts byte-identical to prior
+                    // releases; the axis shows up only when swept.
+                    if p.strategy != Strategy::Paper {
+                        pairs.push(("strategy", json::s(p.strategy.name())));
+                    }
                     pairs.extend(e.metrics.to_json_pairs());
                     json::obj(pairs)
                 };
@@ -803,12 +850,14 @@ impl AutotuneResult {
     }
 }
 
-/// Lazily-built per-architecture sessions shared by every worker: all
-/// classes and every point that differs only in `arrays` hit the same
-/// plan cache.
+/// Lazily-built per-`(architecture, strategy)` sessions shared by every
+/// worker: all classes and every point that differs only in `arrays`
+/// hit the same plan cache.  Strategy is part of the pool key — a
+/// cross-strategy session share would be a correctness bug (the plan
+/// cache keys on strategy, but `Session::strategy` is fixed at build).
 struct SessionPool {
     window: usize,
-    sessions: Mutex<HashMap<String, Arc<Session>>>,
+    sessions: Mutex<HashMap<(String, Strategy), Arc<Session>>>,
 }
 
 impl SessionPool {
@@ -816,11 +865,17 @@ impl SessionPool {
         SessionPool { window, sessions: Mutex::new(HashMap::new()) }
     }
 
-    fn get(&self, arch: &ArchConfig) -> Arc<Session> {
+    fn get(&self, arch: &ArchConfig, strategy: Strategy) -> Arc<Session> {
         let mut map = self.sessions.lock().unwrap();
-        map.entry(arch.signature())
+        map.entry((arch.signature(), strategy))
             .or_insert_with(|| {
-                Arc::new(Session::builder().arch(arch.clone()).window(self.window).build())
+                Arc::new(
+                    Session::builder()
+                        .arch(arch.clone())
+                        .window(self.window)
+                        .strategy(strategy)
+                        .build(),
+                )
             })
             .clone()
     }
@@ -853,7 +908,7 @@ fn eval_one(
         journal_hits.fetch_add(1, Ordering::Relaxed);
         return Ok(m);
     }
-    let session = pool.get(&point.arch);
+    let session = pool.get(&point.arch, point.strategy);
     let pipe = PipelineConfig::new(cfg.overlap, point.arrays);
     let r = session.run_network_with(&class.model, Some(class.batch), pipe)?;
     let m = Metrics {
@@ -964,14 +1019,16 @@ pub fn sweep(
     let costs: Vec<ClassCosts> = classes.iter().map(class_costs).collect();
     let (nc, np) = (classes.len(), points.len());
 
-    // Layer 1a: equal-shard prune.  Among points sharing an architecture,
-    // only the smallest replica count per distinct shard width can be
-    // non-dominated (equal latency, <= energy, strictly less area).
+    // Layer 1a: equal-shard prune.  Among points sharing an architecture
+    // AND a strategy (different strategies lower differently, so the
+    // identical-schedule argument needs both), only the smallest replica
+    // count per distinct shard width can be non-dominated (equal
+    // latency, <= energy, strictly less area).
     let mut pruned_shard = vec![vec![false; np]; nc];
     if cfg.prune {
-        let mut groups: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut groups: HashMap<(String, Strategy), Vec<usize>> = HashMap::new();
         for (pi, p) in points.iter().enumerate() {
-            groups.entry(p.arch.signature()).or_default().push(pi);
+            groups.entry((p.arch.signature(), p.strategy)).or_default().push(pi);
         }
         for (ci, class) in classes.iter().enumerate() {
             for idxs in groups.values() {
@@ -1173,7 +1230,7 @@ mod tests {
         assert_eq!(
             SearchSpace::parse("warp=4").unwrap_err().to_string(),
             "unknown search-space knob 'warp' \
-             (mesh | simd | spm | ports | ddr | inflight | arrays)"
+             (mesh | simd | spm | ports | ddr | inflight | arrays | strategy)"
         );
         assert!(SearchSpace::parse("simd=0").is_err());
         assert!(SearchSpace::parse("simd").unwrap_err().to_string().contains("not 'knob="));
@@ -1299,6 +1356,7 @@ mod tests {
             id: "a".into(),
             arch: ArchConfig::full(),
             arrays: 1,
+            strategy: Strategy::Paper,
             is_default: false,
         };
         let p2 = DesignPoint { arrays: 2, ..p1.clone() };
@@ -1310,6 +1368,40 @@ mod tests {
         assert_ne!(k1, eval_key(&p1, other, &cfg));
         let cfg2 = AutotuneConfig { overlap: Overlap::None, ..cfg.clone() };
         assert_ne!(k1, eval_key(&p1, class, &cfg2));
+        // A different strategy on the same arch is a different journal
+        // cell; the paper point keeps the historical suffix-free key.
+        let p4 = DesignPoint { strategy: Strategy::SpmAdaptive, ..p1.clone() };
+        let p5 = DesignPoint { strategy: Strategy::Auto, ..p1.clone() };
+        let k4 = eval_key(&p4, class, &cfg);
+        let k5 = eval_key(&p5, class, &cfg);
+        assert_ne!(k1, k4);
+        assert_ne!(k1, k5);
+        assert_ne!(k4, k5);
+        assert!(!k1.contains("|st"));
+    }
+
+    #[test]
+    fn strategy_axis_enumerates_and_suffixes_ids() {
+        let base = ArchConfig::scaled_128();
+        let sp = SearchSpace::parse("strategy=paper,spm-adaptive,auto").unwrap();
+        assert_eq!(sp.num_points(&base), 3);
+        let points = sp.enumerate(&base).unwrap();
+        assert_eq!(points.len(), 3);
+        // The paper point is the default and keeps the suffix-free id.
+        assert!(points[0].is_default && points[0].strategy == Strategy::Paper);
+        assert!(!points[0].id.contains("-st"));
+        assert!(points[1].id.ends_with("-stspm-adaptive"));
+        assert!(points[2].id.ends_with("-stauto"));
+        assert!(!points[1].is_default && !points[2].is_default);
+        // Rendered canonical grammar round-trips the axis.
+        let canon = sp.resolved(&base).canonical();
+        assert!(canon.ends_with(";strategy=paper,spm-adaptive,auto"), "{canon}");
+        let again = SearchSpace::parse(&canon).unwrap().resolved(&base);
+        assert_eq!(again.canonical(), canon);
+        // An omitted axis pins to paper and stays out of the grammar.
+        let plain = SearchSpace::parse("arrays=1").unwrap().resolved(&base);
+        assert_eq!(plain.strategy, vec![Strategy::Paper]);
+        assert!(!plain.canonical().contains("strategy"), "{}", plain.canonical());
     }
 
     #[test]

@@ -13,11 +13,9 @@
 //! plans, lowers and simulates kernels with plan caching, parallel
 //! fan-out and a pool of reusable simulator workspaces
 //! ([`crate::sim::SimWorkspace`]) so windowed re-simulation is
-//! allocation-free at steady state.  The free functions here are
-//! deprecated wrappers kept for
-//! source compatibility; they route through a process-wide pool of
-//! shared sessions (one per configuration signature), so repeated
-//! legacy calls at least reuse cached plans and stage measurements.
+//! allocation-free at steady state.  This module keeps only the
+//! configuration ([`ExperimentConfig`]) and result ([`KernelResult`])
+//! types; all execution goes through a [`Session`](super::Session).
 
 use crate::arch::{ArchConfig, UnitKind};
 use crate::dfg::stages::KernelPlan;
@@ -90,29 +88,6 @@ impl KernelResult {
     pub fn util_of(&self, kind: UnitKind) -> f64 {
         self.util[kind.index()]
     }
-}
-
-/// Run a kernel with the default balanced division.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a `coordinator::Session` instead — the wrapper shares a \
-            process-wide session per config, but cannot batch or stream"
-)]
-pub fn run_kernel(spec: &KernelSpec, cfg: &ExperimentConfig) -> anyhow::Result<KernelResult> {
-    super::session::shared_session(cfg).run(spec)
-}
-
-/// Run a kernel with an explicit stage division (the Fig. 14 sweep).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a `coordinator::Session` and call `run_with` instead"
-)]
-pub fn run_kernel_with(
-    spec: &KernelSpec,
-    cfg: &ExperimentConfig,
-    division: Option<(usize, usize)>,
-) -> anyhow::Result<KernelResult> {
-    super::session::shared_session(cfg).run_with(spec, division)
 }
 
 #[cfg(test)]
@@ -191,16 +166,13 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_delegate_to_session() {
-        // The compat surface must produce bit-identical results to the
-        // session path until it is removed.
+    fn from_config_matches_builder_defaults() {
         let cfg = ExperimentConfig::default();
         let s = spec(KernelKind::Fft, 512, 8192);
-        let legacy = run_kernel(&s, &cfg).unwrap();
-        let modern = Session::from_config(&cfg).run(&s).unwrap();
-        assert_eq!(legacy.cycles, modern.cycles);
-        assert_eq!(legacy.energy_j, modern.energy_j);
-        assert_eq!(legacy.util, modern.util);
+        let a = Session::from_config(&cfg).run(&s).unwrap();
+        let b = Session::builder().build().run(&s).unwrap();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.util, b.util);
     }
 }

@@ -25,10 +25,11 @@
 //! shared per-arch sessions, and per-class latency/energy/area Pareto
 //! frontiers (`Report::Pareto`, `bfdf autotune`).
 //!
-//! The historical one-shot free functions ([`run_kernel`],
-//! [`run_kernel_with`], [`stream_workload`]) are deprecated wrappers
-//! routed through a process-wide pool of shared sessions (one per
-//! configuration signature).
+//! *How* a kernel is lowered — division, mapping, packing — is the
+//! session's [`crate::dfg::strategy::DataflowStrategy`]
+//! (`Session::builder().strategy(..)`, default the paper's recipe;
+//! `Strategy::Auto` simulates the registered strategies per kernel
+//! shape and memoizes the winner).
 
 pub mod autotune;
 pub mod experiment;
@@ -50,8 +51,3 @@ pub use report::{Report, SweepRow};
 pub use serve::{Arrival, ClassServeStats, ServeConfig, ServeResult, Traffic};
 pub use session::{CacheStats, Session, SessionBuilder};
 pub use streaming::StreamResult;
-
-#[allow(deprecated)]
-pub use experiment::{run_kernel, run_kernel_with};
-#[allow(deprecated)]
-pub use streaming::stream_workload;

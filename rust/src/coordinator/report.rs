@@ -28,6 +28,7 @@
 //! `StreamResult`/`NetworkResult` field names.
 
 use crate::arch::UnitKind;
+use crate::dfg::strategy::Strategy;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::autotune::AutotuneResult;
@@ -60,12 +61,18 @@ pub enum Report {
         arch: String,
         /// Workload suite name (or an ad-hoc description).
         workload: String,
+        /// Dataflow strategy the session lowered with.  Serialized only
+        /// when it departs from [`Strategy::Paper`], so default-strategy
+        /// artifacts stay byte-identical to prior releases.
+        strategy: Strategy,
         cache: CacheStats,
         result: StreamResult,
     },
     /// A hybrid network executed end-to-end with per-layer metrics.
     Network {
         arch: String,
+        /// Dataflow strategy (see [`Report::Stream::strategy`]).
+        strategy: Strategy,
         cache: CacheStats,
         result: NetworkResult,
     },
@@ -99,19 +106,28 @@ impl Report {
                 ("arch", s(arch)),
                 ("result", kernel_json(result)),
             ]),
-            Report::Stream { arch, workload, cache, result } => obj(vec![
-                ("report", s("stream")),
-                ("arch", s(arch)),
-                ("workload", s(workload)),
-                ("cache", cache_json(cache)),
-                ("result", stream_json(result)),
-            ]),
-            Report::Network { arch, cache, result } => obj(vec![
-                ("report", s("network")),
-                ("arch", s(arch)),
-                ("cache", cache_json(cache)),
-                ("result", network_json(result)),
-            ]),
+            Report::Stream { arch, workload, strategy, cache, result } => {
+                let mut pairs = vec![
+                    ("report", s("stream")),
+                    ("arch", s(arch)),
+                    ("workload", s(workload)),
+                ];
+                if *strategy != Strategy::Paper {
+                    pairs.push(("strategy", s(strategy.name())));
+                }
+                pairs.push(("cache", cache_json(cache)));
+                pairs.push(("result", stream_json(result)));
+                obj(pairs)
+            }
+            Report::Network { arch, strategy, cache, result } => {
+                let mut pairs = vec![("report", s("network")), ("arch", s(arch))];
+                if *strategy != Strategy::Paper {
+                    pairs.push(("strategy", s(strategy.name())));
+                }
+                pairs.push(("cache", cache_json(cache)));
+                pairs.push(("result", network_json(result)));
+                obj(pairs)
+            }
             Report::Sweep { arch, kernel, rows } => obj(vec![
                 ("report", s("sweep")),
                 ("arch", s(arch)),
@@ -302,11 +318,27 @@ mod tests {
         let report = Report::Stream {
             arch: session.arch_signature().to_string(),
             workload: "test".into(),
+            strategy: session.strategy(),
             cache: session.cache_stats(),
             result,
         };
         let parsed = json::parse(&report.render()).unwrap();
         assert_eq!(parsed.req_str("report").unwrap(), "stream");
+        // The default strategy stays out of the stable layout; a
+        // non-default one is serialized by name.
+        assert!(parsed.get("strategy").is_none());
+        let Report::Stream { arch, workload, cache, result, .. } = report else {
+            unreachable!()
+        };
+        let tagged = Report::Stream {
+            arch,
+            workload,
+            strategy: Strategy::SpmAdaptive,
+            cache,
+            result,
+        };
+        let parsed2 = json::parse(&tagged.render()).unwrap();
+        assert_eq!(parsed2.req_str("strategy").unwrap(), "spm-adaptive");
         let result = parsed.req("result").unwrap();
         let kernels = result.get("kernels").unwrap();
         assert_eq!(kernels.as_arr().unwrap().len(), 2);
@@ -340,11 +372,13 @@ mod tests {
         let result = session.run_network(&model, None).unwrap();
         let report = Report::Network {
             arch: session.arch_signature().to_string(),
+            strategy: session.strategy(),
             cache: session.cache_stats(),
             result,
         };
         let parsed = json::parse(&report.render()).unwrap();
         assert_eq!(parsed.req_str("report").unwrap(), "network");
+        assert!(parsed.get("strategy").is_none());
         let r = parsed.req("result").unwrap();
         assert_eq!(r.req_str("spec").unwrap(), "att:fft2d;att:dense,ffn:bpmm*x2");
         assert!(r.req_f64("latency_ms").unwrap() > 0.0);

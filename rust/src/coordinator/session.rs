@@ -33,22 +33,24 @@
 //! # let _ = report;
 //! ```
 //!
-//! The one-shot free functions (`run_kernel`, `run_kernel_with`,
-//! `stream_workload`) survive as `#[deprecated]` wrappers routed
-//! through a process-wide pool of shared sessions (one per
-//! configuration signature), so even legacy call sites reuse plan
-//! caches across calls.
+//! How a kernel is divided, mapped and scheduled is delegated to a
+//! [`DataflowStrategy`] (default: the paper's recipe).  A session built
+//! with [`Strategy::Auto`] simulates every registered strategy through
+//! the plan cache the first time it meets a (kind, points, vectors,
+//! division) block and memoizes the winner, so repeated blocks pay the
+//! probe cost once.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::arch::ArchConfig;
 use crate::dfg::graph::KernelKind;
-use crate::dfg::microcode::lower_stage_packed;
-use crate::dfg::stages::{plan_kernel, KernelPlan, StageDfg};
+use crate::dfg::microcode::lower_stage_mapped;
+use crate::dfg::stages::{KernelPlan, StageDfg};
+use crate::dfg::strategy::{self, DataflowStrategy, Strategy};
 use crate::energy;
 use crate::sim::{simulate_in, SimOptions, SimStats, SimWorkspace};
 use crate::workloads::spec::ModelSpec;
@@ -59,34 +61,19 @@ use super::network::{self, NetworkResult};
 use super::pipeline::{self, Overlap, PipelineConfig, StageCost};
 use super::streaming::{self, StreamResult};
 
-/// Packing target: keep at least this many butterfly nodes per PE per
-/// layer so fixed block overheads stay amortized (§V-A streaming).
-const TARGET_NODES_PER_PE: usize = 8;
-
-/// The per-stage simulation schedule [`Session`] applies: shallow stage
-/// DFGs (few nodes per PE) pack several independent instances per
-/// iteration so block issue overheads amortize (§V-A streaming), the
-/// total iteration count covers `vectors × sub_iters` instances, and
-/// the simulated window is capped at `window_cap` (extrapolated beyond
-/// it).  Returns `(iters_total, window, pack)`.
-///
-/// This is the single source of truth — `Session::execute` calls it per
-/// stage, and the golden suite (`rust/tests/sim_golden.rs`) calls it to
-/// diff exactly the programs the coordinator simulates.
+/// The per-stage simulation schedule of the *paper* strategy: the
+/// canonical implementation lives in
+/// [`crate::dfg::strategy::paper_schedule`] (the [`DataflowStrategy`]
+/// trait's default); this wrapper survives because the golden suite
+/// (`rust/tests/sim_golden.rs`) calls it to diff exactly the programs
+/// the default-strategy coordinator simulates.
 pub fn stage_schedule(
     stage: &StageDfg,
     vectors: usize,
     arch: &ArchConfig,
     window_cap: usize,
 ) -> (usize, usize, usize) {
-    let w = arch.simd_width;
-    let instances = vectors.saturating_mul(stage.sub_iters);
-    let base_npe = (stage.points / 2).div_ceil(arch.num_pes()).max(1);
-    let pack =
-        (TARGET_NODES_PER_PE / base_npe).clamp(1, instances.div_ceil(w).max(1));
-    let iters_total = instances.div_ceil(w * pack).max(1);
-    let window = iters_total.min(window_cap.max(1));
-    (iters_total, window, pack)
+    strategy::paper_schedule(stage, vectors, arch, window_cap)
 }
 
 /// Builder for [`Session`].
@@ -102,6 +89,7 @@ pub struct SessionBuilder {
     division: Option<(usize, usize)>,
     caching: bool,
     pipeline: PipelineConfig,
+    strategy: Strategy,
 }
 
 impl SessionBuilder {
@@ -113,6 +101,7 @@ impl SessionBuilder {
             division: None,
             caching: true,
             pipeline: PipelineConfig::default(),
+            strategy: Strategy::Paper,
         }
     }
 
@@ -170,6 +159,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Dataflow strategy the session lowers with (default
+    /// [`Strategy::Paper`], the bit-exact pre-refactor recipe;
+    /// [`Strategy::Auto`] simulates every registered strategy per kernel
+    /// shape through the plan cache and memoizes the fastest).
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
     /// Start from an existing [`ExperimentConfig`].
     pub fn config(mut self, cfg: &ExperimentConfig) -> Self {
         self.arch = cfg.arch.clone();
@@ -185,11 +183,13 @@ impl SessionBuilder {
             division: self.division,
             caching: self.caching,
             pipeline: self.pipeline,
+            strategy: self.strategy,
             cache: PlanCache {
                 arch_sig,
                 plans: Mutex::new(HashMap::new()),
                 stages: Mutex::new(HashMap::new()),
             },
+            auto_winners: Mutex::new(HashMap::new()),
             counters: Counters::default(),
             workspaces: Mutex::new(Vec::new()),
         }
@@ -204,20 +204,28 @@ impl Default for SessionBuilder {
 
 /// Key of a cached kernel plan: the stage decomposition depends only on
 /// the kernel kind, the transform length, the (optional) explicit
-/// division and the architecture — never on the vector count, which is
-/// re-attached per kernel.
+/// division, the *strategy* that planned it and the architecture —
+/// never on the vector count, which is re-attached per kernel.  The
+/// strategy id is load-bearing: under [`Strategy::Auto`] one session
+/// probes several strategies for the same kernel shape, and a cache hit
+/// across strategies would silently replay the wrong division.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct PlanKey {
     kind: KernelKind,
     points: usize,
     division: Option<(usize, usize)>,
+    strategy: &'static str,
 }
 
-/// Key of a cached stage measurement.  [`lower_stage_packed`] reads the
+/// Key of a cached stage measurement.  [`lower_stage_mapped`] reads the
 /// stage's `{kind, points, twiddle_before, weights_from_ddr}` plus the
-/// window and pack factors; the architecture and simulator options are
-/// session-constant (pinned by [`PlanCache::arch_sig`]), so together
-/// these fields fully determine the lowered program and its simulation.
+/// window and pack factors and the strategy's mapping; the architecture
+/// and simulator options are session-constant (pinned by
+/// [`PlanCache::arch_sig`]), so together these fields fully determine
+/// the lowered program and its simulation.  Keying on the *mapping id*
+/// rather than the strategy name is deliberate: strategies that differ
+/// only in division or packing still share structurally identical stage
+/// measurements (an `Auto` probe is then nearly free on overlap).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct StageKey {
     kind: KernelKind,
@@ -226,6 +234,18 @@ struct StageKey {
     weights_from_ddr: bool,
     window: usize,
     pack: usize,
+    mapping: &'static str,
+}
+
+/// Memo key of an [`Strategy::Auto`] winner: the probe result holds for
+/// every kernel with the same shape (kind, points, vectors, explicit
+/// division) under this session's fixed architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct AutoKey {
+    kind: KernelKind,
+    points: usize,
+    vectors: usize,
+    division: Option<(usize, usize)>,
 }
 
 /// One simulated stage measurement (shared across kernels via `Arc`).
@@ -272,7 +292,7 @@ pub struct CacheStats {
     /// Stage-window simulations served from / inserted into the cache.
     pub stage_hits: u64,
     pub stage_misses: u64,
-    /// Total `lower_stage_packed` invocations (equals `stage_misses`
+    /// Total stage lowerings (equals `stage_misses`
     /// when caching is on; counts every stage when off).
     pub lowerings: u64,
 }
@@ -287,7 +307,10 @@ pub struct Session {
     division: Option<(usize, usize)>,
     caching: bool,
     pipeline: PipelineConfig,
+    strategy: Strategy,
     cache: PlanCache,
+    /// [`Strategy::Auto`] winners per kernel shape (registry indices).
+    auto_winners: Mutex<HashMap<AutoKey, usize>>,
     counters: Counters,
     /// Pool of simulator scratch arenas: each lowering/simulation
     /// checks one out (or starts a fresh one under `run_many`
@@ -302,7 +325,7 @@ impl Session {
         SessionBuilder::new()
     }
 
-    /// One-shot session equivalent to the deprecated free functions.
+    /// Session with defaults taken from an [`ExperimentConfig`].
     pub fn from_config(cfg: &ExperimentConfig) -> Session {
         Session::builder().config(cfg).build()
     }
@@ -323,6 +346,29 @@ impl Session {
         &self.cache.arch_sig
     }
 
+    /// The dataflow strategy this session lowers with.
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// The [`Strategy::Auto`] picks made so far, as
+    /// `((kind name, points, vectors), winning strategy name)` pairs
+    /// sorted by shape — deterministic, so CLI lines and bench
+    /// artifacts that print them reproduce byte-for-byte (empty unless
+    /// the session runs `Auto`).
+    pub fn auto_selections(&self) -> Vec<((&'static str, usize, usize), &'static str)> {
+        let reg = strategy::registry();
+        let mut picks: Vec<_> = self
+            .auto_winners
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &i)| ((k.kind.name(), k.points, k.vectors), reg[i].name()))
+            .collect();
+        picks.sort_unstable();
+        picks
+    }
+
     /// Snapshot of the cache counters.
     pub fn cache_stats(&self) -> CacheStats {
         CacheStats {
@@ -340,14 +386,64 @@ impl Session {
     }
 
     /// Run one kernel with an explicit stage division (the Fig. 14
-    /// sweep path); `None` picks the balanced division.
+    /// sweep path); `None` lets the session's strategy choose.
     pub fn run_with(
         &self,
         spec: &KernelSpec,
         division: Option<(usize, usize)>,
     ) -> Result<KernelResult> {
-        let plan = self.plan_for(spec, division)?;
-        self.execute(spec, &plan)
+        match self.strategy.implementation() {
+            Some(strat) => self.run_strategy(spec, division, strat),
+            None => self.run_auto(spec, division),
+        }
+    }
+
+    /// Plan and execute one kernel under a specific concrete strategy.
+    fn run_strategy(
+        &self,
+        spec: &KernelSpec,
+        division: Option<(usize, usize)>,
+        strat: &'static dyn DataflowStrategy,
+    ) -> Result<KernelResult> {
+        let plan = self.plan_for(spec, division, strat)?;
+        self.execute(spec, &plan, strat)
+    }
+
+    /// [`Strategy::Auto`]: simulate every registered strategy for this
+    /// kernel shape through the plan cache, return the fastest result
+    /// and memoize the winner (ties resolve to the earliest registry
+    /// entry, i.e. the paper default).  Probe runs fill the same cache
+    /// cells the winner replays from, so the probes are pure overlap
+    /// whenever the shape recurs.
+    fn run_auto(
+        &self,
+        spec: &KernelSpec,
+        division: Option<(usize, usize)>,
+    ) -> Result<KernelResult> {
+        let key = AutoKey {
+            kind: spec.kind,
+            points: spec.points,
+            vectors: spec.vectors,
+            division,
+        };
+        let memoized = self.auto_winners.lock().unwrap().get(&key).copied();
+        if let Some(i) = memoized {
+            return self.run_strategy(spec, division, strategy::registry()[i]);
+        }
+        let mut best: Option<(usize, KernelResult)> = None;
+        for (i, strat) in strategy::registry().iter().enumerate() {
+            let r = self.run_strategy(spec, division, *strat)?;
+            let better = match &best {
+                None => true,
+                Some((_, b)) => r.time_s < b.time_s,
+            };
+            if better {
+                best = Some((i, r));
+            }
+        }
+        let (winner, result) = best.expect("strategy registry is never empty");
+        self.auto_winners.lock().unwrap().insert(key, winner);
+        Ok(result)
     }
 
     /// Run independent kernels across std threads and return results in
@@ -506,16 +602,23 @@ impl Session {
         ))
     }
 
-    /// Plan (or recall) the stage decomposition of one kernel.
+    /// Plan (or recall) the stage decomposition of one kernel under one
+    /// concrete strategy.
     fn plan_for(
         &self,
         spec: &KernelSpec,
         division: Option<(usize, usize)>,
+        strat: &'static dyn DataflowStrategy,
     ) -> Result<KernelPlan> {
         if !self.caching {
-            return plan_kernel(spec.kind, spec.points, spec.vectors, &self.cfg.arch, division);
+            return strat.plan(spec.kind, spec.points, spec.vectors, &self.cfg.arch, division);
         }
-        let key = PlanKey { kind: spec.kind, points: spec.points, division };
+        let key = PlanKey {
+            kind: spec.kind,
+            points: spec.points,
+            division,
+            strategy: strat.name(),
+        };
         let cell = {
             let mut map = self.cache.plans.lock().unwrap();
             map.entry(key).or_default().clone()
@@ -535,7 +638,7 @@ impl Session {
         }
         self.counters.plan_misses.fetch_add(1, Ordering::Relaxed);
         let plan =
-            plan_kernel(spec.kind, spec.points, spec.vectors, &self.cfg.arch, division)?;
+            strat.plan(spec.kind, spec.points, spec.vectors, &self.cfg.arch, division)?;
         *slot = Some(Arc::new(plan.stages.clone()));
         Ok(plan)
     }
@@ -544,10 +647,17 @@ impl Session {
     /// [`StageKey`] is lowered exactly once per session, including under
     /// [`Session::run_many`] parallelism (the per-key cell coalesces
     /// concurrent misses).
-    fn measure_stage(&self, stage: &StageDfg, window: usize, pack: usize) -> Arc<StageMeasure> {
+    fn measure_stage(
+        &self,
+        stage: &StageDfg,
+        window: usize,
+        pack: usize,
+        strat: &'static dyn DataflowStrategy,
+    ) -> Arc<StageMeasure> {
         let lower = || {
             self.counters.lowerings.fetch_add(1, Ordering::Relaxed);
-            let program = lower_stage_packed(stage, &self.cfg.arch, window, pack);
+            let map = strat.mapping(stage.points, &self.cfg.arch);
+            let program = lower_stage_mapped(stage, &self.cfg.arch, window, pack, &map);
             // Check a scratch arena out of the pool (falling back to a
             // fresh one when all are in flight under run_many), run,
             // and return it warm for the next stage.
@@ -567,6 +677,7 @@ impl Session {
             weights_from_ddr: stage.weights_from_ddr,
             window,
             pack,
+            mapping: strat.mapping_id(),
         };
         let cell = {
             let mut map = self.cache.stages.lock().unwrap();
@@ -585,7 +696,12 @@ impl Session {
 
     /// The windowed-extrapolation experiment loop (see module docs in
     /// [`super::experiment`] for the software-pipelining argument).
-    fn execute(&self, spec: &KernelSpec, plan: &KernelPlan) -> Result<KernelResult> {
+    fn execute(
+        &self,
+        spec: &KernelSpec,
+        plan: &KernelPlan,
+        strat: &'static dyn DataflowStrategy,
+    ) -> Result<KernelResult> {
         let arch = &self.cfg.arch;
 
         let mut total_cycles = 0.0f64;
@@ -599,8 +715,8 @@ impl Session {
 
         for stage in &plan.stages {
             let (iters_total, window, pack) =
-                stage_schedule(stage, spec.vectors, arch, self.cfg.window);
-            let m = self.measure_stage(stage, window, pack);
+                strat.schedule(stage, spec.vectors, arch, self.cfg.window);
+            let m = self.measure_stage(stage, window, pack, strat);
             let stats = &m.stats;
             let scale = iters_total as f64 / window as f64;
             let stage_cycles = if iters_total > window {
@@ -694,26 +810,6 @@ impl Session {
     }
 }
 
-/// Process-wide session pool backing the deprecated one-shot wrappers
-/// (`run_kernel`, `run_kernel_with`, `stream_workload`): one lazily
-/// initialized [`Session`] per distinct configuration signature, so
-/// legacy call sites share plan caches across calls instead of building
-/// and discarding a fresh session — and cache — every time.
-pub(crate) fn shared_session(cfg: &ExperimentConfig) -> Arc<Session> {
-    static POOL: OnceLock<Mutex<HashMap<String, Arc<Session>>>> = OnceLock::new();
-    let pool = POOL.get_or_init(|| Mutex::new(HashMap::new()));
-    // Building a session is cheap (empty caches); the signature it
-    // derives is the pool key, so key and configuration can never
-    // disagree.  On a pool hit the fresh instance is simply dropped.
-    let fresh = Session::from_config(cfg);
-    let key = fresh.arch_signature().to_string();
-    pool.lock()
-        .unwrap()
-        .entry(key)
-        .or_insert_with(|| Arc::new(fresh))
-        .clone()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -771,17 +867,72 @@ mod tests {
     }
 
     #[test]
-    fn shared_session_pool_reuses_per_config() {
-        let cfg = ExperimentConfig::default();
-        let a = shared_session(&cfg);
-        let b = shared_session(&cfg);
-        assert!(Arc::ptr_eq(&a, &b), "same config must share one session");
-        let other = ExperimentConfig { window: 96, ..Default::default() };
-        let c = shared_session(&other);
-        assert!(
-            !Arc::ptr_eq(&a, &c),
-            "distinct configs must get distinct sessions"
-        );
+    fn strategies_never_share_plan_cache_cells() {
+        // Same session, same kernel, two strategies: the plan cache must
+        // key on the strategy id, so the second strategy's plan is a
+        // *miss* (a cross-strategy hit would hand SpmAdaptive the paper
+        // plan — a correctness bug, not a perf bug).
+        let session = Session::builder().strategy(Strategy::Paper).build();
+        let s = spec(KernelKind::Bpmm, 1024, 8192);
+        let paper = session.run(&s).unwrap();
+        let misses_after_paper = session.cache_stats().plan_misses;
+        assert_eq!(misses_after_paper, 1);
+
+        let adaptive = Session::builder().strategy(Strategy::SpmAdaptive).build();
+        let alt = adaptive.run(&s).unwrap();
+        assert_eq!(adaptive.cache_stats().plan_misses, 1);
+        // Distinct strategies may legitimately produce distinct results;
+        // what must never happen is the adaptive run *reusing* the paper
+        // plan cell.  Probe via a mixed-strategy Auto session below.
+        let _ = (paper, alt);
+
+        let auto = Session::builder().strategy(Strategy::Auto).build();
+        let first = auto.run(&s).unwrap();
+        // Auto probed every registered strategy: one plan miss per
+        // registry entry, never a shared cell.
+        let n = strategy::registry().len();
+        assert_eq!(auto.cache_stats().plan_misses, n as u64);
+        // Re-running the same kernel reuses the memoized winner through
+        // the cache the probes populated: no new plan misses.
+        let second = auto.run(&s).unwrap();
+        assert_eq!(auto.cache_stats().plan_misses, n as u64);
+        assert!(auto.cache_stats().plan_hits >= 1);
+        assert_eq!(first.cycles, second.cycles);
+    }
+
+    #[test]
+    fn auto_never_picks_worse_than_paper() {
+        let auto = Session::builder().strategy(Strategy::Auto).build();
+        let paper = Session::builder().build();
+        for (kind, points) in [
+            (KernelKind::Fft, 256),
+            (KernelKind::Fft, 1024),
+            (KernelKind::Bpmm, 512),
+            (KernelKind::Bpmm, 2048),
+        ] {
+            let s = spec(kind, points, 8192);
+            let a = auto.run(&s).unwrap();
+            let p = paper.run(&s).unwrap();
+            assert!(
+                a.time_s <= p.time_s,
+                "auto picked a slower strategy for {}-{points}: {} > {}",
+                kind.name(),
+                a.time_s,
+                p.time_s
+            );
+        }
+        assert!(!auto.auto_selections().is_empty());
+    }
+
+    #[test]
+    fn explicit_strategy_sessions_run_all_registered() {
+        let s = spec(KernelKind::Fft, 512, 4096);
+        for sel in Strategy::ALL {
+            let session = Session::builder().strategy(sel).build();
+            let r = session.run(&s).unwrap();
+            assert!(r.cycles > 0.0, "{} produced zero cycles", sel.name());
+            assert_eq!(session.strategy(), sel);
+        }
     }
 
     #[test]

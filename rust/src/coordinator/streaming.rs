@@ -32,13 +32,9 @@
 //! `bfdf run|stream --overlap {none,dma,pipeline} --arrays N`.  The
 //! library default (`Overlap::None`, one array) reproduces the legacy
 //! serial accounting bit-for-bit; the CLI defaults to the
-//! paper-faithful `--overlap pipeline`.  [`stream_workload`] remains as
-//! a deprecated wrapper over a process-wide shared session (serial
-//! mode).
+//! paper-faithful `--overlap pipeline`.
 
-use crate::workloads::KernelSpec;
-
-use super::experiment::{ExperimentConfig, KernelResult};
+use super::experiment::KernelResult;
 use super::pipeline::Overlap;
 
 /// End-to-end streaming result.
@@ -101,29 +97,13 @@ pub(crate) fn per_prediction_metrics(
     (latency_ms, throughput, power_w, energy_eff)
 }
 
-/// Stream a batched workload through the design.
-///
-/// Errors on `batch == 0` (the per-prediction metrics divide by it).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a `coordinator::Session` and call `stream` instead — \
-            sessions reuse lowered programs across kernels and runs"
-)]
-pub fn stream_workload(
-    kernels: &[KernelSpec],
-    batch: usize,
-    cfg: &ExperimentConfig,
-) -> anyhow::Result<StreamResult> {
-    super::session::shared_session(cfg).stream(kernels, batch)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::ArchConfig;
     use crate::coordinator::pipeline::{Overlap, PipelineConfig};
     use crate::coordinator::Session;
-    use crate::workloads::find_suite;
+    use crate::workloads::{find_suite, KernelSpec};
 
     fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
         find_suite("vanilla").unwrap().kernels_at(Some(batch))
@@ -213,13 +193,4 @@ mod tests {
         assert!(pipe4 < pipe, "4 arrays {pipe4} !< 1 array {pipe}");
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_stream_wrapper_matches_session() {
-        let cfg = ExperimentConfig { arch: ArchConfig::table4(), ..Default::default() };
-        let legacy = stream_workload(&vanilla_kernels(8), 8, &cfg).unwrap();
-        let modern = Session::from_config(&cfg).stream(&vanilla_kernels(8), 8).unwrap();
-        assert_eq!(legacy.latency_ms, modern.latency_ms);
-        assert_eq!(legacy.power_w, modern.power_w);
-    }
 }

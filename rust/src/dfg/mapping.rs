@@ -18,7 +18,11 @@ use super::butterfly::swap_distance;
 use super::graph::Dfg;
 
 /// A mapping of one DFG onto the PE array.
-#[derive(Debug, Clone)]
+///
+/// Which mapping a lowering uses is a [`crate::dfg::strategy::DataflowStrategy`]
+/// decision (`DataflowStrategy::mapping`); the paper's recipe is
+/// [`Mapping::for_points`].
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Mapping {
     /// Number of PEs.
     pub num_pes: usize,

@@ -264,15 +264,30 @@ pub fn lower_stage_packed(
     iters: usize,
     pack: usize,
 ) -> Program {
+    // The butterfly DFG's layers are uniformly n/2 nodes wide, so the
+    // round-robin mapping is derivable without materializing the graph
+    // (`for_points` == `round_robin(build_butterfly_dfg(..))`, tested).
+    let map = Mapping::for_points(stage.points, arch);
+    lower_stage_mapped(stage, arch, iters, pack, &map)
+}
+
+/// Like [`lower_stage_packed`] but with the node→PE assignment supplied
+/// by the caller instead of derived internally — the lowering a
+/// [`crate::dfg::strategy::DataflowStrategy`] drives when it owns the
+/// mapping decision.  `map` must describe a `stage.points`-point DFG on
+/// this architecture (`map.num_pes == arch.num_pes()`).
+pub fn lower_stage_mapped(
+    stage: &StageDfg,
+    arch: &ArchConfig,
+    iters: usize,
+    pack: usize,
+    map: &Mapping,
+) -> Program {
     let pack = pack.max(1) as u64;
     let n = stage.points;
     let s = log2_int(n);
     let kind = stage.kind;
     let planes = kind.planes() as u64;
-    // The butterfly DFG's layers are uniformly n/2 nodes wide, so the
-    // round-robin mapping is derivable without materializing the graph
-    // (`for_points` == `round_robin(build_butterfly_dfg(..))`, tested).
-    let map = Mapping::for_points(n, arch);
     // Per-PE node counts, hoisted out of the (iter × layer × pe) loops.
     let nodes_per_pe = map.nodes_per_pe();
     let num_pes = arch.num_pes();

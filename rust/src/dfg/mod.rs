@@ -16,6 +16,11 @@
 //! * [`microcode`] — lowering to per-PE coarse-grained code blocks
 //!   {Load, Flow, Cal, Store} tagged with `{layer, iter}` priorities
 //!   (Fig. 8), ready for the cycle-level simulator.
+//! * [`strategy`] — the [`DataflowStrategy`] trait bundling the three
+//!   lowering decisions (division, mapping, slicing + schedule) behind
+//!   one pluggable interface: [`PaperStrategy`] is the verbatim paper
+//!   recipe, alternatives trade the same invariants differently, and
+//!   [`Strategy::Auto`] lets the coordinator simulate-and-pick.
 
 pub mod butterfly;
 pub mod graph;
@@ -23,8 +28,10 @@ pub mod mapping;
 pub mod microcode;
 pub mod slicing;
 pub mod stages;
+pub mod strategy;
 
 pub use graph::{Dfg, EdgeKind, KernelKind, Node, NodeId, NodeOp};
 pub use mapping::Mapping;
 pub use microcode::{Block, BlockId, ExecLayout, Program, ProgramMeta};
 pub use stages::{KernelPlan, StageDfg};
+pub use strategy::{DataflowStrategy, PaperStrategy, SpmAdaptiveStrategy, Strategy};

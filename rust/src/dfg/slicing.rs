@@ -22,7 +22,12 @@ pub enum Combine {
 }
 
 /// A slicing plan for one BPMM linear layer.
-#[derive(Debug, Clone)]
+///
+/// Slicing is one of the three lowering decisions a
+/// [`crate::dfg::strategy::DataflowStrategy`] owns
+/// (`DataflowStrategy::slice`); every current strategy delegates to
+/// [`SlicePlan::new`], but the trait hook keeps the contract explicit.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SlicePlan {
     pub d_in: usize,
     pub d_out: usize,

@@ -18,7 +18,7 @@ use super::graph::KernelKind;
 
 /// One stage of a kernel plan: a single-DFG butterfly of `points`,
 /// executed `sub_iters` times per logical vector.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageDfg {
     pub kind: KernelKind,
     pub points: usize,
@@ -34,7 +34,7 @@ pub struct StageDfg {
 }
 
 /// A full execution plan for one kernel invocation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct KernelPlan {
     pub kind: KernelKind,
     /// Total transform length.

@@ -1,0 +1,484 @@
+//! Pluggable dataflow strategies (ROADMAP item 5, Flexagon-style).
+//!
+//! The paper fixes one lowering recipe: balanced Cooley-Tukey division
+//! (Fig. 9), round-robin node→PE mapping (Fig. 7b/c), max/min BPMM
+//! weight slicing (Fig. 10) and a fixed 8-nodes-per-PE instance packing
+//! (§V-A streaming).  Flexagon's core observation (PAPERS.md) is that
+//! no single dataflow wins across sparse workloads — so those decisions
+//! live behind the [`DataflowStrategy`] trait:
+//!
+//! * [`PaperStrategy`] — the paper's recipe, extracted verbatim.  It is
+//!   the default everywhere and is golden-pinned bit-exact against the
+//!   pre-refactor lowering (`rust/tests/sim_golden.rs`).
+//! * [`SpmAdaptiveStrategy`] — SPM-capacity-adaptive: packs DFG
+//!   instances far deeper than the paper's fixed target (bounded so the
+//!   in-flight working set stays SPM-resident) to amortize per-block
+//!   issue overheads, and picks the r×c division by a static
+//!   occupancy/NoC cost model instead of always splitting balanced.
+//!
+//! [`Strategy`] is the user-facing selector ([`Strategy::Auto`] makes
+//! the coordinator simulate every registered concrete strategy per
+//! kernel through the plan cache and memoize the winner); the concrete
+//! implementations are enumerable via [`registry`].
+//!
+//! Contract for implementors: the *stage structure* returned by
+//! [`DataflowStrategy::plan`] must not depend on `vectors` — the
+//! coordinator's plan cache stores stage lists per `(kind, points,
+//! division, strategy)` and re-attaches `vectors` per kernel.  The
+//! schedule returned by [`DataflowStrategy::schedule`] must be a pure
+//! function of `(stage, vectors, arch, window_cap)` so stage
+//! measurements can be cached on `(stage, window, pack)`.
+
+use anyhow::{bail, Result};
+
+use crate::arch::ArchConfig;
+use crate::model::log2_int;
+
+use super::graph::KernelKind;
+use super::mapping::Mapping;
+use super::slicing::SlicePlan;
+use super::stages::{enumerate_divisions, max_points, plan_kernel, KernelPlan, StageDfg};
+
+/// The paper's packing target: keep at least this many butterfly nodes
+/// per PE per layer so fixed block overheads stay amortized (§V-A
+/// streaming).  Moved here from `coordinator::session`; the session's
+/// `stage_schedule` delegates to [`paper_schedule`].
+pub const TARGET_NODES_PER_PE: usize = 8;
+
+/// The verbatim pre-refactor per-stage simulation schedule: shallow
+/// stage DFGs (few nodes per PE) pack several independent instances per
+/// iteration so block issue overheads amortize, the total iteration
+/// count covers `vectors × sub_iters` instances, and the simulated
+/// window is capped at `window_cap` (extrapolated beyond it).  Returns
+/// `(iters_total, window, pack)`.
+pub fn paper_schedule(
+    stage: &StageDfg,
+    vectors: usize,
+    arch: &ArchConfig,
+    window_cap: usize,
+) -> (usize, usize, usize) {
+    let w = arch.simd_width;
+    let instances = vectors.saturating_mul(stage.sub_iters);
+    let base_npe = (stage.points / 2).div_ceil(arch.num_pes()).max(1);
+    let pack =
+        (TARGET_NODES_PER_PE / base_npe).clamp(1, instances.div_ceil(w).max(1));
+    let iters_total = instances.div_ceil(w * pack).max(1);
+    let window = iters_total.min(window_cap.max(1));
+    (iters_total, window, pack)
+}
+
+/// One complete lowering policy: the three decisions of the paper's
+/// compiler (division planning, node→PE mapping, BPMM weight slicing)
+/// plus the per-stage simulation schedule built on top of them.
+///
+/// Every method defaults to the paper's behavior, so [`PaperStrategy`]
+/// is the empty impl and alternative strategies override only the
+/// decisions they change.
+pub trait DataflowStrategy: Send + Sync {
+    /// Registry name (also the CLI `--strategy` value and the plan-cache
+    /// discriminator — must be unique across registered strategies).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `bfdf strategies`.
+    fn describe(&self) -> &'static str;
+
+    /// Division planning (Fig. 9): decompose an `n`-point kernel into
+    /// single-DFG stages.  An explicit `division` override (the Fig. 14
+    /// sweep, `Session::run_with`) always wins over the strategy's own
+    /// choice.  The stage structure must not depend on `vectors` (see
+    /// module docs).
+    fn plan(
+        &self,
+        kind: KernelKind,
+        n: usize,
+        vectors: usize,
+        arch: &ArchConfig,
+        division: Option<(usize, usize)>,
+    ) -> Result<KernelPlan> {
+        plan_kernel(kind, n, vectors, arch, division)
+    }
+
+    /// Node→PE mapping (Fig. 7b/c) for one stage DFG of `points`.
+    /// Implementations must keep `Mapping::num_pes == arch.num_pes()`.
+    fn mapping(&self, points: usize, arch: &ArchConfig) -> Mapping {
+        Mapping::for_points(points, arch)
+    }
+
+    /// Cache discriminator for [`DataflowStrategy::mapping`]: stage
+    /// measurements are shared across strategies whose mapping ids (and
+    /// schedules) agree, so a strategy that overrides `mapping` must
+    /// return a distinct id here.
+    fn mapping_id(&self) -> &'static str {
+        "round-robin"
+    }
+
+    /// BPMM weight slicing (Fig. 10) for a `d_in → d_out` linear layer.
+    fn slice(&self, d_in: usize, d_out: usize) -> Result<SlicePlan> {
+        SlicePlan::new(d_in, d_out)
+    }
+
+    /// Per-stage simulation schedule `(iters_total, window, pack)`; see
+    /// [`paper_schedule`].  Must be deterministic in its inputs.
+    fn schedule(
+        &self,
+        stage: &StageDfg,
+        vectors: usize,
+        arch: &ArchConfig,
+        window_cap: usize,
+    ) -> (usize, usize, usize) {
+        paper_schedule(stage, vectors, arch, window_cap)
+    }
+}
+
+/// The paper's lowering recipe, verbatim: balanced division, round-robin
+/// mapping, max/min slicing, 8-nodes-per-PE packing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PaperStrategy;
+
+impl DataflowStrategy for PaperStrategy {
+    fn name(&self) -> &'static str {
+        "paper"
+    }
+
+    fn describe(&self) -> &'static str {
+        "the paper's recipe: balanced Fig. 9 division, round-robin mapping, \
+         8-nodes/PE packing (bit-exact default)"
+    }
+}
+
+/// SPM-capacity-adaptive strategy.
+///
+/// Two deliberate departures from the paper:
+///
+/// * **Deep packing** — instances are packed to
+///   [`SpmAdaptiveStrategy::DEEP_NODES_PER_PE`] nodes per PE per layer
+///   (4× the paper's target) so the fixed per-block issue overhead
+///   (`ArchConfig::block_issue_overhead`) and per-access latencies
+///   amortize over fatter blocks, bounded so `inflight_iters`
+///   iterations of in+out vector slices stay resident in half the SPM.
+/// * **Cost-modeled division** — instead of always taking the balanced
+///   split, every `r × c` candidate (Fig. 14 space) is scored by a
+///   static per-vector proxy of serialized unit time (PE occupancy,
+///   NoC flow payload, SPM traffic) and the cheapest wins.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpmAdaptiveStrategy;
+
+impl SpmAdaptiveStrategy {
+    /// Deep packing target (nodes per PE per layer).
+    pub const DEEP_NODES_PER_PE: usize = 32;
+
+    /// Static per-vector cost proxy of one plan: for each stage,
+    /// `sub_iters × (serialized CAL slots + NoC flow payload + SPM
+    /// load/store scalars)` per worst-loaded PE.  Integer and
+    /// deterministic; used only to rank divisions.
+    pub fn division_cost(plan: &KernelPlan, arch: &ArchConfig) -> u64 {
+        let pes = arch.num_pes().max(1);
+        plan.stages
+            .iter()
+            .map(|s| {
+                let depth = log2_int(s.points);
+                let nppe = ((s.points / 2).div_ceil(pes)).max(1) as u64;
+                let planes = plan.kind.planes() as u64;
+                // Butterfly layers whose swap distance stays under the
+                // PE count travel the NoC; the rest wrap back locally.
+                let remote = (0..depth.saturating_sub(1))
+                    .filter(|k| (1usize << k) < pes)
+                    .count() as u64;
+                let cal = nppe * depth as u64 * plan.kind.ops_per_node();
+                let flow = nppe * planes * remote;
+                let io = 2 * 2 * nppe * planes;
+                s.sub_iters as u64 * (cal + flow + io)
+            })
+            .sum()
+    }
+}
+
+impl DataflowStrategy for SpmAdaptiveStrategy {
+    fn name(&self) -> &'static str {
+        "spm-adaptive"
+    }
+
+    fn describe(&self) -> &'static str {
+        "SPM-capacity-adaptive: deep instance packing bounded by SPM \
+         residency, division picked by a static occupancy/NoC cost model"
+    }
+
+    fn plan(
+        &self,
+        kind: KernelKind,
+        n: usize,
+        vectors: usize,
+        arch: &ArchConfig,
+        division: Option<(usize, usize)>,
+    ) -> Result<KernelPlan> {
+        // Explicit overrides and single-stage kernels lower exactly as
+        // the paper does (degenerate inputs keep plan_kernel's errors).
+        if division.is_some() || !n.is_power_of_two() || n < 2 {
+            return plan_kernel(kind, n, vectors, arch, division);
+        }
+        let cap = max_points(kind, arch);
+        if n <= cap {
+            return plan_kernel(kind, n, vectors, arch, None);
+        }
+        let mut best = plan_kernel(kind, n, vectors, arch, None)?;
+        let mut best_cost = Self::division_cost(&best, arch);
+        // Candidate splits need at least 4 points per factor — 2-point
+        // stages collapse to one node per layer and starve the mesh.
+        for (r, c) in enumerate_divisions(n, 4, cap) {
+            let cand = plan_kernel(kind, n, vectors, arch, Some((r, c)))?;
+            let cost = Self::division_cost(&cand, arch);
+            if cost < best_cost {
+                best = cand;
+                best_cost = cost;
+            }
+        }
+        Ok(best)
+    }
+
+    fn schedule(
+        &self,
+        stage: &StageDfg,
+        vectors: usize,
+        arch: &ArchConfig,
+        window_cap: usize,
+    ) -> (usize, usize, usize) {
+        let w = arch.simd_width;
+        let instances = vectors.saturating_mul(stage.sub_iters);
+        let base_npe = (stage.points / 2).div_ceil(arch.num_pes()).max(1);
+        // SPM residency bound: `inflight_iters` in-flight iterations of
+        // in+out vector slices must fit in half the SPM (the other half
+        // holds weights/twiddles).
+        let iter_bytes = 2
+            * stage.points
+            * stage.kind.planes()
+            * w
+            * arch.elem_bytes
+            * arch.inflight_iters.max(1);
+        let spm_pack = ((arch.spm_bytes / 2) / iter_bytes.max(1)).max(1);
+        let pack = (Self::DEEP_NODES_PER_PE / base_npe)
+            .min(spm_pack)
+            .clamp(1, instances.div_ceil(w).max(1));
+        let iters_total = instances.div_ceil(w * pack).max(1);
+        let window = iters_total.min(window_cap.max(1));
+        (iters_total, window, pack)
+    }
+}
+
+/// The paper strategy as a shared static (registry entry 0).
+pub static PAPER: PaperStrategy = PaperStrategy;
+/// The SPM-adaptive strategy as a shared static (registry entry 1).
+pub static SPM_ADAPTIVE: SpmAdaptiveStrategy = SpmAdaptiveStrategy;
+
+/// All registered concrete strategies, in probe order — [`PAPER`] first,
+/// so `Strategy::Auto` ties resolve to the bit-exact default.
+pub fn registry() -> &'static [&'static dyn DataflowStrategy] {
+    static REGISTRY: [&dyn DataflowStrategy; 2] = [&PAPER, &SPM_ADAPTIVE];
+    &REGISTRY
+}
+
+/// User-facing strategy selector: a registered concrete strategy, or
+/// [`Strategy::Auto`] — the coordinator simulates every registry entry
+/// per `(kind, points, vectors, division)` kernel shape through the plan
+/// cache and memoizes the fastest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Strategy {
+    /// The paper's recipe ([`PaperStrategy`], the bit-exact default).
+    #[default]
+    Paper,
+    /// [`SpmAdaptiveStrategy`].
+    SpmAdaptive,
+    /// Simulate-and-pick across the registry.
+    Auto,
+}
+
+impl Strategy {
+    /// Every selectable strategy, concrete implementations first.
+    pub const ALL: [Strategy; 3] = [Strategy::Paper, Strategy::SpmAdaptive, Strategy::Auto];
+
+    /// Stable name (CLI value, cache/search-space token).
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Paper => "paper",
+            Strategy::SpmAdaptive => "spm-adaptive",
+            Strategy::Auto => "auto",
+        }
+    }
+
+    /// One-line description for `bfdf strategies`.
+    pub fn describe(self) -> &'static str {
+        match self {
+            Strategy::Paper => PAPER.describe(),
+            Strategy::SpmAdaptive => SPM_ADAPTIVE.describe(),
+            Strategy::Auto => {
+                "simulate every registered strategy per kernel shape through \
+                 the plan cache and pick the lowest-latency one"
+            }
+        }
+    }
+
+    /// Parse a CLI / search-space token.  Error message names the valid
+    /// tokens and is pinned by tests.
+    pub fn parse(s: &str) -> Result<Strategy> {
+        match s.trim() {
+            "paper" => Ok(Strategy::Paper),
+            "spm-adaptive" => Ok(Strategy::SpmAdaptive),
+            "auto" => Ok(Strategy::Auto),
+            other => bail!(
+                "unknown strategy '{other}' (available: paper, spm-adaptive, auto)"
+            ),
+        }
+    }
+
+    /// The concrete implementation, or `None` for [`Strategy::Auto`].
+    pub fn implementation(self) -> Option<&'static dyn DataflowStrategy> {
+        match self {
+            Strategy::Paper => Some(&PAPER),
+            Strategy::SpmAdaptive => Some(&SPM_ADAPTIVE),
+            Strategy::Auto => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_paper_first_with_unique_names() {
+        let reg = registry();
+        assert_eq!(reg[0].name(), "paper");
+        let mut names: Vec<_> = reg.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), reg.len(), "strategy names must be unique");
+    }
+
+    #[test]
+    fn selector_round_trips_and_rejects_unknown() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()).unwrap(), s);
+        }
+        assert_eq!(Strategy::default(), Strategy::Paper);
+        let err = Strategy::parse("tiled").unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "unknown strategy 'tiled' (available: paper, spm-adaptive, auto)"
+        );
+        assert!(Strategy::Auto.implementation().is_none());
+        assert_eq!(Strategy::Paper.implementation().unwrap().name(), "paper");
+    }
+
+    #[test]
+    fn paper_strategy_is_verbatim() {
+        let arch = ArchConfig::full();
+        for (kind, n) in [
+            (KernelKind::Bpmm, 1024),
+            (KernelKind::Fft, 512),
+            (KernelKind::Fft, 64 * 1024),
+            (KernelKind::Bpmm, 256),
+        ] {
+            let a = PAPER.plan(kind, n, 7, &arch, None).unwrap();
+            let b = plan_kernel(kind, n, 7, &arch, None).unwrap();
+            assert_eq!(a, b, "{kind:?} {n}");
+            for stage in &a.stages {
+                assert_eq!(
+                    PAPER.schedule(stage, 7, &arch, 48),
+                    paper_schedule(stage, 7, &arch, 48)
+                );
+            }
+        }
+        assert_eq!(PAPER.mapping(64, &arch), Mapping::for_points(64, &arch));
+        let s = PAPER.slice(1024, 256).unwrap();
+        assert_eq!((s.pieces, s.piece_points), (4, 256));
+    }
+
+    #[test]
+    fn all_strategies_conserve_depth_and_nodes() {
+        let arch = ArchConfig::full();
+        for strat in registry() {
+            for kind in [KernelKind::Bpmm, KernelKind::Fft] {
+                for exp in 1..=16 {
+                    let n = 1usize << exp;
+                    let p = strat.plan(kind, n, 3, &arch, None).unwrap();
+                    assert_eq!(
+                        p.total_depth(),
+                        exp,
+                        "{} {kind:?} {n}: depth",
+                        strat.name()
+                    );
+                    assert_eq!(
+                        p.nodes_per_vector(),
+                        n / 2 * exp,
+                        "{} {kind:?} {n}: nodes",
+                        strat.name()
+                    );
+                    assert_eq!(p.vectors, 3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spm_adaptive_packs_deeper_on_shallow_stages() {
+        let arch = ArchConfig::full();
+        let stage = StageDfg {
+            kind: KernelKind::Bpmm,
+            points: 32,
+            sub_iters: 32,
+            twiddle_before: false,
+            weights_from_ddr: false,
+        };
+        let (pi, pw, pp) = paper_schedule(&stage, 256, &arch, 48);
+        let (ai, aw, ap) = SPM_ADAPTIVE.schedule(&stage, 256, &arch, 48);
+        assert_eq!(pp, 8);
+        assert_eq!(ap, 32, "deep packing target on a 1-node/PE stage");
+        assert!(ai < pi, "deeper packs mean fewer iterations");
+        assert!(aw <= pw);
+        // Instance coverage is conserved: every schedule covers all
+        // vectors × sub_iters instances.
+        let w = arch.simd_width;
+        assert!(ai * w * ap >= 256 * 32);
+        assert!(pi * w * pp >= 256 * 32);
+    }
+
+    #[test]
+    fn spm_bound_caps_pack_on_fat_stages() {
+        // A 512-point FFT stage moves 512·2 planes·32 lanes·2 B ≈ 64 KiB
+        // per in+out pair per packed instance; with 4 in-flight
+        // iterations the SPM residency bound caps the pack.
+        let arch = ArchConfig::full();
+        let stage = StageDfg {
+            kind: KernelKind::Fft,
+            points: 256,
+            sub_iters: 256,
+            twiddle_before: false,
+            weights_from_ddr: false,
+        };
+        let (_, _, pack) = SPM_ADAPTIVE.schedule(&stage, 4096, &arch, 48);
+        let iter_bytes =
+            2 * 256 * 2 * arch.simd_width * arch.elem_bytes * arch.inflight_iters;
+        assert!(pack * iter_bytes <= arch.spm_bytes / 2);
+        assert!(pack >= 1);
+    }
+
+    #[test]
+    fn spm_adaptive_division_is_exact_and_scored() {
+        let arch = ArchConfig::full();
+        // 2048-point BPMM: candidates (16,128)..(128,16); whatever wins
+        // must be a valid exact factorization at full depth.
+        let p = SPM_ADAPTIVE.plan(KernelKind::Bpmm, 2048, 1, &arch, None).unwrap();
+        assert_eq!(p.total_depth(), 11);
+        assert_eq!(p.stages.iter().map(|s| s.points).product::<usize>(), 2048);
+        // The balanced split is among the candidates, so the winner can
+        // never score worse than it.
+        let balanced = plan_kernel(KernelKind::Bpmm, 2048, 1, &arch, None).unwrap();
+        assert!(
+            SpmAdaptiveStrategy::division_cost(&p, &arch)
+                <= SpmAdaptiveStrategy::division_cost(&balanced, &arch)
+        );
+        // Explicit division overrides the cost model.
+        let forced =
+            SPM_ADAPTIVE.plan(KernelKind::Bpmm, 2048, 1, &arch, Some((16, 128))).unwrap();
+        assert_eq!((forced.stages[0].points, forced.stages[1].points), (16, 128));
+    }
+}

@@ -18,7 +18,14 @@
 //! * [`dfg`] — the paper's compiler: multilayer butterfly DFG templates
 //!   (Fig. 5b/7), multi-stage Cooley-Tukey division (Fig. 9), BPMM weight
 //!   slicing (Fig. 10), PE-array mapping and micro-code block generation
-//!   (Fig. 8).
+//!   (Fig. 8).  The three lowering decisions (division plan, PE mapping,
+//!   BPMM slicing) plus the stage schedule sit behind the
+//!   [`dfg::strategy::DataflowStrategy`] trait: `PaperStrategy` is the
+//!   paper's recipe verbatim (the default), `SpmAdaptiveStrategy` packs
+//!   blocks deeper (SPM-residency bounded) and cost-models the division
+//!   choice, and sessions built with
+//!   [`dfg::strategy::Strategy::Auto`] simulate every registered
+//!   strategy per kernel shape and keep the fastest.
 //! * [`sim`] — deterministic cycle-level discrete-event simulator of the
 //!   dataflow substrate: PEs with decoupled units and coarse-grained
 //!   block scheduling, mesh NoC, multi-line SPM, DMA/DDR.  The engine
@@ -42,8 +49,9 @@
 //!   the `pjrt` cargo feature, metadata-only stub otherwise).
 //! * [`coordinator`] — experiment orchestration around a long-lived
 //!   [`coordinator::Session`]: a builder-configured session (arch
-//!   preset, window, simulator options, division policy) owns a plan
-//!   cache keyed on `(kind, points, division, arch signature)`, so
+//!   preset, window, simulator options, division policy, dataflow
+//!   strategy) owns a plan cache keyed on `(kind, points, division,
+//!   strategy, arch signature)`, so
 //!   repeated stage DFGs — the vanilla transformer's twin FFN layers,
 //!   FABNet's repeated blocks — plan, lower and simulate exactly once;
 //!   independent kernels fan out across threads via
@@ -73,10 +81,9 @@
 //!   counts, a resumable journal-checkpointed parallel sweep through
 //!   shared per-arch sessions, and a per-class latency/energy/area
 //!   Pareto frontier ([`coordinator::autotune::sweep`],
-//!   `Report::Pareto`, the `bfdf autotune` subcommand).  The old free
-//!   functions (`run_kernel`, `run_kernel_with`, `stream_workload`)
-//!   remain as deprecated wrappers over a process-wide shared-session
-//!   pool.
+//!   `Report::Pareto`, the `bfdf autotune` subcommand).  The search
+//!   space also carries a `strategy=` axis, so the sweep can race
+//!   dataflow strategies against architecture knobs in one grid.
 
 pub mod arch;
 pub mod baselines;

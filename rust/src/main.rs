@@ -26,6 +26,7 @@ use butterfly_dataflow::coordinator::{
 };
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
+use butterfly_dataflow::dfg::strategy::Strategy;
 use butterfly_dataflow::energy;
 use butterfly_dataflow::runtime::Runtime;
 use butterfly_dataflow::sim::SimOptions;
@@ -81,10 +82,19 @@ fn app() -> App {
                 .opt("window", "48", "simulation window (DFG iterations)")
                 .opt("overlap", "pipeline", "streaming overlap model: none | dma | pipeline")
                 .opt("arrays", "1", "replicated dataflow arrays the batch shards across")
+                .opt(
+                    "strategy",
+                    "paper",
+                    "dataflow strategy: paper | spm-adaptive | auto (see 'strategies')",
+                )
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
             Command::new("workloads", "list the registered workload suites")
+                .flag("json", "emit a machine-readable report"),
+        )
+        .command(
+            Command::new("strategies", "list the registered dataflow strategies")
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
@@ -106,6 +116,11 @@ fn app() -> App {
                 .opt("arch", "scaled128", "architecture preset: full | scaled128")
                 .opt("overlap", "pipeline", "streaming overlap model: none | dma | pipeline")
                 .opt("arrays", "1", "replicated dataflow arrays the batch shards across")
+                .opt(
+                    "strategy",
+                    "paper",
+                    "dataflow strategy: paper | spm-adaptive | auto (see 'strategies')",
+                )
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
@@ -149,7 +164,7 @@ fn app() -> App {
                 "space",
                 "default",
                 "search-space grammar, e.g. 'mesh=2x2,4x4;simd=8,32;spm=2m,4m;ports=4;ddr=1,2;\
-                 arrays=1,2', or 'default'",
+                 arrays=1,2;strategy=paper,auto', or 'default'",
             )
             .opt(
                 "suites",
@@ -166,6 +181,12 @@ fn app() -> App {
             .opt("arch", "scaled128", "base architecture preset: full | scaled128")
             .opt("window", "48", "simulation window (DFG iterations)")
             .opt("overlap", "pipeline", "per-batch overlap model: none | dma | pipeline")
+            .opt(
+                "strategy",
+                "paper",
+                "dataflow strategy for every point when --space has no strategy= axis: \
+                 paper | spm-adaptive | auto",
+            )
             .opt("journal", "", "checkpoint journal path (JSON lines); enables --resume")
             .flag("resume", "replay completed evaluations from --journal instead of re-running")
             .flag("no-prune", "disable the shard/roofline pruner (evaluate the full grid)")
@@ -206,6 +227,19 @@ fn parse_pipeline(m: &Matches) -> Result<(Overlap, usize)> {
     Ok((overlap, arrays))
 }
 
+/// Parse `--strategy` (defaults to `paper`, the bit-exact recipe).
+fn parse_strategy(m: &Matches) -> Result<Strategy> {
+    Strategy::parse(m.get("strategy"))
+}
+
+/// One line per auto-selection a session made, for the text output
+/// (empty unless the session ran with `--strategy auto`).
+fn print_auto_selections(session: &Session) {
+    for ((kind, points, vectors), winner) in session.auto_selections() {
+        println!("auto strategy: {kind}-{points} x{vectors} -> {winner}");
+    }
+}
+
 fn parse_division(s: &str) -> Result<Option<(usize, usize)>> {
     if s == "auto" {
         return Ok(None);
@@ -236,6 +270,7 @@ fn run(args: &[String]) -> Result<()> {
         "sweep-divisions" => cmd_sweep(&m),
         "run" => cmd_run(&m),
         "workloads" => cmd_workloads(&m),
+        "strategies" => cmd_strategies(&m),
         "platforms" => cmd_platforms(&m),
         "energy-model" => cmd_energy_model(&m),
         "validate" => cmd_validate(&m),
@@ -395,6 +430,7 @@ fn cmd_run(m: &Matches) -> Result<()> {
         .window(m.get_usize("window")?)
         .overlap(overlap)
         .arrays(arrays)
+        .strategy(parse_strategy(m)?)
         .build();
     if !workload.is_empty() {
         return run_suite(m, &session, workload, batch);
@@ -415,6 +451,7 @@ fn cmd_run(m: &Matches) -> Result<()> {
     if m.flag("json") {
         let report = Report::Network {
             arch: session.arch_signature().to_string(),
+            strategy: session.strategy(),
             cache,
             result: r,
         };
@@ -422,6 +459,7 @@ fn cmd_run(m: &Matches) -> Result<()> {
         return Ok(());
     }
     print_network(&r);
+    print_auto_selections(&session);
     println!(
         "plan cache: {} lowerings ({} stage hits, {} plan hits)",
         cache.lowerings, cache.stage_hits, cache.plan_hits
@@ -444,6 +482,7 @@ fn run_suite(
         let report = Report::Stream {
             arch: session.arch_signature().to_string(),
             workload: suite.name.to_string(),
+            strategy: session.strategy(),
             cache,
             result: r,
         };
@@ -474,6 +513,10 @@ fn run_suite(
     t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
     t.row(&["energy eff.".into(), format!("{:.1} pred/J", r.energy_eff)]);
     t.print();
+    if session.strategy() != Strategy::Paper {
+        println!("strategy: {}", session.strategy().name());
+    }
+    print_auto_selections(session);
     println!(
         "plan cache: {} lowerings for {} kernels ({} stage hits, {} plan hits)",
         cache.lowerings,
@@ -567,6 +610,25 @@ fn cmd_workloads(m: &Matches) -> Result<()> {
     t.print();
     println!("run one with: bfdf run --workload <name>");
     println!("or compose a hybrid: bfdf run --spec 'att:fft2d,ffn:bpmm*x4;att:dense,ffn:bpmm*x2'");
+    Ok(())
+}
+
+fn cmd_strategies(m: &Matches) -> Result<()> {
+    if m.flag("json") {
+        let items = Strategy::ALL
+            .iter()
+            .map(|st| obj(vec![("name", s(st.name())), ("description", s(st.describe()))]))
+            .collect();
+        let report = obj(vec![("report", s("strategies")), ("strategies", arr(items))]);
+        println!("{}", report.render());
+        return Ok(());
+    }
+    let mut t = Table::new("registered dataflow strategies", &["name", "description"]);
+    for st in Strategy::ALL {
+        t.row(&[st.name().to_string(), st.describe().to_string()]);
+    }
+    t.print();
+    println!("pick one with: bfdf run|stream|autotune --strategy <name>");
     Ok(())
 }
 
@@ -743,12 +805,14 @@ fn cmd_stream(m: &Matches) -> Result<()> {
         .arch(parse_arch(m.get("arch"))?)
         .overlap(overlap)
         .arrays(arrays)
+        .strategy(parse_strategy(m)?)
         .build();
     let r = session.stream(&suite.kernels_at(Some(batch)), batch)?;
     if m.flag("json") {
         let report = Report::Stream {
             arch: session.arch_signature().to_string(),
             workload: "vanilla".to_string(),
+            strategy: session.strategy(),
             cache: session.cache_stats(),
             result: r,
         };
@@ -770,6 +834,10 @@ fn cmd_stream(m: &Matches) -> Result<()> {
     t.row(&["power".into(), format!("{:.2} W", r.power_w)]);
     t.row(&["energy eff.".into(), format!("{:.1} pred/J", r.energy_eff)]);
     t.print();
+    if session.strategy() != Strategy::Paper {
+        println!("strategy: {}", session.strategy().name());
+    }
+    print_auto_selections(&session);
     let cache = session.cache_stats();
     println!(
         "plan cache: {} lowerings for {} kernels ({} stage hits, {} plan hits)",
@@ -896,7 +964,18 @@ fn print_serving(points: &[ServeResult], cache: &butterfly_dataflow::coordinator
 }
 
 fn cmd_autotune(m: &Matches) -> Result<()> {
-    let space = SearchSpace::parse(m.get("space"))?;
+    let mut space = SearchSpace::parse(m.get("space"))?;
+    let strategy = parse_strategy(m)?;
+    if space.strategy.is_empty() {
+        // --strategy pins every point when the space does not sweep the
+        // axis itself (the default 'paper' keeps prior grids intact).
+        space.strategy = vec![strategy];
+    } else {
+        anyhow::ensure!(
+            strategy == Strategy::Paper,
+            "--strategy conflicts with a 'strategy=' axis in --space; pick one"
+        );
+    }
     let base = parse_arch(m.get("arch"))?;
     // Whitespace-separated, NOT comma-separated: spec strings use
     // commas internally ('att:fft2d,ffn:bpmm*x2' is one class).

@@ -24,10 +24,9 @@
 //!   hidden, 2D-FFT attention + two BPMM FFN layers, batch-256
 //!   streamed.
 //!
-//! The seed's free enumeration functions (`vit_kernels`, `bert_kernels`,
-//! `fabnet_kernels`, `vanilla_kernels`) are deprecated; they survive
-//! unchanged as the golden reference the `ModelSpec` lowering is tested
-//! against (`rust/tests/modelspec.rs`).
+//! The seed's hand-written kernel enumerations survive as frozen golden
+//! fixtures in `rust/tests/modelspec.rs`, which pins every registered
+//! suite's `ModelSpec` lowering to them field-for-field.
 
 pub mod platforms;
 pub mod spec;
@@ -104,237 +103,6 @@ impl ModelFamily {
             ModelFamily::Vanilla => "Vanilla",
         }
     }
-}
-
-/// ViT kernels at the paper's scales (Fig. 15a: seq 256, hidden 768-ish;
-/// we use the power-of-two 1024/256/512 the butterfly requires).
-#[deprecated(
-    since = "0.3.0",
-    note = "use `find_suite(\"vit-256\")` and `WorkloadSuite::kernels_at`, or compose a \
-            `workloads::spec::ModelSpec`"
-)]
-pub fn vit_kernels(batch: usize) -> Vec<KernelSpec> {
-    vit_kernels_seq(batch, 256)
-}
-
-/// ViT kernels at an explicit (power-of-two) sequence length — the
-/// registry entry's `seq` drives this, so suite metadata and kernels
-/// cannot drift apart.
-#[deprecated(
-    since = "0.3.0",
-    note = "use `WorkloadSuite::kernels_at` or compose a `workloads::spec::ModelSpec`"
-)]
-pub fn vit_kernels_seq(batch: usize, seq: usize) -> Vec<KernelSpec> {
-    let hidden = 512;
-    let mut v = Vec::new();
-    // AT-to_qkv: three hidden→hidden BPMM projections folded into one spec
-    // (3× vectors).
-    v.push(KernelSpec {
-        name: "VIT-AT-to_qkv".into(),
-        kind: KernelKind::Bpmm,
-        points: hidden,
-        vectors: 3 * batch * seq,
-        d_in: hidden,
-        d_out: hidden,
-        seq,
-    });
-    // FFN-L1 (expand 4x) and FFN-L2 (shrink 4x).
-    v.push(KernelSpec {
-        name: "VIT-FFN-L1".into(),
-        kind: KernelKind::Bpmm,
-        points: hidden,
-        vectors: 4 * batch * seq,
-        d_in: hidden,
-        d_out: 4 * hidden,
-        seq,
-    });
-    v.push(KernelSpec {
-        name: "VIT-FFN-L2".into(),
-        kind: KernelKind::Bpmm,
-        points: hidden,
-        vectors: 4 * batch * seq,
-        d_in: 4 * hidden,
-        d_out: hidden,
-        seq,
-    });
-    // AT-all: 2D FFT = seq-axis FFTs (hidden of them) + hidden-axis FFTs
-    // (seq of them) per batch item; enumerate as one spec per axis.
-    v.push(KernelSpec {
-        name: "VIT-AT-all-hidden".into(),
-        kind: KernelKind::Fft,
-        points: hidden,
-        vectors: batch * seq,
-        d_in: hidden,
-        d_out: hidden,
-        seq,
-    });
-    v.push(KernelSpec {
-        name: "VIT-AT-all-seq".into(),
-        kind: KernelKind::Fft,
-        points: seq,
-        vectors: batch * hidden,
-        d_in: seq,
-        d_out: seq,
-        seq,
-    });
-    v
-}
-
-/// BERT kernels across the paper's large sequence scales (§VI-F runs up
-/// to 64K sequences at 1K hidden).
-#[deprecated(
-    since = "0.3.0",
-    note = "use `find_suite(\"bert-<scale>\")` and `WorkloadSuite::kernels_at`, or compose \
-            a `workloads::spec::ModelSpec`"
-)]
-pub fn bert_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
-    let hidden = 1024;
-    vec![
-        KernelSpec {
-            name: format!("BERT-AT-to_qkv-{}", scale_name(seq)),
-            kind: KernelKind::Bpmm,
-            points: hidden,
-            vectors: 3 * batch * seq,
-            d_in: hidden,
-            d_out: hidden,
-            seq,
-        },
-        KernelSpec {
-            name: format!("BERT-FFN-L1-{}", scale_name(seq)),
-            kind: KernelKind::Bpmm,
-            points: hidden,
-            vectors: 4 * batch * seq,
-            d_in: hidden,
-            d_out: 4 * hidden,
-            seq,
-        },
-        KernelSpec {
-            name: format!("BERT-AT-all-hidden-{}", scale_name(seq)),
-            kind: KernelKind::Fft,
-            points: hidden,
-            vectors: batch * seq,
-            d_in: hidden,
-            d_out: hidden,
-            seq,
-        },
-        KernelSpec {
-            name: format!("BERT-AT-all-seq-{}", scale_name(seq)),
-            kind: KernelKind::Fft,
-            points: seq,
-            vectors: batch * hidden,
-            d_in: seq,
-            d_out: seq,
-            seq,
-        },
-    ]
-}
-
-/// FABNet-Base block kernels at one sequence scale (Fig. 17): 2D-FFT
-/// attention + BPMM FFN (hidden 256, expand 2x per [8]).
-#[deprecated(
-    since = "0.3.0",
-    note = "use `find_suite(\"fabnet-<scale>\")` and `WorkloadSuite::kernels_at`, or \
-            compose a `workloads::spec::ModelSpec`"
-)]
-pub fn fabnet_kernels(batch: usize, seq: usize) -> Vec<KernelSpec> {
-    let hidden = 256;
-    vec![
-        KernelSpec {
-            name: format!("FABNet-{}-ATT-hidden", seq),
-            kind: KernelKind::Fft,
-            points: hidden,
-            vectors: batch * seq,
-            d_in: hidden,
-            d_out: hidden,
-            seq,
-        },
-        KernelSpec {
-            name: format!("FABNet-{}-ATT-seq", seq),
-            kind: KernelKind::Fft,
-            points: seq,
-            vectors: batch * hidden,
-            d_in: seq,
-            d_out: seq,
-            seq,
-        },
-        KernelSpec {
-            name: format!("FABNet-{}-FFN-L1", seq),
-            kind: KernelKind::Bpmm,
-            points: hidden,
-            vectors: 2 * batch * seq,
-            d_in: hidden,
-            d_out: 2 * hidden,
-            seq,
-        },
-        KernelSpec {
-            name: format!("FABNet-{}-FFN-L2", seq),
-            kind: KernelKind::Bpmm,
-            points: hidden,
-            vectors: 2 * batch * seq,
-            d_in: 2 * hidden,
-            d_out: hidden,
-            seq,
-        },
-    ]
-}
-
-/// Table-IV one-layer vanilla transformer: 1K seq, 1K hidden, 2D-FFT
-/// attention + two BPMM FFN layers.
-#[deprecated(
-    since = "0.3.0",
-    note = "use `find_suite(\"vanilla\")` and `WorkloadSuite::kernels_at`, or compose a \
-            `workloads::spec::ModelSpec`"
-)]
-pub fn vanilla_kernels(batch: usize) -> Vec<KernelSpec> {
-    vanilla_kernels_seq(batch, 1024)
-}
-
-/// Vanilla-transformer kernels at an explicit (power-of-two) sequence
-/// length, 1K hidden — the registry entry's `seq` drives this.
-#[deprecated(
-    since = "0.3.0",
-    note = "use `WorkloadSuite::kernels_at` or compose a `workloads::spec::ModelSpec`"
-)]
-pub fn vanilla_kernels_seq(batch: usize, seq: usize) -> Vec<KernelSpec> {
-    let hidden = 1024;
-    vec![
-        KernelSpec {
-            name: "Vanilla-ATT-hidden".into(),
-            kind: KernelKind::Fft,
-            points: hidden,
-            vectors: batch * seq,
-            d_in: hidden,
-            d_out: hidden,
-            seq,
-        },
-        KernelSpec {
-            name: "Vanilla-ATT-seq".into(),
-            kind: KernelKind::Fft,
-            points: seq,
-            vectors: batch * hidden,
-            d_in: seq,
-            d_out: seq,
-            seq,
-        },
-        KernelSpec {
-            name: "Vanilla-FFN-L1".into(),
-            kind: KernelKind::Bpmm,
-            points: hidden,
-            vectors: 2 * batch * seq,
-            d_in: hidden,
-            d_out: 2 * hidden,
-            seq,
-        },
-        KernelSpec {
-            name: "Vanilla-FFN-L2".into(),
-            kind: KernelKind::Bpmm,
-            points: hidden,
-            vectors: 2 * batch * seq,
-            d_in: 2 * hidden,
-            d_out: hidden,
-            seq,
-        },
-    ]
 }
 
 /// A named, CLI-addressable workload scenario, backed by a
@@ -434,17 +202,6 @@ impl WorkloadSuite {
     /// default batch).
     pub fn kernels_at(&self, batch: Option<usize>) -> Vec<KernelSpec> {
         self.model().kernels(batch)
-    }
-
-    /// The suite's kernel enumeration with the legacy `0 =` default
-    /// sentinel.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use `kernels_at(Option<usize>)` — 0 is no longer a magic default-batch \
-                sentinel"
-    )]
-    pub fn kernels(&self, batch: usize) -> Vec<KernelSpec> {
-        self.kernels_at(if batch == 0 { None } else { Some(batch) })
     }
 
     /// Kernels at the suite's default batch.
@@ -644,16 +401,6 @@ mod tests {
         let big = suite.kernels_at(Some(8));
         assert_eq!(small.len(), big.len());
         assert_eq!(small[0].vectors * 8, big[0].vectors);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn legacy_batch_sentinel_still_maps_to_default() {
-        // The deprecated shim keeps the 0-means-default behavior for
-        // source compatibility until it is removed.
-        let suite = find_suite("vanilla").unwrap();
-        assert_eq!(suite.kernels(0), suite.default_kernels());
-        assert_eq!(suite.kernels(16), suite.kernels_at(Some(16)));
     }
 
     #[test]

@@ -5,22 +5,138 @@
 //! through `Session::run_network`.
 
 use butterfly_dataflow::coordinator::Session;
+use butterfly_dataflow::dfg::KernelKind;
 use butterfly_dataflow::util::prop::check;
 use butterfly_dataflow::util::rng::Rng;
 use butterfly_dataflow::workloads::spec::{
     AttnSparsity, Block, FfnForm, ModelSpec, NetworkBuilder, parse_spec_layers,
 };
-use butterfly_dataflow::workloads::{self, KernelSpec, ModelFamily, SUITES};
+use butterfly_dataflow::workloads::{self, scale_name, KernelSpec, ModelFamily, SUITES};
 
-/// The seed enumeration functions are the golden reference the new
-/// lowering must reproduce field-for-field.
-#[allow(deprecated)]
+/// The seed repo's hand-written kernel enumerations, frozen here as the
+/// golden reference the `ModelSpec` lowering must reproduce
+/// field-for-field.  (They lived in `workloads` as deprecated free
+/// functions until 0.6.0; the fixtures below are their final resting
+/// place.)
 fn seed_enumeration(suite: &workloads::WorkloadSuite, batch: usize) -> Vec<KernelSpec> {
+    let spec = |name: String, kind, points, vectors, d_in, d_out, seq| KernelSpec {
+        name,
+        kind,
+        points,
+        vectors,
+        d_in,
+        d_out,
+        seq,
+    };
+    let seq = suite.seq;
     match suite.family {
-        ModelFamily::Vit => workloads::vit_kernels_seq(batch, suite.seq),
-        ModelFamily::Bert => workloads::bert_kernels(batch, suite.seq),
-        ModelFamily::FabNet => workloads::fabnet_kernels(batch, suite.seq),
-        ModelFamily::Vanilla => workloads::vanilla_kernels_seq(batch, suite.seq),
+        // ViT (Fig. 15a shapes, power-of-two 512 hidden): three folded
+        // qkv projections, expand/contract FFN pair, 2D-FFT AT-all.
+        ModelFamily::Vit => {
+            let h = 512;
+            vec![
+                spec("VIT-AT-to_qkv".into(), KernelKind::Bpmm, h, 3 * batch * seq, h, h, seq),
+                spec("VIT-FFN-L1".into(), KernelKind::Bpmm, h, 4 * batch * seq, h, 4 * h, seq),
+                spec("VIT-FFN-L2".into(), KernelKind::Bpmm, h, 4 * batch * seq, 4 * h, h, seq),
+                spec("VIT-AT-all-hidden".into(), KernelKind::Fft, h, batch * seq, h, h, seq),
+                spec("VIT-AT-all-seq".into(), KernelKind::Fft, seq, batch * h, seq, seq, seq),
+            ]
+        }
+        // BERT at the §VI-F sequence scales, 1K hidden, expand-only FFN.
+        ModelFamily::Bert => {
+            let h = 1024;
+            let sc = scale_name(seq);
+            vec![
+                spec(
+                    format!("BERT-AT-to_qkv-{sc}"),
+                    KernelKind::Bpmm,
+                    h,
+                    3 * batch * seq,
+                    h,
+                    h,
+                    seq,
+                ),
+                spec(
+                    format!("BERT-FFN-L1-{sc}"),
+                    KernelKind::Bpmm,
+                    h,
+                    4 * batch * seq,
+                    h,
+                    4 * h,
+                    seq,
+                ),
+                spec(
+                    format!("BERT-AT-all-hidden-{sc}"),
+                    KernelKind::Fft,
+                    h,
+                    batch * seq,
+                    h,
+                    h,
+                    seq,
+                ),
+                spec(
+                    format!("BERT-AT-all-seq-{sc}"),
+                    KernelKind::Fft,
+                    seq,
+                    batch * h,
+                    seq,
+                    seq,
+                    seq,
+                ),
+            ]
+        }
+        // FABNet-Base block (Fig. 17): 2D-FFT attention + 2x FFN pair.
+        ModelFamily::FabNet => {
+            let h = 256;
+            vec![
+                spec(
+                    format!("FABNet-{seq}-ATT-hidden"),
+                    KernelKind::Fft,
+                    h,
+                    batch * seq,
+                    h,
+                    h,
+                    seq,
+                ),
+                spec(
+                    format!("FABNet-{seq}-ATT-seq"),
+                    KernelKind::Fft,
+                    seq,
+                    batch * h,
+                    seq,
+                    seq,
+                    seq,
+                ),
+                spec(
+                    format!("FABNet-{seq}-FFN-L1"),
+                    KernelKind::Bpmm,
+                    h,
+                    2 * batch * seq,
+                    h,
+                    2 * h,
+                    seq,
+                ),
+                spec(
+                    format!("FABNet-{seq}-FFN-L2"),
+                    KernelKind::Bpmm,
+                    h,
+                    2 * batch * seq,
+                    2 * h,
+                    h,
+                    seq,
+                ),
+            ]
+        }
+        // Table-IV one-layer vanilla transformer: 1K hidden.
+        ModelFamily::Vanilla => {
+            let h = 1024;
+            vec![
+                spec("Vanilla-ATT-hidden".into(), KernelKind::Fft, h, batch * seq, h, h, seq),
+                spec("Vanilla-ATT-seq".into(), KernelKind::Fft, seq, batch * h, seq, seq, seq),
+                spec("Vanilla-FFN-L1".into(), KernelKind::Bpmm, h, 2 * batch * seq, h, 2 * h, seq),
+                spec("Vanilla-FFN-L2".into(), KernelKind::Bpmm, h, 2 * batch * seq, 2 * h, h, seq),
+            ]
+        }
     }
 }
 

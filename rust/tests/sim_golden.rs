@@ -22,8 +22,11 @@ use std::collections::HashSet;
 use butterfly_dataflow::arch::ArchConfig;
 use butterfly_dataflow::coordinator::session::stage_schedule;
 use butterfly_dataflow::dfg::graph::KernelKind;
-use butterfly_dataflow::dfg::microcode::lower_stage_packed;
+use butterfly_dataflow::dfg::mapping::Mapping;
+use butterfly_dataflow::dfg::microcode::{lower_stage_mapped, lower_stage_packed};
+use butterfly_dataflow::dfg::slicing::SlicePlan;
 use butterfly_dataflow::dfg::stages::{plan_kernel, StageDfg};
+use butterfly_dataflow::dfg::strategy::{DataflowStrategy, PAPER};
 use butterfly_dataflow::sim::{self, simulate, simulate_in, SimOptions, SimWorkspace};
 use butterfly_dataflow::workloads::SUITES;
 
@@ -177,6 +180,72 @@ fn golden_all_suites_are_bit_exact() {
         }
     }
     assert!(programs >= 10, "suite sweep degenerated to {programs} programs");
+}
+
+#[test]
+fn golden_paper_strategy_matches_prerefactor_lowering() {
+    // The DataflowStrategy refactor moved the three lowering decisions
+    // (division plan, PE mapping, BPMM slicing) plus the stage schedule
+    // behind a trait; PaperStrategy must be the pre-refactor behavior
+    // verbatim.  Sweep every registered suite's kernels and assert, per
+    // decision, structural equality against the direct free-function
+    // path — and bit-exact SimStats for the lowered stage programs.
+    let arch = ArchConfig::full();
+    let opts = SimOptions::default();
+    let mut seen: HashSet<(String, usize, bool, bool, usize, usize)> = HashSet::new();
+    let mut programs = 0usize;
+    for suite in SUITES {
+        for spec in suite.default_kernels() {
+            let direct = plan_kernel(spec.kind, spec.points, spec.vectors, &arch, None)
+                .unwrap_or_else(|e| panic!("plan {} failed: {e}", spec.name));
+            let via = PAPER
+                .plan(spec.kind, spec.points, spec.vectors, &arch, None)
+                .unwrap_or_else(|e| panic!("strategy plan {} failed: {e}", spec.name));
+            assert_eq!(via, direct, "{}: division plan diverged", spec.name);
+            assert_eq!(
+                PAPER.slice(spec.d_in, spec.d_out).unwrap(),
+                SlicePlan::new(spec.d_in, spec.d_out).unwrap(),
+                "{}: slice plan diverged",
+                spec.name
+            );
+            for stage in &via.stages {
+                let want = stage_schedule(stage, spec.vectors, &arch, 16);
+                let got = PAPER.schedule(stage, spec.vectors, &arch, 16);
+                assert_eq!(got, want, "{}: stage schedule diverged", spec.name);
+                let map = PAPER.mapping(stage.points, &arch);
+                assert_eq!(
+                    map,
+                    Mapping::for_points(stage.points, &arch),
+                    "{}: mapping diverged",
+                    spec.name
+                );
+                let (_, window, pack) = want;
+                let key = (
+                    format!("{:?}", stage.kind),
+                    stage.points,
+                    stage.twiddle_before,
+                    stage.weights_from_ddr,
+                    window,
+                    pack,
+                );
+                if !seen.insert(key) {
+                    continue;
+                }
+                programs += 1;
+                let strategic = lower_stage_mapped(stage, &arch, window, pack, &map);
+                let legacy = lower_stage_packed(stage, &arch, window, pack);
+                strategic.validate().unwrap();
+                assert_eq!(
+                    simulate(&strategic, &arch, &opts),
+                    simulate(&legacy, &arch, &opts),
+                    "{}: lowered program stats diverged at {}pt",
+                    spec.name,
+                    stage.points
+                );
+            }
+        }
+    }
+    assert!(programs >= 10, "strategy sweep degenerated to {programs} programs");
 }
 
 #[test]

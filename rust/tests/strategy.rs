@@ -1,0 +1,133 @@
+//! Integration tests for the pluggable dataflow-strategy layer: the
+//! structural invariants every registered [`DataflowStrategy`] must
+//! satisfy across the kernel grid, the `Strategy::Auto` guarantee that
+//! simulate-and-pick never loses to the paper recipe on any registered
+//! suite, the plan-cache population contract of Auto's probes, and the
+//! autotuner's `strategy=` search-space axis end-to-end.
+
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::{
+    autotune, AutotuneConfig, Journal, Overlap, SearchSpace, Session, WorkloadClass,
+};
+use butterfly_dataflow::dfg::graph::KernelKind;
+use butterfly_dataflow::dfg::strategy::{registry, Strategy};
+use butterfly_dataflow::workloads::{find_suite, SUITES};
+
+#[test]
+fn every_strategy_plans_exact_depth_and_node_count() {
+    // Whatever division a strategy picks, the lowered plan must still
+    // compute the full butterfly: total depth exactly log2(n), stage
+    // points multiplying back to n, and the per-vector node count
+    // conserved at (n/2)·log2(n) — across both kinds and every
+    // power-of-two size up to 64K points.
+    let arch = ArchConfig::full();
+    for strat in registry() {
+        for kind in [KernelKind::Fft, KernelKind::Bpmm] {
+            for exp in 1..=16usize {
+                let n = 1usize << exp;
+                let plan = strat
+                    .plan(kind, n, 64, &arch, None)
+                    .unwrap_or_else(|e| panic!("{} {kind:?} {n}: {e}", strat.name()));
+                assert_eq!(
+                    plan.total_depth(),
+                    exp,
+                    "{} {kind:?} {n}: depth not log2(n)",
+                    strat.name()
+                );
+                let product: usize = plan.stages.iter().map(|s| s.points).product();
+                assert_eq!(product, n, "{} {kind:?} {n}: stage points", strat.name());
+                assert_eq!(
+                    plan.nodes_per_vector(),
+                    n / 2 * exp,
+                    "{} {kind:?} {n}: node count not conserved",
+                    strat.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_never_regresses_any_registered_suite() {
+    // Strategy::Auto probes every registry entry per kernel shape and
+    // keeps the fastest, with ties resolved to paper — so per kernel,
+    // and therefore per serial suite total, it can never be slower than
+    // the paper recipe.
+    for suite in SUITES {
+        let kernels = suite.kernels_at(Some(2));
+        let paper = Session::builder().window(12).strategy(Strategy::Paper).build();
+        let auto = Session::builder().window(12).strategy(Strategy::Auto).build();
+        let p = paper.run_many(&kernels).unwrap();
+        let a = auto.run_many(&kernels).unwrap();
+        for (pk, ak) in p.iter().zip(&a) {
+            assert!(
+                ak.time_s <= pk.time_s,
+                "{}: auto {} s > paper {} s",
+                pk.name,
+                ak.time_s,
+                pk.time_s
+            );
+        }
+        let pt: f64 = p.iter().map(|k| k.time_s).sum();
+        let at: f64 = a.iter().map(|k| k.time_s).sum();
+        assert!(at <= pt, "{}: auto total {at} > paper total {pt}", suite.name);
+    }
+}
+
+#[test]
+fn auto_probes_populate_the_cache_the_winner_reuses() {
+    // Auto's probe runs land in the same plan cache the winner is
+    // served from: a second identical run must add zero misses, and the
+    // memoized winner must reproduce the first run bit-for-bit.
+    let auto = Session::builder().strategy(Strategy::Auto).build();
+    let kernels = find_suite("fabnet-128").unwrap().kernels_at(Some(2));
+    let r1 = auto.run_many(&kernels).unwrap();
+    let s1 = auto.cache_stats();
+    assert!(s1.plan_misses > 0);
+    let r2 = auto.run_many(&kernels).unwrap();
+    let s2 = auto.cache_stats();
+    assert_eq!(s1.plan_misses, s2.plan_misses, "second run must miss nothing");
+    assert!(s2.plan_hits > s1.plan_hits, "second run must ride the cache");
+    for (a, b) in r1.iter().zip(&r2) {
+        assert_eq!(a.cycles, b.cycles, "{}", a.name);
+        assert_eq!(a.time_s, b.time_s, "{}", a.name);
+    }
+    let picks = auto.auto_selections();
+    assert!(!picks.is_empty(), "auto must record its selections");
+}
+
+#[test]
+fn autotune_strategy_axis_auto_point_never_loses_to_paper() {
+    // End-to-end through the autotuner: a strategy=paper,auto axis
+    // yields two points per arch, the auto point carries the id suffix,
+    // and under serial accounting its latency is bounded by paper's.
+    let space = SearchSpace::parse("strategy=paper,auto").unwrap();
+    let base = ArchConfig::scaled_128();
+    let classes = WorkloadClass::resolve(&["fabnet-128".into()], Some(2)).unwrap();
+    let cfg = AutotuneConfig {
+        window: 12,
+        overlap: Overlap::None,
+        prune: false,
+        ..AutotuneConfig::default()
+    };
+    let r = autotune::sweep(&space, &base, &classes, &cfg, &Journal::in_memory()).unwrap();
+    assert_eq!(r.points.len(), 2);
+    let c = &r.classes[0];
+    assert_eq!(c.evals.len(), 2, "prune disabled: both points evaluated");
+    let find = |want: Strategy| {
+        c.evals
+            .iter()
+            .find(|e| r.points[e.point].strategy == want)
+            .unwrap_or_else(|| panic!("no {} point", want.name()))
+    };
+    let paper = find(Strategy::Paper);
+    let auto = find(Strategy::Auto);
+    assert!(r.points[paper.point].is_default);
+    assert!(r.points[auto.point].id.ends_with("-stauto"));
+    assert!(
+        auto.metrics.latency_s <= paper.metrics.latency_s,
+        "auto {} s > paper {} s",
+        auto.metrics.latency_s,
+        paper.metrics.latency_s
+    );
+}
