@@ -11,13 +11,27 @@
 //! (reduced iteration counts, warn-only on throughput) and uploads the
 //! JSON as an artifact.  Both engines' [`SimStats`] are asserted
 //! bit-equal per case, so a silent divergence panics the bench.
+//!
+//! On top of the raw-engine cases sit two [`Session`]-level sections:
+//! a **thread-scaling ladder** (1/2/4/N worker threads streaming whole
+//! suites through fresh sessions; results asserted digest-identical at
+//! every thread count) and a **sweep-shaped composite** that replays
+//! the autotuner's access pattern — repeated rounds over several
+//! architectures — serially with per-session stores versus fully
+//! threaded with one shared [`StructuralStore`] (target >= 4x,
+//! warn-only).  Every section's results fold into a `stats_digest`
+//! that is independent of `--threads`, so CI diffs the digest between
+//! a 1-thread and an N-thread run to prove parallelism never changes
+//! simulated numbers.
 
 #[path = "common.rs"]
 mod common;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::{CacheStats, Report, Session, StructuralStore};
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::microcode::{lower_stage_packed, Program};
 use butterfly_dataflow::dfg::stages::StageDfg;
@@ -25,6 +39,69 @@ use butterfly_dataflow::sim::{self, simulate_in, SimOptions, SimStats, SimWorksp
 use butterfly_dataflow::util::json::{arr, num, obj, s, Json};
 use butterfly_dataflow::util::stats::{si, Summary};
 use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads;
+
+/// FNV-1a 64-bit, used for thread-invariance digests (not a stable
+/// on-disk key: it only ever compares runs of the same binary).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut f = Fnv::new();
+    f.update(bytes);
+    f.finish()
+}
+
+fn hex(d: u64) -> String {
+    format!("{d:016x}")
+}
+
+/// Stream one suite through a fresh session; returns (wall seconds,
+/// digest of the full stream report with cache stats zeroed — the
+/// cache fields are the only run-shape-dependent part).
+fn timed_stream(
+    arch: &ArchConfig,
+    window: usize,
+    threads: usize,
+    store: Option<&Arc<StructuralStore>>,
+    suite_name: &str,
+) -> (f64, u64) {
+    let suite = workloads::find_suite(suite_name).expect("registered suite");
+    let mut b = Session::builder().arch(arch.clone()).window(window).threads(threads);
+    if let Some(st) = store {
+        b = b.structural_store(st.clone());
+    }
+    let session = b.build();
+    let batch = suite.default_batch;
+    let kernels = suite.kernels_at(Some(batch));
+    let t0 = Instant::now();
+    let result = session.stream(&kernels, batch).expect("stream");
+    let wall = t0.elapsed().as_secs_f64();
+    let report = Report::Stream {
+        arch: session.arch_signature().to_string(),
+        workload: suite.name.to_string(),
+        strategy: session.strategy(),
+        cache: CacheStats::default(),
+        result,
+    };
+    (wall, fnv1a(report.render().as_bytes()))
+}
 
 /// One engine's measurement over a prepared program.
 struct Measure {
@@ -83,7 +160,16 @@ fn git_rev() -> String {
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    // `--threads N` caps the scaling ladder and the composite; the
+    // default (0 = auto) uses every core.
+    let mut threads_arg = 0usize;
+    for pair in args.windows(2) {
+        if pair[0] == "--threads" {
+            threads_arg = pair[1].parse().expect("--threads expects a count");
+        }
+    }
     let reps = if quick { 2 } else { 4 };
     let arch = ArchConfig::full();
     let mut t = Table::new(
@@ -94,6 +180,7 @@ fn main() {
     );
     let mut cases = Vec::new();
     let mut speedups = Vec::new();
+    let mut case_digests = Vec::new();
     let mut ws = SimWorkspace::new();
     for (kind, points, iters, pack) in [
         (KernelKind::Fft, 256, 64, 1),
@@ -143,7 +230,9 @@ fn main() {
             ("baseline", engine_json(&base)),
             ("rewritten", engine_json(&new)),
             ("speedup", num(speedup)),
+            ("stats_digest", s(&hex(fnv1a(format!("{:?}", new.stats).as_bytes())))),
         ]));
+        case_digests.push(fnv1a(format!("{:?}", new.stats).as_bytes()));
     }
     t.print();
     speedups.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -155,6 +244,127 @@ fn main() {
         println!("WARN: median speedup below the 3x target");
     }
 
+    // ------------------------------------------------------------------
+    // Session thread scaling: 1/2/4/N worker threads streaming whole
+    // suites through fresh sessions.  Every thread count must produce a
+    // digest-identical stream report (parallel == serial, bitwise).
+    // ------------------------------------------------------------------
+    let cap = if threads_arg == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads_arg
+    };
+    let mut ladder: Vec<usize> = [1, 2, 4, cap].into_iter().filter(|&n| n <= cap).collect();
+    ladder.sort_unstable();
+    ladder.dedup();
+    let window = if quick { 12 } else { 48 };
+    let scale_suites: &[&str] =
+        if quick { &["vanilla", "fabnet-256"] } else { &["vanilla", "bert-4k", "fabnet-512"] };
+    let scale_reps = if quick { 1 } else { 2 };
+    let scale_arch = ArchConfig::scaled_128();
+    let mut st = Table::new(
+        &format!("session thread scaling (window {window}, fresh session per run)"),
+        &["workload", "threads", "wall ms", "speedup vs 1T"],
+    );
+    let mut scaling_rows = Vec::new();
+    let mut scale_digests = Vec::new();
+    for &name in scale_suites {
+        let mut walls = Vec::new();
+        let mut digest: Option<u64> = None;
+        for &n in &ladder {
+            let mut best = f64::INFINITY;
+            for _ in 0..scale_reps {
+                let (w, d) = timed_stream(&scale_arch, window, n, None, name);
+                best = best.min(w);
+                match digest {
+                    None => digest = Some(d),
+                    Some(d0) => assert_eq!(
+                        d0, d,
+                        "{name}: {n}-thread stream diverged from the 1-thread result"
+                    ),
+                }
+            }
+            walls.push(best);
+        }
+        let digest = digest.unwrap();
+        scale_digests.push(digest);
+        let mut per_thread = Vec::new();
+        for (i, &n) in ladder.iter().enumerate() {
+            st.row(&[
+                if i == 0 { name.to_string() } else { String::new() },
+                format!("{n}"),
+                format!("{:.2}", walls[i] * 1e3),
+                format!("{:.2}x", walls[0] / walls[i]),
+            ]);
+            per_thread.push(obj(vec![
+                ("threads", num(n as f64)),
+                ("wall_ms", num(walls[i] * 1e3)),
+                ("speedup", num(walls[0] / walls[i])),
+            ]));
+        }
+        scaling_rows.push(obj(vec![
+            ("workload", s(name)),
+            ("digest", s(&hex(digest))),
+            ("threads", arr(per_thread)),
+        ]));
+    }
+    st.print();
+
+    // ------------------------------------------------------------------
+    // Sweep-shaped composite: the autotuner's access pattern — repeated
+    // rounds over several architectures — run serially with default
+    // per-session stores versus fully threaded with one store shared
+    // across every session (so round 2 replays instead of simulating).
+    // ------------------------------------------------------------------
+    let composite_archs = [ArchConfig::full(), ArchConfig::scaled_128()];
+    let rounds = 2;
+    let composite = |threads: usize, shared: bool| -> (f64, u64) {
+        let store = Arc::new(StructuralStore::new());
+        let mut fold = Fnv::new();
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            for carch in &composite_archs {
+                for &name in scale_suites {
+                    let (_, d) =
+                        timed_stream(carch, window, threads, shared.then_some(&store), name);
+                    fold.update(&d.to_le_bytes());
+                }
+            }
+        }
+        (t0.elapsed().as_secs_f64(), fold.finish())
+    };
+    let (base_wall, base_digest) = composite(1, false);
+    let (new_wall, new_digest) = composite(cap, true);
+    assert_eq!(
+        base_digest, new_digest,
+        "threaded+stored composite diverged from the serial baseline"
+    );
+    let composite_speedup = base_wall / new_wall;
+    println!(
+        "sweep composite ({rounds} rounds x {} archs x {} suites): \
+         serial {:.1} ms, {cap}-thread+store {:.1} ms -> {composite_speedup:.2}x",
+        composite_archs.len(),
+        scale_suites.len(),
+        base_wall * 1e3,
+        new_wall * 1e3,
+    );
+    if composite_speedup < 4.0 {
+        // Warn-only, same policy as the engine target.
+        println!("WARN: composite speedup below the 4x target");
+    }
+
+    // Thread-count-invariant digest over every section: the engine-case
+    // stats, the per-suite stream digests (asserted equal at every
+    // ladder point), and the composite fold (asserted equal between the
+    // serial and threaded runs).  CI compares this field between a
+    // `--threads 1` and an auto-thread run.
+    let mut overall = Fnv::new();
+    for d in case_digests.iter().chain(&scale_digests).chain([&base_digest]) {
+        overall.update(&d.to_le_bytes());
+    }
+    let stats_digest = hex(overall.finish());
+    println!("stats digest: {stats_digest}");
+
     let report = obj(vec![
         ("bench", s("sim-perf")),
         ("git_rev", s(&git_rev())),
@@ -162,6 +372,22 @@ fn main() {
         ("reps", num(reps as f64)),
         ("median_speedup", num(median_speedup)),
         ("cases", arr(cases)),
+        ("threads_cap", num(cap as f64)),
+        ("thread_scaling", arr(scaling_rows)),
+        (
+            "composite",
+            obj(vec![
+                ("rounds", num(rounds as f64)),
+                ("archs", num(composite_archs.len() as f64)),
+                ("suites", arr(scale_suites.iter().map(|&n| s(n)).collect())),
+                ("wall_base_ms", num(base_wall * 1e3)),
+                ("wall_new_ms", num(new_wall * 1e3)),
+                ("threads", num(cap as f64)),
+                ("speedup", num(composite_speedup)),
+                ("digest", s(&hex(base_digest))),
+            ]),
+        ),
+        ("stats_digest", s(&stats_digest)),
     ]);
     let path = "BENCH_simperf.json";
     std::fs::write(path, report.render() + "\n").expect("write BENCH_simperf.json");

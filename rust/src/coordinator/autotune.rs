@@ -69,6 +69,7 @@ use crate::Result;
 use super::network::eval_dense;
 use super::pipeline::{Overlap, PipelineConfig};
 use super::session::{CacheStats, Session};
+use super::structural::StructuralStore;
 
 /// Safety factor on roofline lower bounds.  The latency bound excludes
 /// cold-start DMA fills (batch-independent, hidden by the pipeline
@@ -672,11 +673,14 @@ impl Journal {
 /// never replay an entry the current configuration would compute
 /// differently; a format change simply misses and re-evaluates.  Paper
 /// points keep the historical suffix-free key so old journals replay.
+/// Simulator options embed via the explicit [`SimOptions::signature`]
+/// (not `{:?}`), so renaming a field or changing the derive output
+/// cannot silently alter — or accidentally preserve — the key.
 fn eval_key(point: &DesignPoint, class: &WorkloadClass, cfg: &AutotuneConfig) -> String {
     let mut key = format!(
-        "{}|{:?}|w{}|{}|a{}|{}|h{}|q{}|e{}|b{}",
+        "{}|{}|w{}|{}|a{}|{}|h{}|q{}|e{}|b{}",
         point.arch.signature(),
-        SimOptions::default(),
+        SimOptions::default().signature(),
         cfg.window,
         cfg.overlap.name(),
         point.arrays,
@@ -708,6 +712,15 @@ pub struct AutotuneConfig {
     pub batch: Option<usize>,
     /// Enable the shard/roofline pruner (reported, never silent).
     pub prune: bool,
+    /// Structural result store every pool session shares (default: a
+    /// fresh in-memory store per config).  Pass one opened with
+    /// [`StructuralStore::open`] — or reuse one config across sweeps —
+    /// and repeated sweeps over the same architectures pay only for
+    /// genuinely novel stage structures (`bfdf autotune --store`).
+    pub store: Arc<StructuralStore>,
+    /// Worker threads of every pool session (0 = all available cores);
+    /// kernels and stage windows shard across them.
+    pub threads: usize,
 }
 
 impl Default for AutotuneConfig {
@@ -718,6 +731,8 @@ impl Default for AutotuneConfig {
             window: 48,
             batch: None,
             prune: true,
+            store: Arc::new(StructuralStore::new()),
+            threads: 0,
         }
     }
 }
@@ -857,12 +872,14 @@ impl AutotuneResult {
 /// cache keys on strategy, but `Session::strategy` is fixed at build).
 struct SessionPool {
     window: usize,
+    store: Arc<StructuralStore>,
+    threads: usize,
     sessions: Mutex<HashMap<(String, Strategy), Arc<Session>>>,
 }
 
 impl SessionPool {
-    fn new(window: usize) -> SessionPool {
-        SessionPool { window, sessions: Mutex::new(HashMap::new()) }
+    fn new(window: usize, store: Arc<StructuralStore>, threads: usize) -> SessionPool {
+        SessionPool { window, store, threads, sessions: Mutex::new(HashMap::new()) }
     }
 
     fn get(&self, arch: &ArchConfig, strategy: Strategy) -> Arc<Session> {
@@ -874,6 +891,8 @@ impl SessionPool {
                         .arch(arch.clone())
                         .window(self.window)
                         .strategy(strategy)
+                        .structural_store(self.store.clone())
+                        .threads(self.threads)
                         .build(),
                 )
             })
@@ -889,6 +908,8 @@ impl SessionPool {
             total.plan_misses += s.plan_misses;
             total.stage_hits += s.stage_hits;
             total.stage_misses += s.stage_misses;
+            total.structural_hits += s.structural_hits;
+            total.structural_misses += s.structural_misses;
             total.lowerings += s.lowerings;
         }
         total
@@ -1056,7 +1077,7 @@ pub fn sweep(
         }
     }
 
-    let pool = SessionPool::new(cfg.window);
+    let pool = SessionPool::new(cfg.window, cfg.store.clone(), cfg.threads);
     let journal_hits = AtomicUsize::new(0);
     let mut results: Vec<Vec<Option<Metrics>>> = vec![vec![None; np]; nc];
 

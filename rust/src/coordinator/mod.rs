@@ -23,7 +23,13 @@
 //! [`SearchSpace`] over `ArchConfig` knobs, sound shard/roofline
 //! pruning, a resumable journal-checkpointed parallel sweep through
 //! shared per-arch sessions, and per-class latency/energy/area Pareto
-//! frontiers (`Report::Pareto`, `bfdf autotune`).
+//! frontiers (`Report::Pareto`, `bfdf autotune`).  Underneath every
+//! session's plan cache sits the cross-session [`StructuralStore`]
+//! ([`structural`]): stage-window measurements keyed by structure
+//! (kind, points, flags, window, pack, mapping id, arch+sim signature),
+//! shared across the autotuner's session pool and optionally persisted
+//! next to the journal so `--resume` sweeps pay only for genuinely
+//! novel stages.
 //!
 //! *How* a kernel is lowered — division, mapping, packing — is the
 //! session's [`crate::dfg::strategy::DataflowStrategy`]
@@ -39,6 +45,7 @@ pub mod report;
 pub mod serve;
 pub mod session;
 pub mod streaming;
+pub mod structural;
 
 pub use autotune::{
     AutotuneConfig, AutotuneResult, ClassSweep, DesignPoint, Journal, Metrics, Objective,
@@ -51,3 +58,4 @@ pub use report::{Report, SweepRow};
 pub use serve::{Arrival, ClassServeStats, ServeConfig, ServeResult, Traffic};
 pub use session::{CacheStats, Session, SessionBuilder};
 pub use streaming::StreamResult;
+pub use structural::{StageMeasure, StructuralKey, StructuralStore};

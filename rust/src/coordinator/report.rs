@@ -254,6 +254,8 @@ pub fn cache_json(c: &CacheStats) -> Json {
         ("plan_misses", num(c.plan_misses as f64)),
         ("stage_hits", num(c.stage_hits as f64)),
         ("stage_misses", num(c.stage_misses as f64)),
+        ("structural_hits", num(c.structural_hits as f64)),
+        ("structural_misses", num(c.structural_misses as f64)),
         ("lowerings", num(c.lowerings as f64)),
     ])
 }

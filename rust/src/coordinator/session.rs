@@ -9,10 +9,20 @@
 //! repeated stage DFGs are planned, lowered and simulated exactly once
 //! per session, and independent kernels fan out across threads via
 //! [`Session::run_many`] with deterministic, input-ordered results.
-//! Simulations run inside pooled [`SimWorkspace`] scratch arenas, so a
+//! Within one kernel, the independent stage-window simulations shard
+//! across the same worker pool (`Session::builder().threads(..)`, all
+//! cores by default) and merge in stage order, so parallel results stay
+//! bitwise-identical to serial ones.  Simulations run inside pooled
+//! [`SimWorkspace`] scratch arenas — bounded at the thread count — so a
 //! session's many `simulate` invocations (windows, sweeps, cache
 //! misses across a batch) recycle the event calendar and per-unit
-//! state instead of reallocating them per call.
+//! state instead of reallocating them per call.  Underneath the
+//! per-session cache sits a cross-session
+//! [`StructuralStore`](super::structural::StructuralStore)
+//! (`Session::builder().structural_store(..)`): stage-cache misses
+//! consult it before lowering, so sessions over the same configuration
+//! — autotuner pools, resumed sweeps — reuse each other's stage-window
+//! measurements, optionally persisted to disk.
 //!
 //! ```no_run
 //! use butterfly_dataflow::coordinator::Session;
@@ -60,6 +70,7 @@ use super::experiment::{ExperimentConfig, KernelResult};
 use super::network::{self, NetworkResult};
 use super::pipeline::{self, Overlap, PipelineConfig, StageCost};
 use super::streaming::{self, StreamResult};
+use super::structural::{StageMeasure, StructuralKey, StructuralStore};
 
 /// The per-stage simulation schedule of the *paper* strategy: the
 /// canonical implementation lives in
@@ -90,6 +101,8 @@ pub struct SessionBuilder {
     caching: bool,
     pipeline: PipelineConfig,
     strategy: Strategy,
+    threads: usize,
+    structural: Option<Arc<StructuralStore>>,
 }
 
 impl SessionBuilder {
@@ -102,6 +115,8 @@ impl SessionBuilder {
             caching: true,
             pipeline: PipelineConfig::default(),
             strategy: Strategy::Paper,
+            threads: 0,
+            structural: None,
         }
     }
 
@@ -168,6 +183,30 @@ impl SessionBuilder {
         self
     }
 
+    /// Worker threads for kernel fan-out ([`Session::run_many`]) and
+    /// intra-kernel stage-window sharding (0 = all available cores, the
+    /// default).  `threads(1)` is the fully serial mode; any thread
+    /// count produces bitwise-identical results (results merge in
+    /// deterministic input order and every stage simulation is
+    /// order-independent).  The count also caps the [`SimWorkspace`]
+    /// pool, so memory stays bounded under sustained fan-out.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Share a cross-session [`StructuralStore`]: stage-cache misses
+    /// consult it before lowering, so sessions over the same
+    /// `(arch, sim options)` configuration — autotuner pool sessions,
+    /// resumed sweeps, serving replicas — reuse each other's
+    /// stage-window measurements.  Without this call the session owns a
+    /// private store (hits then come only from uncached re-entry, i.e.
+    /// never — the per-session stage cache sits above it).
+    pub fn structural_store(mut self, store: Arc<StructuralStore>) -> Self {
+        self.structural = Some(store);
+        self
+    }
+
     /// Start from an existing [`ExperimentConfig`].
     pub fn config(mut self, cfg: &ExperimentConfig) -> Self {
         self.arch = cfg.arch.clone();
@@ -177,18 +216,31 @@ impl SessionBuilder {
     }
 
     pub fn build(self) -> Session {
-        let arch_sig = format!("{}|{:?}|w{}", self.arch.signature(), self.sim, self.window);
+        // Field-by-field `SimOptions::signature()` (never `{:?}`): a new
+        // simulator option must extend the signature or fail to compile,
+        // so it can never silently alias cache keys.
+        let structural_sig: Arc<str> =
+            format!("{}|{}", self.arch.signature(), self.sim.signature()).into();
+        let arch_sig = format!("{structural_sig}|w{}", self.window);
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
         Session {
             cfg: ExperimentConfig { arch: self.arch, sim: self.sim, window: self.window },
             division: self.division,
             caching: self.caching,
             pipeline: self.pipeline,
             strategy: self.strategy,
+            threads,
             cache: PlanCache {
                 arch_sig,
                 plans: Mutex::new(HashMap::new()),
                 stages: Mutex::new(HashMap::new()),
             },
+            structural: self.structural.unwrap_or_default(),
+            structural_sig,
             auto_winners: Mutex::new(HashMap::new()),
             counters: Counters::default(),
             workspaces: Mutex::new(Vec::new()),
@@ -248,14 +300,6 @@ struct AutoKey {
     division: Option<(usize, usize)>,
 }
 
-/// One simulated stage measurement (shared across kernels via `Arc`).
-#[derive(Debug)]
-struct StageMeasure {
-    /// Compute slots (per lane) of the lowered window program.
-    ops: u64,
-    stats: SimStats,
-}
-
 /// A per-key fill cell: concurrent misses on one key coalesce behind
 /// the cell's lock, so every distinct key is computed exactly once even
 /// under [`Session::run_many`] parallelism.
@@ -280,6 +324,8 @@ struct Counters {
     plan_misses: AtomicU64,
     stage_hits: AtomicU64,
     stage_misses: AtomicU64,
+    structural_hits: AtomicU64,
+    structural_misses: AtomicU64,
     lowerings: AtomicU64,
 }
 
@@ -292,7 +338,14 @@ pub struct CacheStats {
     /// Stage-window simulations served from / inserted into the cache.
     pub stage_hits: u64,
     pub stage_misses: u64,
-    /// Total stage lowerings (equals `stage_misses`
+    /// Stage-cache misses served by the cross-session
+    /// [`StructuralStore`] without lowering (> 0 only when sessions
+    /// share a store or it was loaded from disk).
+    pub structural_hits: u64,
+    /// Stage-cache misses the structural store could not serve (each
+    /// one lowered and simulated, then entered the store).
+    pub structural_misses: u64,
+    /// Total stage lowerings (equals `structural_misses`
     /// when caching is on; counts every stage when off).
     pub lowerings: u64,
 }
@@ -308,15 +361,30 @@ pub struct Session {
     caching: bool,
     pipeline: PipelineConfig,
     strategy: Strategy,
+    /// Resolved worker-thread count (>= 1) shared by the `run_many`
+    /// kernel fan-out and the intra-kernel stage sharding; also the
+    /// workspace-pool cap.
+    threads: usize,
     cache: PlanCache,
+    /// Cross-session structural result store (a private one unless the
+    /// builder injected a shared/persistent store); consulted on every
+    /// stage-cache miss when caching is on.
+    structural: Arc<StructuralStore>,
+    /// `(arch, sim options)` signature of structural keys — the
+    /// window-free prefix of [`PlanCache::arch_sig`] (the window is a
+    /// per-key structural field, not session identity).
+    structural_sig: Arc<str>,
     /// [`Strategy::Auto`] winners per kernel shape (registry indices).
     auto_winners: Mutex<HashMap<AutoKey, usize>>,
     counters: Counters,
     /// Pool of simulator scratch arenas: each lowering/simulation
-    /// checks one out (or starts a fresh one under `run_many`
-    /// parallelism) and returns it, so re-simulation across windows,
+    /// checks one out (or starts a fresh one when all are in flight
+    /// under fan-out) and returns it, so re-simulation across windows,
     /// batches and sweeps reuses the event calendar, ready queues and
     /// dependency counters instead of reallocating them per call.
+    /// Bounded at `threads`: returns beyond the cap are dropped, so a
+    /// burst of concurrent checkouts can never grow the pool past what
+    /// steady-state parallelism uses.
     workspaces: Mutex<Vec<SimWorkspace>>,
 }
 
@@ -351,6 +419,23 @@ impl Session {
         self.strategy
     }
 
+    /// Resolved worker-thread count (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The structural result store backing this session (shared iff the
+    /// builder injected one).
+    pub fn structural_store(&self) -> &Arc<StructuralStore> {
+        &self.structural
+    }
+
+    /// Current size of the pooled-workspace free list (bounded at
+    /// [`Session::threads`]; exposed for the pool-cap regression test).
+    pub fn workspace_pool_len(&self) -> usize {
+        self.workspaces.lock().unwrap().len()
+    }
+
     /// The [`Strategy::Auto`] picks made so far, as
     /// `((kind name, points, vectors), winning strategy name)` pairs
     /// sorted by shape — deterministic, so CLI lines and bench
@@ -376,6 +461,8 @@ impl Session {
             plan_misses: self.counters.plan_misses.load(Ordering::Relaxed),
             stage_hits: self.counters.stage_hits.load(Ordering::Relaxed),
             stage_misses: self.counters.stage_misses.load(Ordering::Relaxed),
+            structural_hits: self.counters.structural_hits.load(Ordering::Relaxed),
+            structural_misses: self.counters.structural_misses.load(Ordering::Relaxed),
             lowerings: self.counters.lowerings.load(Ordering::Relaxed),
         }
     }
@@ -451,13 +538,10 @@ impl Session {
     /// [`Session::run`] calls: the simulator is deterministic and the
     /// per-kernel arithmetic never depends on execution order.
     pub fn run_many(&self, specs: &[KernelSpec]) -> Result<Vec<KernelResult>> {
-        if specs.len() <= 1 {
+        if specs.len() <= 1 || self.threads <= 1 {
             return specs.iter().map(|s| self.run(s)).collect();
         }
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(2)
-            .min(specs.len());
+        let threads = self.threads.min(specs.len());
         let next = AtomicUsize::new(0);
         let done: Mutex<Vec<(usize, Result<KernelResult>)>> =
             Mutex::new(Vec::with_capacity(specs.len()));
@@ -645,8 +729,11 @@ impl Session {
 
     /// Lower + simulate (or recall) one stage window.  Each distinct
     /// [`StageKey`] is lowered exactly once per session, including under
-    /// [`Session::run_many`] parallelism (the per-key cell coalesces
-    /// concurrent misses).
+    /// [`Session::run_many`] / stage-sharding parallelism (the per-key
+    /// cell coalesces concurrent misses).  A stage-cache miss consults
+    /// the cross-session [`StructuralStore`] before lowering, so
+    /// sessions sharing a store (or loading one from disk) pay zero
+    /// lowerings for structures any of them has already measured.
     fn measure_stage(
         &self,
         stage: &StageDfg,
@@ -659,15 +746,25 @@ impl Session {
             let map = strat.mapping(stage.points, &self.cfg.arch);
             let program = lower_stage_mapped(stage, &self.cfg.arch, window, pack, &map);
             // Check a scratch arena out of the pool (falling back to a
-            // fresh one when all are in flight under run_many), run,
-            // and return it warm for the next stage.
+            // fresh one when all are in flight under fan-out), run, and
+            // return it warm for the next stage — unless the pool is
+            // already at the thread-count cap, in which case the arena
+            // is dropped (a transient burst must not grow the pool
+            // permanently).
             let mut ws =
                 self.workspaces.lock().unwrap().pop().unwrap_or_else(SimWorkspace::new);
             let stats = simulate_in(&mut ws, &program, &self.cfg.arch, &self.cfg.sim);
-            self.workspaces.lock().unwrap().push(ws);
+            let mut pool = self.workspaces.lock().unwrap();
+            if pool.len() < self.threads {
+                pool.push(ws);
+            }
+            drop(pool);
             Arc::new(StageMeasure { ops: program.total_ops(), stats })
         };
         if !self.caching {
+            // Uncached mode is the cache-equivalence oracle: it must
+            // re-lower every stage, so it bypasses the structural store
+            // on both the read and the write side.
             return lower();
         }
         let key = StageKey {
@@ -689,13 +786,83 @@ impl Session {
             return m.clone();
         }
         self.counters.stage_misses.fetch_add(1, Ordering::Relaxed);
-        let m = lower();
+        let skey = StructuralKey {
+            sig: self.structural_sig.clone(),
+            kind: stage.kind,
+            points: stage.points,
+            twiddle_before: stage.twiddle_before,
+            weights_from_ddr: stage.weights_from_ddr,
+            window,
+            pack,
+            mapping: strat.mapping_id().to_string(),
+        };
+        let (m, hit) = self.structural.get_or_fill(&skey, lower);
+        let counter = if hit {
+            &self.counters.structural_hits
+        } else {
+            &self.counters.structural_misses
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
         *slot = Some(m.clone());
         m
     }
 
+    /// Measure the stages of one kernel plan, sharding the independent
+    /// stage-window simulations across the session's worker threads.
+    /// Results come back in stage order regardless of completion order
+    /// (the [`Session::run_many`] pattern), so the caller's rollup —
+    /// and therefore every derived metric — is bitwise-identical to the
+    /// serial loop.  `jobs[i]` is `(iters_total, window, pack)` for
+    /// `stages[i]`, precomputed by the strategy's scheduler.
+    fn measure_stages(
+        &self,
+        stages: &[StageDfg],
+        jobs: &[(usize, usize, usize)],
+        strat: &'static dyn DataflowStrategy,
+    ) -> Vec<Arc<StageMeasure>> {
+        if stages.len() <= 1 || self.threads <= 1 {
+            return stages
+                .iter()
+                .zip(jobs)
+                .map(|(stage, &(_, window, pack))| {
+                    self.measure_stage(stage, window, pack, strat)
+                })
+                .collect();
+        }
+        let threads = self.threads.min(stages.len());
+        let next = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, Arc<StageMeasure>)>> =
+            Mutex::new(Vec::with_capacity(stages.len()));
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= stages.len() {
+                        break;
+                    }
+                    let (_, window, pack) = jobs[i];
+                    let m = self.measure_stage(&stages[i], window, pack, strat);
+                    done.lock().unwrap().push((i, m));
+                });
+            }
+        });
+        let mut slots: Vec<Option<Arc<StageMeasure>>> =
+            stages.iter().map(|_| None).collect();
+        for (i, m) in done.into_inner().unwrap() {
+            slots[i] = Some(m);
+        }
+        slots
+            .into_iter()
+            .map(|m| m.expect("every stage was claimed by a worker"))
+            .collect()
+    }
+
     /// The windowed-extrapolation experiment loop (see module docs in
     /// [`super::experiment`] for the software-pipelining argument).
+    /// Stage windows are measured in parallel ([`Session::measure_stages`])
+    /// and rolled up serially in stage order, so the f64 accumulation
+    /// order — and with it every reported metric — matches the
+    /// historical serial loop bit for bit.
     fn execute(
         &self,
         spec: &KernelSpec,
@@ -703,6 +870,13 @@ impl Session {
         strat: &'static dyn DataflowStrategy,
     ) -> Result<KernelResult> {
         let arch = &self.cfg.arch;
+
+        let jobs: Vec<(usize, usize, usize)> = plan
+            .stages
+            .iter()
+            .map(|stage| strat.schedule(stage, spec.vectors, arch, self.cfg.window))
+            .collect();
+        let measures = self.measure_stages(&plan.stages, &jobs, strat);
 
         let mut total_cycles = 0.0f64;
         let mut busy = [0.0f64; 4];
@@ -713,10 +887,7 @@ impl Session {
         let mut fill_cycles = 0.0f64;
         let mut ops_total = 0.0f64;
 
-        for stage in &plan.stages {
-            let (iters_total, window, pack) =
-                strat.schedule(stage, spec.vectors, arch, self.cfg.window);
-            let m = self.measure_stage(stage, window, pack, strat);
+        for (&(iters_total, window, _pack), m) in jobs.iter().zip(&measures) {
             let stats = &m.stats;
             let scale = iters_total as f64 / window as f64;
             let stage_cycles = if iters_total > window {

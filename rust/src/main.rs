@@ -16,13 +16,14 @@
 //! stage DFGs (division sweeps, networks with repeated layers) lower
 //! and simulate once, and independent kernels fan out across threads.
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
 use butterfly_dataflow::coordinator::autotune;
 use butterfly_dataflow::coordinator::{
     AutotuneConfig, AutotuneResult, Journal, NetworkResult, Objective, Overlap, Report,
-    SearchSpace, ServeConfig, ServeResult, Session, SweepRow, Traffic, WorkloadClass,
+    SearchSpace, ServeConfig, ServeResult, Session, StructuralStore, SweepRow, Traffic,
+    WorkloadClass,
 };
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
@@ -87,6 +88,7 @@ fn app() -> App {
                     "paper",
                     "dataflow strategy: paper | spm-adaptive | auto (see 'strategies')",
                 )
+                .opt("threads", "auto", "simulation worker threads ('auto' = all cores)")
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
@@ -121,6 +123,7 @@ fn app() -> App {
                     "paper",
                     "dataflow strategy: paper | spm-adaptive | auto (see 'strategies')",
                 )
+                .opt("threads", "auto", "simulation worker threads ('auto' = all cores)")
                 .flag("json", "emit a machine-readable report"),
         )
         .command(
@@ -188,6 +191,12 @@ fn app() -> App {
                  paper | spm-adaptive | auto",
             )
             .opt("journal", "", "checkpoint journal path (JSON lines); enables --resume")
+            .opt(
+                "store",
+                "",
+                "structural result store path (JSON lines); --resume also reloads it",
+            )
+            .opt("threads", "auto", "simulation worker threads ('auto' = all cores)")
             .flag("resume", "replay completed evaluations from --journal instead of re-running")
             .flag("no-prune", "disable the shard/roofline pruner (evaluate the full grid)")
             .opt("out", "", "also write the JSON report to this path (e.g. BENCH_pareto.json)")
@@ -230,6 +239,20 @@ fn parse_pipeline(m: &Matches) -> Result<(Overlap, usize)> {
 /// Parse `--strategy` (defaults to `paper`, the bit-exact recipe).
 fn parse_strategy(m: &Matches) -> Result<Strategy> {
     Strategy::parse(m.get("strategy"))
+}
+
+/// Parse `--threads`: `auto` (0) lets the session use every core;
+/// an explicit count pins the worker pool (1 = fully serial).
+fn parse_threads(m: &Matches) -> Result<usize> {
+    let s = m.get("threads");
+    if s == "auto" {
+        return Ok(0);
+    }
+    let n: usize = s
+        .parse()
+        .with_context(|| format!("--threads must be 'auto' or a count (got '{s}')"))?;
+    anyhow::ensure!(n >= 1, "--threads must be >= 1 (got {n})");
+    Ok(n)
 }
 
 /// One line per auto-selection a session made, for the text output
@@ -431,6 +454,7 @@ fn cmd_run(m: &Matches) -> Result<()> {
         .overlap(overlap)
         .arrays(arrays)
         .strategy(parse_strategy(m)?)
+        .threads(parse_threads(m)?)
         .build();
     if !workload.is_empty() {
         return run_suite(m, &session, workload, batch);
@@ -463,6 +487,10 @@ fn cmd_run(m: &Matches) -> Result<()> {
     println!(
         "plan cache: {} lowerings ({} stage hits, {} plan hits)",
         cache.lowerings, cache.stage_hits, cache.plan_hits
+    );
+    println!(
+        "structural store: {} hits, {} misses",
+        cache.structural_hits, cache.structural_misses
     );
     Ok(())
 }
@@ -523,6 +551,10 @@ fn run_suite(
         r.kernels.len(),
         cache.stage_hits,
         cache.plan_hits
+    );
+    println!(
+        "structural store: {} hits, {} misses",
+        cache.structural_hits, cache.structural_misses
     );
     Ok(())
 }
@@ -806,6 +838,7 @@ fn cmd_stream(m: &Matches) -> Result<()> {
         .overlap(overlap)
         .arrays(arrays)
         .strategy(parse_strategy(m)?)
+        .threads(parse_threads(m)?)
         .build();
     let r = session.stream(&suite.kernels_at(Some(batch)), batch)?;
     if m.flag("json") {
@@ -845,6 +878,10 @@ fn cmd_stream(m: &Matches) -> Result<()> {
         r.kernels.len(),
         cache.stage_hits,
         cache.plan_hits
+    );
+    println!(
+        "structural store: {} hits, {} misses",
+        cache.structural_hits, cache.structural_misses
     );
     Ok(())
 }
@@ -986,12 +1023,20 @@ fn cmd_autotune(m: &Matches) -> Result<()> {
     anyhow::ensure!(!keys.is_empty(), "--suites needs at least one workload class");
     let batch = parse_batch(m)?;
     let classes = WorkloadClass::resolve(&keys, batch)?;
+    let store_path = m.get("store");
+    let store = if store_path.is_empty() {
+        std::sync::Arc::new(StructuralStore::new())
+    } else {
+        std::sync::Arc::new(StructuralStore::open(store_path, m.flag("resume"))?)
+    };
     let cfg = AutotuneConfig {
         objective: Objective::parse(m.get("objective"))?,
         overlap: Overlap::parse(m.get("overlap"))?,
         window: m.get_usize("window")?,
         batch,
         prune: !m.flag("no-prune"),
+        store,
+        threads: parse_threads(m)?,
     };
     let journal_path = m.get("journal");
     let journal = if journal_path.is_empty() {
@@ -1088,6 +1133,10 @@ fn print_pareto(r: &AutotuneResult) {
         r.cache.lowerings,
         r.cache.stage_hits,
         r.cache.plan_hits
+    );
+    println!(
+        "structural store: {} hits, {} misses",
+        r.cache.structural_hits, r.cache.structural_misses
     );
 }
 

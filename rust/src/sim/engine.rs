@@ -88,6 +88,24 @@ impl Default for SimOptions {
     }
 }
 
+impl SimOptions {
+    /// Stable field-by-field cache-key signature.
+    ///
+    /// Cache keys (the session's `arch_sig`, the autotune journal key,
+    /// the structural result store) must change whenever any option
+    /// that affects simulation changes — and `{:?}` formatting cannot
+    /// guarantee that: a newly added field with a `Debug` impl that
+    /// elides defaults (or a derive-format change across compiler
+    /// versions) would silently alias keys across configurations.  The
+    /// exhaustive destructuring below makes the compiler the guard:
+    /// adding a field to `SimOptions` refuses to build until it is
+    /// spliced into the signature here.
+    pub fn signature(&self) -> String {
+        let SimOptions { no_multiline_spm, fifo_scheduling } = *self;
+        format!("nomlspm{}|fifo{}", no_multiline_spm as u8, fifo_scheduling as u8)
+    }
+}
+
 /// Unit-kind indices as stored in [`ExecLayout::unit`]
 /// (`UnitKind::index()` values; asserted equivalent in tests).
 const U_LOAD: u8 = 0;
@@ -755,6 +773,20 @@ mod tests {
                 (far + 1, Event::BlockDone { block: 2 }),
             ]
         );
+    }
+
+    #[test]
+    fn sim_options_signature_is_explicit_and_field_sensitive() {
+        // Pinned: the signature is a hand-built field list, never a
+        // `{:?}` dump (which could silently alias cache keys — the
+        // satellite fix this test guards).
+        assert_eq!(SimOptions::default().signature(), "nomlspm0|fifo0");
+        let spm = SimOptions { no_multiline_spm: true, ..Default::default() };
+        let fifo = SimOptions { fifo_scheduling: true, ..Default::default() };
+        assert_eq!(spm.signature(), "nomlspm1|fifo0");
+        assert_eq!(fifo.signature(), "nomlspm0|fifo1");
+        assert_ne!(spm.signature(), fifo.signature());
+        assert!(!SimOptions::default().signature().contains("SimOptions"));
     }
 
     #[test]

@@ -153,6 +153,31 @@ fn multi_suite_sweep_shares_one_plan_cache_across_classes() {
 }
 
 #[test]
+fn shared_structural_store_makes_repeat_sweeps_free() {
+    // The autotuner's session pool is rebuilt per sweep() call; with one
+    // AutotuneConfig (and thus one shared StructuralStore) reused across
+    // calls, the second sweep must lower nothing, serve every stage
+    // structurally, and render a byte-identical Pareto report.
+    let space = SearchSpace::parse("mesh=2x2;simd=8,32").unwrap();
+    let base = ArchConfig::scaled_128();
+    let cls = classes(&["fabnet-128"], Some(2));
+    let c = cfg(12, true);
+    let first = autotune::sweep(&space, &base, &cls, &c, &Journal::in_memory()).unwrap();
+    assert!(first.cache.lowerings > 0);
+    assert_eq!(first.cache.structural_misses, first.cache.lowerings, "{:?}", first.cache);
+    assert!(!c.store.is_empty(), "sweep left the shared store empty");
+
+    let second = autotune::sweep(&space, &base, &cls, &c, &Journal::in_memory()).unwrap();
+    assert_eq!(second.cache.lowerings, 0, "shared store was bypassed: {:?}", second.cache);
+    assert_eq!(second.cache.structural_hits, second.cache.stage_misses, "{:?}", second.cache);
+    assert_eq!(
+        Report::Pareto { result: first }.render(),
+        Report::Pareto { result: second }.render(),
+        "store reuse changed the frontier"
+    );
+}
+
+#[test]
 fn default_grid_pruner_skips_work_and_reports_it() {
     // Acceptance: on the default grid the pruner must skip at least one
     // evaluation, and the accounting must cover the whole grid — no

@@ -1,0 +1,208 @@
+//! Tentpole contracts of the parallel, incremental simulator: stage
+//! sharding must be bitwise-invisible (any thread count reproduces the
+//! serial results exactly, suite by suite and strategy by strategy),
+//! and the cross-session [`StructuralStore`] must hand later sessions
+//! the earlier sessions' measurements — without ever conflating keys
+//! that differ in architecture, simulator options or PE mapping.
+
+use std::sync::Arc;
+
+use butterfly_dataflow::arch::ArchConfig;
+use butterfly_dataflow::coordinator::{Session, StructuralStore};
+use butterfly_dataflow::dfg::strategy::Strategy;
+use butterfly_dataflow::sim::SimOptions;
+use butterfly_dataflow::workloads;
+
+/// Small window + batch keep the all-suites sweeps cheap in debug mode;
+/// the contracts under test are thread-count and store invariance, not
+/// absolute numbers.
+const WINDOW: usize = 8;
+const BATCH: usize = 1;
+
+fn builder(strategy: Strategy, threads: usize) -> Session {
+    Session::builder()
+        .arch(ArchConfig::scaled_128())
+        .window(WINDOW)
+        .strategy(strategy)
+        .threads(threads)
+        .build()
+}
+
+fn assert_streams_equal(name: &str, a: &Session, b: &Session) {
+    let suite = workloads::find_suite(name).unwrap();
+    let kernels = suite.kernels_at(Some(BATCH));
+    let ra = a.stream(&kernels, BATCH).unwrap();
+    let rb = b.stream(&kernels, BATCH).unwrap();
+    assert_eq!(ra.kernels.len(), rb.kernels.len());
+    for (ka, kb) in ra.kernels.iter().zip(&rb.kernels) {
+        assert_eq!(ka.name, kb.name, "{name}: kernel order diverged");
+        assert_eq!(ka.cycles, kb.cycles, "{name}/{}", ka.name);
+        assert_eq!(ka.time_s, kb.time_s, "{name}/{}", ka.name);
+        assert_eq!(ka.util, kb.util, "{name}/{}", ka.name);
+        assert_eq!(ka.power_w, kb.power_w, "{name}/{}", ka.name);
+        assert_eq!(ka.energy_j, kb.energy_j, "{name}/{}", ka.name);
+        assert_eq!(ka.spm_requirement, kb.spm_requirement, "{name}/{}", ka.name);
+        assert_eq!(ka.noc_requirement, kb.noc_requirement, "{name}/{}", ka.name);
+        assert_eq!(ka.dma_bytes, kb.dma_bytes, "{name}/{}", ka.name);
+        assert_eq!(ka.dma_time_s, kb.dma_time_s, "{name}/{}", ka.name);
+        assert_eq!(ka.fill_time_s, kb.fill_time_s, "{name}/{}", ka.name);
+    }
+    assert_eq!(ra.latency_ms, rb.latency_ms, "{name}");
+    assert_eq!(ra.batch_time_s, rb.batch_time_s, "{name}");
+    assert_eq!(ra.energy_j, rb.energy_j, "{name}");
+    assert_eq!(ra.power_w, rb.power_w, "{name}");
+}
+
+#[test]
+fn parallel_matches_serial_bitwise_on_every_suite_and_strategy() {
+    // The headline tentpole contract: an 8-thread session (kernel
+    // fan-out *and* intra-kernel stage sharding both active) streams
+    // every registered suite bitwise-identically to a 1-thread session,
+    // under both concrete strategies — including the per-key cache
+    // counters, which the fill cells keep deterministic under any
+    // interleaving.
+    for strategy in [Strategy::Paper, Strategy::SpmAdaptive] {
+        let serial = builder(strategy, 1);
+        let parallel = builder(strategy, 8);
+        assert_eq!(serial.threads(), 1);
+        assert_eq!(parallel.threads(), 8);
+        for name in workloads::suite_names() {
+            assert_streams_equal(name, &serial, &parallel);
+        }
+        assert_eq!(
+            serial.cache_stats(),
+            parallel.cache_stats(),
+            "{}: cache counters depend on thread count",
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn shared_store_replays_across_sessions() {
+    // Two sessions over the same configuration sharing one store: the
+    // second must not lower anything — every stage-cache miss is served
+    // structurally — and must reproduce the first's results bitwise.
+    let store = Arc::new(StructuralStore::new());
+    let first = Session::builder()
+        .arch(ArchConfig::scaled_128())
+        .window(WINDOW)
+        .structural_store(store.clone())
+        .build();
+    let second = Session::builder()
+        .arch(ArchConfig::scaled_128())
+        .window(WINDOW)
+        .structural_store(store.clone())
+        .threads(4)
+        .build();
+    let suite = workloads::find_suite("vanilla").unwrap();
+    let kernels = suite.kernels_at(Some(2));
+    let ra = first.stream(&kernels, 2).unwrap();
+    let s1 = first.cache_stats();
+    assert!(s1.lowerings > 0, "first session must simulate: {s1:?}");
+    assert_eq!(s1.structural_misses, s1.lowerings, "{s1:?}");
+    assert_eq!(s1.structural_hits, 0, "{s1:?}");
+    assert_eq!(store.len() as u64, s1.structural_misses);
+
+    let rb = second.stream(&kernels, 2).unwrap();
+    let s2 = second.cache_stats();
+    assert_eq!(s2.lowerings, 0, "second session re-lowered: {s2:?}");
+    assert_eq!(s2.structural_hits, s2.stage_misses, "{s2:?}");
+    assert_eq!(s2.structural_misses, 0, "{s2:?}");
+    assert_eq!(ra.latency_ms, rb.latency_ms);
+    assert_eq!(ra.energy_j, rb.energy_j);
+    for (ka, kb) in ra.kernels.iter().zip(&rb.kernels) {
+        assert_eq!(ka.cycles, kb.cycles, "{}", ka.name);
+        assert_eq!(ka.power_w, kb.power_w, "{}", ka.name);
+    }
+}
+
+#[test]
+fn store_keys_separate_arch_and_sim_options() {
+    // A shared store must never serve a measurement taken under a
+    // different architecture or different simulator options: the
+    // signature is part of every key.
+    let store = Arc::new(StructuralStore::new());
+    let a = Session::builder()
+        .arch(ArchConfig::scaled_128())
+        .window(WINDOW)
+        .structural_store(store.clone())
+        .build();
+    let suite = workloads::find_suite("fabnet-128").unwrap();
+    let kernels = suite.kernels_at(Some(2));
+    a.stream(&kernels, 2).unwrap();
+    assert!(a.cache_stats().structural_misses > 0);
+
+    let other_arch = Session::builder()
+        .arch(ArchConfig::full())
+        .window(WINDOW)
+        .structural_store(store.clone())
+        .build();
+    other_arch.stream(&kernels, 2).unwrap();
+    let s = other_arch.cache_stats();
+    assert_eq!(s.structural_hits, 0, "cross-arch store hit: {s:?}");
+    assert_eq!(s.lowerings, s.structural_misses, "{s:?}");
+
+    let other_sim = Session::builder()
+        .arch(ArchConfig::scaled_128())
+        .sim(SimOptions { fifo_scheduling: true, ..SimOptions::default() })
+        .window(WINDOW)
+        .structural_store(store.clone())
+        .build();
+    other_sim.stream(&kernels, 2).unwrap();
+    let s = other_sim.cache_stats();
+    assert_eq!(s.structural_hits, 0, "cross-sim-options store hit: {s:?}");
+    assert_eq!(s.lowerings, s.structural_misses, "{s:?}");
+}
+
+#[test]
+fn persisted_store_resumes_with_zero_lowerings() {
+    // Write-through persistence: a fresh process (modeled by reopening
+    // the file with resume) must replay every measurement and reproduce
+    // the run bitwise with zero lowerings.
+    let path = std::env::temp_dir()
+        .join(format!("bfdf_structural_it_{}.jsonl", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    let suite = workloads::find_suite("vit-256").unwrap();
+    let kernels = suite.kernels_at(Some(2));
+
+    let store = Arc::new(StructuralStore::open(&path, false).unwrap());
+    let first = Session::builder()
+        .arch(ArchConfig::scaled_128())
+        .window(WINDOW)
+        .structural_store(store)
+        .build();
+    let ra = first.stream(&kernels, 2).unwrap();
+    let written = first.cache_stats().structural_misses;
+    assert!(written > 0);
+
+    let reloaded = Arc::new(StructuralStore::open(&path, true).unwrap());
+    assert_eq!(reloaded.loaded() as u64, written, "store did not persist every entry");
+    let second = Session::builder()
+        .arch(ArchConfig::scaled_128())
+        .window(WINDOW)
+        .structural_store(reloaded)
+        .threads(4)
+        .build();
+    let rb = second.stream(&kernels, 2).unwrap();
+    let s2 = second.cache_stats();
+    assert_eq!(s2.lowerings, 0, "resumed run re-simulated: {s2:?}");
+    assert_eq!(ra.latency_ms, rb.latency_ms);
+    assert_eq!(ra.energy_j, rb.energy_j);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn arch_signature_is_built_from_explicit_signatures() {
+    // The session signature must be composed of the arch and
+    // field-by-field SimOptions signatures plus the window — never the
+    // `{:?}` of SimOptions, whose derive output would silently absorb
+    // field renames (and leak type names into cache keys).
+    let arch = ArchConfig::scaled_128();
+    let session = Session::builder().arch(arch.clone()).window(48).build();
+    assert_eq!(
+        session.arch_signature(),
+        format!("{}|{}|w48", arch.signature(), SimOptions::default().signature())
+    );
+    assert!(!session.arch_signature().contains("SimOptions"));
+}

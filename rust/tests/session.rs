@@ -117,6 +117,26 @@ fn run_many_propagates_planning_errors() {
 }
 
 #[test]
+fn workspace_pool_is_bounded_at_thread_count() {
+    // The pooled scratch arenas must never outgrow the worker count:
+    // a burst of concurrent checkouts (kernel fan-out x stage sharding)
+    // may allocate extras, but returns beyond the cap are dropped.
+    let session = Session::builder().threads(3).build();
+    assert_eq!(session.threads(), 3);
+    let mut specs = vanilla_kernels(2);
+    specs.extend(vit_kernels(2));
+    specs.extend(vanilla_kernels(4));
+    session.run_many(&specs).unwrap();
+    let len = session.workspace_pool_len();
+    assert!(len <= 3, "workspace pool grew past the thread count: {len}");
+
+    // Serial sessions keep at most one warm arena.
+    let serial = Session::builder().threads(1).build();
+    serial.run_many(&vanilla_kernels(2)).unwrap();
+    assert!(serial.workspace_pool_len() <= 1);
+}
+
+#[test]
 fn sessions_with_different_windows_do_not_share_results() {
     // The window is part of the stage cache key; different windows may
     // measure slightly different steady states but must both run.
