@@ -1,0 +1,203 @@
+//! Fault-tolerance degradation curves: how gracefully the stack loses
+//! performance as hardware and replicas fail.
+//!
+//! Two ladders, both deterministic (seeded fault processes, seeded
+//! traffic) so the `BENCH_faults.json` this writes is bit-reproducible
+//! run to run — the CI fault-smoke job runs it twice and diffs:
+//!
+//! 1. **Hardware**: a nested ladder of `FaultModel`s (dead PEs, then a
+//!    degraded NoC link, then most of the mesh gone) applied to the
+//!    same network.  Fault-aware mapping folds the butterfly onto the
+//!    surviving power-of-two PE subset, so batch time must degrade
+//!    monotonically along the ladder — asserted.
+//! 2. **Serving**: the same traffic replayed against replica arrays
+//!    whose seeded MTBF/MTTR process worsens rung by rung, with
+//!    SLO-aware admission and deadlines on.  Reports availability,
+//!    goodput against the degraded capacity bound, and the retry /
+//!    shed / timeout / lost breakdown.
+
+use butterfly_dataflow::arch::{ArchConfig, FaultModel};
+use butterfly_dataflow::coordinator::{
+    Admission, Overlap, PipelineConfig, ReplicaFaults, ServeConfig, Session, Traffic,
+};
+use butterfly_dataflow::util::json::{arr, num, obj, s, Json};
+use butterfly_dataflow::util::table::Table;
+use butterfly_dataflow::workloads::resolve_model;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    // ------------------------------------------------------------------
+    // Ladder 1: hardware faults, one network, nested fault sets.
+    // ------------------------------------------------------------------
+    let arch = ArchConfig::full();
+    let rungs: Vec<(&str, Option<FaultModel>)> = {
+        let mut one_dead = FaultModel::for_arch(&arch);
+        one_dead.kill_pe(5).expect("PE 5 exists");
+        let mut dead_slow = one_dead.clone();
+        dead_slow.degrade_link(9, 4).expect("link 9 exists");
+        let mut quartered = dead_slow.clone();
+        for pe in 0..9 {
+            quartered.kill_pe(pe).expect("PE exists");
+        }
+        vec![
+            ("healthy", None),
+            ("1 dead PE", Some(one_dead)),
+            ("1 dead PE + 4x link", Some(dead_slow)),
+            ("9 dead PEs + 4x link", Some(quartered)),
+        ]
+    };
+
+    let model = resolve_model("vit-256").expect("vit-256 is registered");
+    let batch = if quick { 1 } else { 8 };
+    let pipe = PipelineConfig::new(Overlap::Pipeline, 1);
+    let mut t = Table::new(
+        &format!("hardware degradation ladder (vit-256, batch {batch})"),
+        &["faults", "signature", "batch time", "vs healthy", "energy J"],
+    );
+    let mut hw_rows: Vec<Json> = Vec::new();
+    let mut hw_times: Vec<f64> = Vec::new();
+    for (name, fm) in &rungs {
+        let mut b = Session::builder().arch(arch.clone());
+        if let Some(fm) = fm {
+            b = b.faults(fm.clone());
+        }
+        let session = b.build();
+        let r = session
+            .run_network_with(&model, Some(batch), pipe)
+            .expect("faulty network simulates");
+        let sig = fm.as_ref().map(|f| f.signature()).unwrap_or_else(|| "-".to_string());
+        t.row(&[
+            name.to_string(),
+            sig.clone(),
+            format!("{:.3} ms", r.batch_time_s * 1e3),
+            format!("{:.2}x", r.batch_time_s / hw_times.first().copied().unwrap_or(r.batch_time_s)),
+            format!("{:.3}", r.energy_j),
+        ]);
+        hw_rows.push(obj(vec![
+            ("faults", s(name)),
+            ("signature", s(&sig)),
+            ("batch_time_s", num(r.batch_time_s)),
+            ("energy_j", num(r.energy_j)),
+            ("latency_ms", num(r.latency_ms)),
+        ]));
+        hw_times.push(r.batch_time_s);
+    }
+    t.print();
+    // The acceptance property: each rung strictly contains the previous
+    // rung's fault set, so batch time never improves along the ladder.
+    for w in hw_times.windows(2) {
+        assert!(
+            w[1] >= w[0] - 1e-12,
+            "degradation must be monotone along nested fault sets: {} -> {}",
+            w[0],
+            w[1]
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Ladder 2: replica failures under load, worsening MTBF.
+    // ------------------------------------------------------------------
+    let keys = vec!["vit-256".to_string(), "att:fft2d,ffn:bpmm*x2".to_string()];
+    let session = Session::builder().build();
+    let base = ServeConfig {
+        max_batch: 4,
+        max_wait_s: 2e-3,
+        arrays: 2,
+        queue_cap: 256,
+        overlap: Overlap::Pipeline,
+        admission: Admission::SloAware,
+        ..ServeConfig::default()
+    };
+    let mean_svc = keys
+        .iter()
+        .map(|k| {
+            let m = resolve_model(k).expect("bench classes resolve");
+            session
+                .run_network_with(&m, Some(base.max_batch), pipe)
+                .expect("bench classes simulate")
+                .batch_time_s
+        })
+        .sum::<f64>()
+        / keys.len() as f64;
+    let capacity = base.arrays as f64 * base.max_batch as f64 / mean_svc;
+    let rate = 0.8 * capacity;
+    let arrivals = if quick { 120.0 } else { 400.0 };
+    let traffic =
+        Traffic::poisson(&keys, rate, arrivals / rate, 42).expect("poisson traffic");
+    let deadline = 50.0 * mean_svc;
+
+    // MTBF shrinks rung by rung at fixed MTTR: expected availability
+    // mtbf/(mtbf+mttr) walks ~100% -> ~67%.
+    let mttr = 5.0 * mean_svc;
+    let fault_rungs: Vec<(&str, Option<ReplicaFaults>)> = vec![
+        ("none", None),
+        ("mtbf 50x svc", Some(ReplicaFaults::Process { mtbf_s: 50.0 * mean_svc, mttr_s: mttr, seed: 7 })),
+        ("mtbf 20x svc", Some(ReplicaFaults::Process { mtbf_s: 20.0 * mean_svc, mttr_s: mttr, seed: 7 })),
+        ("mtbf 10x svc", Some(ReplicaFaults::Process { mtbf_s: 10.0 * mean_svc, mttr_s: mttr, seed: 7 })),
+    ];
+    let mut t = Table::new(
+        &format!(
+            "serving under replica faults ({} + {}; {:.1} req/s offered, capacity {:.1})",
+            keys[0], keys[1], rate, capacity
+        ),
+        &[
+            "faults", "offered", "done", "rej", "shed", "timeout", "lost", "retries", "avail",
+            "goodput r/s", "degr cap r/s", "p99 ms",
+        ],
+    );
+    let mut points = Vec::new();
+    for (name, faults) in fault_rungs {
+        let cfg = ServeConfig {
+            faults,
+            deadline_s: Some(deadline),
+            ..base.clone()
+        };
+        let r = session.serve(&traffic, &cfg).expect("faulty serving simulation");
+        assert_eq!(
+            r.offered,
+            r.completed + r.rejected + r.shed + r.timed_out + r.lost,
+            "request conservation must hold under faults"
+        );
+        assert!(
+            (0.0..=1.0).contains(&r.availability),
+            "availability out of range: {}",
+            r.availability
+        );
+        assert!(
+            r.degraded_capacity_rps <= r.capacity_rps + 1e-9,
+            "degraded capacity cannot exceed the healthy bound"
+        );
+        t.row(&[
+            name.to_string(),
+            format!("{}", r.offered),
+            format!("{}", r.completed),
+            format!("{}", r.rejected),
+            format!("{}", r.shed),
+            format!("{}", r.timed_out),
+            format!("{}", r.lost),
+            format!("{}", r.retries),
+            format!("{:.1}%", 100.0 * r.availability),
+            format!("{:.1}", r.goodput_rps),
+            format!("{:.1}", r.degraded_capacity_rps),
+            format!("{:.3}", r.latency_p99_ms),
+        ]);
+        points.push(r);
+    }
+    t.print();
+    let cache = session.cache_stats();
+    println!(
+        "plan cache across the serving ladder: {} lowerings, {} stage hits, {} plan hits",
+        cache.lowerings, cache.stage_hits, cache.plan_hits
+    );
+
+    let doc = obj(vec![
+        ("bench", s("fault-tolerance")),
+        ("arch", s(session.arch_signature())),
+        ("hardware", arr(hw_rows)),
+        ("serving", arr(points.iter().map(|p| p.to_json()).collect())),
+    ]);
+    let path = "BENCH_faults.json";
+    std::fs::write(path, doc.render() + "\n").expect("write BENCH_faults.json");
+    println!("wrote {path}");
+}

@@ -26,6 +26,7 @@ fn main() {
         arrays: 1,
         queue_cap: 256,
         overlap: Overlap::Pipeline,
+        ..ServeConfig::default()
     };
     let session = Session::builder().build();
 

@@ -1,0 +1,417 @@
+//! Hardware fault injection: dead PEs, degraded NoC links, downed DDR
+//! channels.
+//!
+//! A [`FaultModel`] is a validated description of *which* hardware is
+//! broken on one concrete [`super::ArchConfig`] geometry.  It carries no
+//! policy: the lowering layer reacts by remapping butterfly nodes around
+//! dead PEs ([`crate::dfg::Mapping::fault_aware`]), and the simulator
+//! reacts by pricing degraded links and the reduced DDR bandwidth
+//! ([`crate::sim::SimOptions::faults`]).  Everything is default-off —
+//! a session without a fault model simulates the perfect machine
+//! bit-for-bit identically to before this module existed.
+//!
+//! Construction is validating: a model that kills every PE or downs
+//! every DDR channel is rejected up front with a structured error, so
+//! later layers never have to panic on an unmappable machine.  Models
+//! are geometry-bound; [`FaultModel::validate`] re-checks the binding
+//! when a model meets a session built for a different preset.
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Rng;
+
+use super::ArchConfig;
+
+/// A validated set of injected hardware faults for one arch geometry.
+///
+/// Invariants (enforced by every constructor and mutator):
+///
+/// * at least one PE is alive;
+/// * at least one DDR channel is up;
+/// * every degraded-link multiplier is `>= 1` (1 = healthy);
+/// * indices are in range for the bound geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultModel {
+    num_pes: usize,
+    ddr_channels: usize,
+    dead: Vec<bool>,
+    /// Per directed-link latency/occupancy multiplier (`pe * 4 + dir`
+    /// encoding, matching the simulator's link table); 1 = healthy.
+    link_mult: Vec<u32>,
+    ddr_down: usize,
+}
+
+impl FaultModel {
+    /// An all-healthy model bound to `arch`'s geometry.
+    pub fn for_arch(arch: &ArchConfig) -> Self {
+        FaultModel {
+            num_pes: arch.num_pes(),
+            ddr_channels: arch.ddr_channels,
+            dead: vec![false; arch.num_pes()],
+            link_mult: vec![1; arch.num_pes() * 4],
+            ddr_down: 0,
+        }
+    }
+
+    /// Seeded random fault set: `dead_pes` distinct dead PEs,
+    /// `degraded_links` distinct links slowed by `link_mult`, and
+    /// `ddr_down` downed DDR channels.  The same `(arch, seed, counts)`
+    /// always produces the same model.
+    pub fn seeded(
+        arch: &ArchConfig,
+        seed: u64,
+        dead_pes: usize,
+        degraded_links: usize,
+        link_mult: u32,
+        ddr_down: usize,
+    ) -> Result<Self> {
+        let mut fm = Self::for_arch(arch);
+        let mut rng = Rng::new(seed);
+        ensure!(
+            dead_pes < fm.num_pes,
+            "fault set kills every PE ({dead_pes} dead of {} total)",
+            fm.num_pes
+        );
+        let mut killed = 0;
+        while killed < dead_pes {
+            let p = rng.below(fm.num_pes as u64) as usize;
+            if !fm.dead[p] {
+                fm.kill_pe(p)?;
+                killed += 1;
+            }
+        }
+        let links = fm.link_mult.len();
+        ensure!(
+            degraded_links <= links,
+            "cannot degrade {degraded_links} links: the mesh has only {links}"
+        );
+        let mut degraded = 0;
+        while degraded < degraded_links {
+            let l = rng.below(links as u64) as usize;
+            if fm.link_mult[l] == 1 {
+                fm.degrade_link(l, link_mult)?;
+                degraded += 1;
+            }
+        }
+        fm.down_ddr(ddr_down)?;
+        Ok(fm)
+    }
+
+    /// Parse a fault spec string (the CLI `--faults` grammar when the
+    /// value is not a file path): comma-separated `key=value` tokens.
+    ///
+    /// * `pe=<idx>` — kill one PE (repeatable);
+    /// * `link=<idx>` — degrade one directed link (repeatable);
+    /// * `mult=<m>` — multiplier for degraded links (default 4);
+    /// * `ddr=<n>` — down `n` DDR channels;
+    /// * `seed=<s>,pes=<n>,links=<n>` — seeded random selection of `n`
+    ///   dead PEs / degraded links on top of any explicit entries.
+    pub fn parse(spec: &str, arch: &ArchConfig) -> Result<Self> {
+        let mut fm = Self::for_arch(arch);
+        let mut seed: Option<u64> = None;
+        let mut rand_pes = 0usize;
+        let mut rand_links = 0usize;
+        let mut mult = 4u32;
+        let mut explicit_links: Vec<usize> = Vec::new();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, val) = tok.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "fault spec token '{tok}' is not key=value \
+                     (keys: pe, link, mult, ddr, seed, pes, links)"
+                )
+            })?;
+            let uint = |name: &str| -> Result<usize> {
+                val.parse().map_err(|_| {
+                    anyhow::anyhow!("fault spec {name}= expects an integer, got '{val}'")
+                })
+            };
+            match key {
+                "pe" => fm.kill_pe(uint("pe")?)?,
+                "link" => explicit_links.push(uint("link")?),
+                "mult" => {
+                    mult = uint("mult")? as u32;
+                    ensure!(mult >= 1, "fault spec mult= must be >= 1 (got {mult})");
+                }
+                "ddr" => fm.down_ddr(uint("ddr")?)?,
+                "seed" => seed = Some(uint("seed")? as u64),
+                "pes" => rand_pes = uint("pes")?,
+                "links" => rand_links = uint("links")?,
+                other => anyhow::bail!(
+                    "unknown fault spec key '{other}' \
+                     (keys: pe, link, mult, ddr, seed, pes, links)"
+                ),
+            }
+        }
+        for l in explicit_links {
+            fm.degrade_link(l, mult)?;
+        }
+        if rand_pes > 0 || rand_links > 0 {
+            let seed = seed.ok_or_else(|| {
+                anyhow::anyhow!("fault spec pes=/links= need seed=<s> for the random draw")
+            })?;
+            let rand =
+                Self::seeded(arch, seed, rand_pes, rand_links, mult, 0)?;
+            for p in 0..fm.num_pes {
+                if rand.dead[p] {
+                    fm.kill_pe(p)?;
+                }
+            }
+            for l in 0..fm.link_mult.len() {
+                if rand.link_mult[l] > 1 {
+                    fm.degrade_link(l, rand.link_mult[l])?;
+                }
+            }
+        }
+        ensure!(
+            !fm.is_healthy(),
+            "fault spec '{spec}' injects no faults (use pe=, link=, ddr= or seed=/pes=/links=)"
+        );
+        Ok(fm)
+    }
+
+    /// Kill one PE.  Rejects out-of-range indices and the kill that
+    /// would leave zero live PEs.
+    pub fn kill_pe(&mut self, pe: usize) -> Result<()> {
+        ensure!(
+            pe < self.num_pes,
+            "fault set names PE {pe} but the mesh has {} PEs",
+            self.num_pes
+        );
+        if !self.dead[pe] {
+            ensure!(
+                self.live_count() > 1,
+                "fault set kills every PE ({} of {})",
+                self.num_pes,
+                self.num_pes
+            );
+            self.dead[pe] = true;
+        }
+        Ok(())
+    }
+
+    /// Slow one directed link by `mult` (serialized transfer and hop
+    /// latency both scale).
+    pub fn degrade_link(&mut self, link: usize, mult: u32) -> Result<()> {
+        ensure!(
+            link < self.link_mult.len(),
+            "fault set names link {link} but the mesh has {} directed links",
+            self.link_mult.len()
+        );
+        ensure!(mult >= 1, "link multiplier must be >= 1 (got {mult})");
+        self.link_mult[link] = self.link_mult[link].max(mult);
+        Ok(())
+    }
+
+    /// Down `channels` DDR channels (aggregate bandwidth scales by the
+    /// surviving fraction).  At least one channel must stay up.
+    pub fn down_ddr(&mut self, channels: usize) -> Result<()> {
+        let down = self.ddr_down.max(channels);
+        ensure!(
+            down < self.ddr_channels,
+            "fault set downs every DDR channel ({down} of {})",
+            self.ddr_channels
+        );
+        self.ddr_down = down;
+        Ok(())
+    }
+
+    /// Re-check the geometry binding against a (possibly different)
+    /// arch.  A model parsed for `full` must not silently misprice a
+    /// `scaled128` session.
+    pub fn validate(&self, arch: &ArchConfig) -> Result<()> {
+        ensure!(
+            self.num_pes == arch.num_pes() && self.ddr_channels == arch.ddr_channels,
+            "fault model was built for {} PEs / {} DDR channels but this \
+             architecture has {} / {}",
+            self.num_pes,
+            self.ddr_channels,
+            arch.num_pes(),
+            arch.ddr_channels
+        );
+        ensure!(
+            self.live_count() >= 1,
+            "fault set kills every PE ({} of {})",
+            self.num_pes,
+            self.num_pes
+        );
+        Ok(())
+    }
+
+    /// Is PE `pe` dead?
+    pub fn pe_dead(&self, pe: usize) -> bool {
+        self.dead.get(pe).copied().unwrap_or(false)
+    }
+
+    /// Number of live PEs.
+    pub fn live_count(&self) -> usize {
+        self.dead.iter().filter(|&&d| !d).count()
+    }
+
+    /// Live PE indices, ascending.
+    pub fn live_pes(&self) -> Vec<u16> {
+        (0..self.num_pes).filter(|&p| !self.dead[p]).map(|p| p as u16).collect()
+    }
+
+    /// Occupancy/latency multiplier of directed link `link` (1 = healthy).
+    #[inline]
+    pub fn link_multiplier(&self, link: usize) -> u64 {
+        self.link_mult.get(link).copied().unwrap_or(1) as u64
+    }
+
+    /// Downed DDR channel count.
+    pub fn ddr_down(&self) -> usize {
+        self.ddr_down
+    }
+
+    /// Surviving fraction of DDR bandwidth, in `(0, 1]`.
+    pub fn ddr_scale(&self) -> f64 {
+        (self.ddr_channels - self.ddr_down) as f64 / self.ddr_channels as f64
+    }
+
+    /// True when the model injects nothing (equivalent to no model).
+    pub fn is_healthy(&self) -> bool {
+        self.ddr_down == 0
+            && !self.dead.iter().any(|&d| d)
+            && self.link_mult.iter().all(|&m| m == 1)
+    }
+
+    /// Stable, complete cache-key signature.  Everything that changes
+    /// simulated numbers is spelled out field by field (the same
+    /// contract as [`crate::sim::SimOptions::signature`]), so fault
+    /// configurations can never alias in the plan cache, the structural
+    /// store or the autotune journal.
+    pub fn signature(&self) -> String {
+        let dead: Vec<String> =
+            (0..self.num_pes).filter(|&p| self.dead[p]).map(|p| p.to_string()).collect();
+        let links: Vec<String> = self
+            .link_mult
+            .iter()
+            .enumerate()
+            .filter(|&(_, &m)| m > 1)
+            .map(|(l, &m)| format!("{l}x{m}"))
+            .collect();
+        format!(
+            "fault[pes{}|dead={}|links={}|ddr{}]",
+            self.num_pes,
+            dead.join(";"),
+            links.join(";"),
+            self.ddr_down
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_model_is_a_no_op() {
+        let arch = ArchConfig::full();
+        let fm = FaultModel::for_arch(&arch);
+        assert!(fm.is_healthy());
+        assert_eq!(fm.live_count(), 16);
+        assert_eq!(fm.ddr_scale(), 1.0);
+        assert_eq!(fm.link_multiplier(7), 1);
+        fm.validate(&arch).unwrap();
+    }
+
+    #[test]
+    fn constructors_enforce_invariants() {
+        let arch = ArchConfig::full();
+        let mut fm = FaultModel::for_arch(&arch);
+        assert_eq!(
+            fm.kill_pe(99).unwrap_err().to_string(),
+            "fault set names PE 99 but the mesh has 16 PEs"
+        );
+        for p in 0..15 {
+            fm.kill_pe(p).unwrap();
+        }
+        assert_eq!(
+            fm.kill_pe(15).unwrap_err().to_string(),
+            "fault set kills every PE (16 of 16)"
+        );
+        assert_eq!(fm.live_count(), 1);
+
+        let mut fm = FaultModel::for_arch(&arch);
+        assert!(fm.degrade_link(1000, 4).is_err());
+        assert!(fm.degrade_link(3, 0).is_err());
+        fm.degrade_link(3, 4).unwrap();
+        assert_eq!(fm.link_multiplier(3), 4);
+
+        // full() has 2 DDR channels: one may fail, both may not.
+        fm.down_ddr(1).unwrap();
+        assert_eq!(fm.ddr_scale(), 0.5);
+        assert_eq!(
+            fm.down_ddr(2).unwrap_err().to_string(),
+            "fault set downs every DDR channel (2 of 2)"
+        );
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_counts_exact() {
+        let arch = ArchConfig::full();
+        let a = FaultModel::seeded(&arch, 42, 3, 5, 8, 0).unwrap();
+        let b = FaultModel::seeded(&arch, 42, 3, 5, 8, 0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.live_count(), 13);
+        assert_eq!(a.link_mult.iter().filter(|&&m| m > 1).count(), 5);
+        let c = FaultModel::seeded(&arch, 43, 3, 5, 8, 0).unwrap();
+        assert_ne!(a, c, "different seed, different draw");
+    }
+
+    #[test]
+    fn parse_grammar_round_trips_and_rejects_garbage() {
+        let arch = ArchConfig::full();
+        let fm = FaultModel::parse("pe=3,pe=7,link=12,mult=8,ddr=0", &arch).unwrap();
+        assert!(fm.pe_dead(3) && fm.pe_dead(7) && !fm.pe_dead(0));
+        assert_eq!(fm.link_multiplier(12), 8);
+        let fm = FaultModel::parse("seed=9,pes=2,links=3", &arch).unwrap();
+        assert_eq!(fm.live_count(), 14);
+
+        let err = FaultModel::parse("pes=2", &arch).unwrap_err().to_string();
+        assert_eq!(err, "fault spec pes=/links= need seed=<s> for the random draw");
+        let err = FaultModel::parse("bogus=1", &arch).unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "unknown fault spec key 'bogus' (keys: pe, link, mult, ddr, seed, pes, links)"
+        );
+        let err = FaultModel::parse("pe", &arch).unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "fault spec token 'pe' is not key=value (keys: pe, link, mult, ddr, seed, pes, links)"
+        );
+        let err = FaultModel::parse("mult=4", &arch).unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "fault spec 'mult=4' injects no faults (use pe=, link=, ddr= or seed=/pes=/links=)"
+        );
+    }
+
+    #[test]
+    fn validate_catches_geometry_mismatch() {
+        let full = ArchConfig::full();
+        let scaled = ArchConfig::scaled_128();
+        let fm = FaultModel::seeded(&full, 1, 2, 0, 1, 0).unwrap();
+        fm.validate(&full).unwrap();
+        let err = fm.validate(&scaled).unwrap_err().to_string();
+        assert!(
+            err.starts_with("fault model was built for 16 PEs"),
+            "unexpected: {err}"
+        );
+    }
+
+    #[test]
+    fn signature_is_complete_and_order_stable() {
+        let arch = ArchConfig::full();
+        let mut fm = FaultModel::for_arch(&arch);
+        fm.kill_pe(5).unwrap();
+        fm.kill_pe(1).unwrap();
+        fm.degrade_link(9, 4).unwrap();
+        assert_eq!(fm.signature(), "fault[pes16|dead=1;5|links=9x4|ddr0]");
+        let mut other = FaultModel::for_arch(&arch);
+        other.kill_pe(1).unwrap();
+        other.kill_pe(5).unwrap();
+        other.degrade_link(9, 2).unwrap();
+        assert_ne!(fm.signature(), other.signature(), "multiplier is part of the key");
+    }
+}

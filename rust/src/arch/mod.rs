@@ -12,6 +12,10 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
+pub mod fault;
+
+pub use fault::FaultModel;
+
 /// Function-unit kinds inside a PE (Fig. 8 decoupled units).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum UnitKind {

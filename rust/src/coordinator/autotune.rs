@@ -599,32 +599,61 @@ fn bounds_dominated(a: &Metrics, lb: &Bounds) -> bool {
 /// a resumed sweep looks up exactly the keys it was going to evaluate
 /// and ignores everything else (stale entries from other grids are
 /// harmless), appends are flushed per entry so a killed sweep loses at
-/// most the evaluation in flight, and unparseable tail lines from a
-/// crash are skipped on load.
+/// most the evaluation in flight, and torn records from a crash — tail
+/// or mid-file — are skipped, counted ([`Journal::torn`]) and warned
+/// about once per open, while a header naming a different format or
+/// version fails loudly instead of silently re-evaluating the grid.
 pub struct Journal {
     entries: HashMap<String, Metrics>,
     sink: Option<Mutex<std::fs::File>>,
     loaded: usize,
+    torn: usize,
 }
 
 impl Journal {
     /// Checkpoint-free journal (unit tests, throwaway sweeps).
     pub fn in_memory() -> Journal {
-        Journal { entries: HashMap::new(), sink: None, loaded: 0 }
+        Journal { entries: HashMap::new(), sink: None, loaded: 0, torn: 0 }
     }
 
     /// Open `path` for checkpointing.  With `resume`, completed entries
     /// are loaded and replayed; otherwise the file is truncated.
     pub fn open(path: &str, resume: bool) -> Result<Journal> {
         let mut entries = HashMap::new();
+        let mut torn = 0usize;
         if resume {
             if let Ok(text) = std::fs::read_to_string(path) {
-                for line in text.lines() {
-                    let Ok(j) = json::parse(line) else { continue };
-                    let Some(key) = j.get("key").and_then(Json::as_str) else { continue };
-                    if let Some(m) = Metrics::from_json(&j) {
-                        entries.insert(key.to_string(), m);
+                let mut lines = text.lines().peekable();
+                if let Some(&first) = lines.peek() {
+                    if super::structural::check_jsonl_header(
+                        first,
+                        path,
+                        "journal",
+                        "bfdf-pareto",
+                        "store",
+                        1.0,
+                    )? {
+                        lines.next();
                     }
+                }
+                for line in lines {
+                    let torn_record = (|| {
+                        let j = json::parse(line).ok()?;
+                        let key = j.get("key").and_then(Json::as_str)?;
+                        let m = Metrics::from_json(&j)?;
+                        entries.insert(key.to_string(), m);
+                        Some(())
+                    })()
+                    .is_none();
+                    if torn_record {
+                        torn += 1;
+                    }
+                }
+                if torn > 0 {
+                    eprintln!(
+                        "warning: journal '{path}': skipped {torn} torn or malformed \
+                         record(s) left by a crashed run"
+                    );
                 }
             }
         }
@@ -643,12 +672,17 @@ impl Journal {
             writeln!(file, "{}", header.render())
                 .with_context(|| format!("writing journal header to '{path}'"))?;
         }
-        Ok(Journal { entries, sink: Some(Mutex::new(file)), loaded })
+        Ok(Journal { entries, sink: Some(Mutex::new(file)), loaded, torn })
     }
 
     /// Entries loaded from disk at open time.
     pub fn loaded(&self) -> usize {
         self.loaded
+    }
+
+    /// Torn or malformed records skipped while loading at open time.
+    pub fn torn(&self) -> usize {
+        self.torn
     }
 
     fn lookup(&self, key: &str) -> Option<Metrics> {

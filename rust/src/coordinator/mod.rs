@@ -19,6 +19,11 @@
 //! classes, a dynamic batcher (max-batch/max-wait), and a
 //! discrete-event loop across replica arrays producing SLO percentiles
 //! ([`Session::serve`], `Report::Serving`, `bfdf serve-sim`).  The
+//! serving loop also degrades gracefully under failures: seeded or
+//! scripted replica up/down schedules ([`ReplicaFaults`]), capped
+//! exponential-backoff retries for batches killed in flight,
+//! per-request deadlines, and SLO-aware admission ([`Admission`]) —
+//! all default-off, so fault-free runs stay byte-identical.  The
 //! design-space autotuner ([`autotune`]) closes the loop: a
 //! [`SearchSpace`] over `ArchConfig` knobs, sound shard/roofline
 //! pruning, a resumable journal-checkpointed parallel sweep through
@@ -55,7 +60,10 @@ pub use experiment::{ExperimentConfig, KernelResult};
 pub use network::{BlockResult, DenseResult, LayerResult, NetworkResult};
 pub use pipeline::{Overlap, OverlapEstimate, PipelineConfig, StageCost};
 pub use report::{Report, SweepRow};
-pub use serve::{Arrival, ClassServeStats, ServeConfig, ServeResult, Traffic};
+pub use serve::{
+    Admission, Arrival, ClassServeStats, ReplicaEvent, ReplicaFaults, ServeConfig, ServeResult,
+    Traffic,
+};
 pub use session::{CacheStats, Session, SessionBuilder};
 pub use streaming::StreamResult;
 pub use structural::{StageMeasure, StructuralKey, StructuralStore};

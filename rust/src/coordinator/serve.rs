@@ -42,6 +42,18 @@
 //! three are deterministic, so a fixed traffic seed reproduces the
 //! whole load/latency curve bit-for-bit.
 //!
+//! **Fault tolerance** (all default-off): replica arrays can fail and
+//! recover on a seeded MTBF/MTTR process or a scripted trace
+//! ([`ReplicaFaults`]); batches in flight on a failed replica are lost
+//! and their requests retried with capped exponential backoff up to
+//! [`ServeConfig::max_retries`]; requests can carry a deadline
+//! ([`ServeConfig::deadline_s`], stale queued work cancels at batch
+//! formation); and admission is pluggable ([`Admission`]) — FIFO
+//! tail-drop or SLO-aware shedding of the request least likely to meet
+//! its deadline.  With none of these configured the event loop runs
+//! the original fault-free path *verbatim*, keeping every pre-fault
+//! artifact byte-identical.
+//!
 //! ```no_run
 //! use butterfly_dataflow::coordinator::{Session, serve::{ServeConfig, Traffic}};
 //!
@@ -65,6 +77,185 @@ use crate::workloads::{resolve_model, spec::ModelSpec};
 use super::pipeline::{Overlap, PipelineConfig};
 use super::session::Session;
 
+/// Admission policy for arrivals that find the queue full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Blind tail-drop: the newcomer bounces off the full queue.
+    Fifo,
+    /// Shed the queued-or-arriving request *least likely to meet its
+    /// deadline* (estimated dispatch delay from queue position plus the
+    /// memoized full-batch service time of its class), admitting the
+    /// newcomer if some queued request is more doomed.  Requires
+    /// [`ServeConfig::deadline_s`]; without a deadline there is no
+    /// slack to rank by and the policy degrades to [`Admission::Fifo`].
+    SloAware,
+}
+
+impl Admission {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(Admission::Fifo),
+            "slo" | "slo-aware" => Ok(Admission::SloAware),
+            other => {
+                anyhow::bail!("unknown admission policy '{other}' (policies: fifo, slo-aware)")
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Admission::Fifo => "fifo",
+            Admission::SloAware => "slo-aware",
+        }
+    }
+}
+
+/// One replica up/down transition at an absolute time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaEvent {
+    pub t_s: f64,
+    /// Replica array index (`< ServeConfig::arrays`).
+    pub replica: usize,
+    /// `false` = the replica fails at `t_s`; `true` = it recovers.
+    pub up: bool,
+}
+
+/// Replica failure/recovery source: a seeded stochastic process or an
+/// explicit scripted trace (mirroring the traffic-trace JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplicaFaults {
+    /// Each replica alternates exponential up-times (mean `mtbf_s`) and
+    /// repair times (mean `mttr_s`) from its own seeded stream, so a
+    /// fixed seed reproduces the whole failure schedule bit-for-bit.
+    Process { mtbf_s: f64, mttr_s: f64, seed: u64 },
+    /// Scripted transitions (any order; stably sorted by time).
+    Trace(Vec<ReplicaEvent>),
+}
+
+impl ReplicaFaults {
+    /// Parse a JSON fault-trace document (see the README "Fault
+    /// tolerance" section):
+    ///
+    /// ```json
+    /// {"events": [{"t": 0.050, "replica": 0, "up": false},
+    ///             {"t": 0.120, "replica": 0, "up": true}]}
+    /// ```
+    ///
+    /// `t` is the transition time in seconds; `replica` indexes the
+    /// replica arrays; `up: false` fails the replica, `up: true`
+    /// recovers it.
+    pub fn from_trace_str(text: &str) -> Result<Self> {
+        let doc = json::parse(text)?;
+        let items = doc
+            .req("events")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("fault trace \"events\" must be an array"))?;
+        ensure!(!items.is_empty(), "fault trace has no events");
+        let mut events = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            let t = item
+                .req_f64("t")
+                .map_err(|e| anyhow::anyhow!("fault event {i}: {e}"))?;
+            ensure!(
+                t.is_finite() && t >= 0.0,
+                "fault event {i}: time must be finite and >= 0 (got {t})"
+            );
+            let replica = item
+                .req("replica")
+                .and_then(|j| {
+                    j.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("JSON key 'replica' is not a number"))
+                })
+                .map_err(|e| anyhow::anyhow!("fault event {i}: {e}"))?;
+            let up = item
+                .req("up")
+                .and_then(|j| {
+                    j.as_bool()
+                        .ok_or_else(|| anyhow::anyhow!("JSON key 'up' is not a boolean"))
+                })
+                .map_err(|e| anyhow::anyhow!("fault event {i}: {e}"))?;
+            events.push(ReplicaEvent { t_s: t, replica, up });
+        }
+        Ok(ReplicaFaults::Trace(events))
+    }
+
+    /// [`ReplicaFaults::from_trace_str`] over a file path.
+    pub fn from_trace_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read fault trace file '{path}': {e}"))?;
+        Self::from_trace_str(&text)
+    }
+}
+
+/// Expand a fault source into a sorted transition list for the event
+/// loop, validated against the replica count.
+fn expand_fault_events(
+    faults: &ReplicaFaults,
+    arrays: usize,
+    duration_s: f64,
+) -> Result<Vec<ReplicaEvent>> {
+    let mut events = match faults {
+        ReplicaFaults::Trace(evs) => {
+            for e in evs {
+                ensure!(
+                    e.t_s.is_finite() && e.t_s >= 0.0,
+                    "fault event time must be finite and >= 0 (got {})",
+                    e.t_s
+                );
+                ensure!(
+                    e.replica < arrays,
+                    "fault trace references replica {} but the run has {} replica arrays",
+                    e.replica,
+                    arrays
+                );
+            }
+            evs.clone()
+        }
+        ReplicaFaults::Process { mtbf_s, mttr_s, seed } => {
+            ensure!(
+                *mtbf_s > 0.0 && mtbf_s.is_finite(),
+                "replica MTBF must be positive and finite (got {mtbf_s})"
+            );
+            ensure!(
+                *mttr_s > 0.0 && mttr_s.is_finite(),
+                "replica MTTR must be positive and finite (got {mttr_s})"
+            );
+            // Generate past the arrival horizon so the drain phase still
+            // sees recoveries; events beyond the makespan are inert.
+            let horizon = duration_s * 4.0 + 1.0;
+            let mut evs = Vec::new();
+            for r in 0..arrays {
+                // One independent stream per replica (seed mixed with
+                // the replica index) so adding a replica never perturbs
+                // the failure schedule of the others.
+                let mut rng =
+                    Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(r as u64 + 1));
+                let mut t = 0.0f64;
+                loop {
+                    t += rng.exp(1.0 / mtbf_s);
+                    if t >= horizon {
+                        break;
+                    }
+                    evs.push(ReplicaEvent { t_s: t, replica: r, up: false });
+                    t += rng.exp(1.0 / mttr_s);
+                    if t >= horizon {
+                        break;
+                    }
+                    evs.push(ReplicaEvent { t_s: t, replica: r, up: true });
+                }
+            }
+            evs
+        }
+    };
+    events.sort_by(|a, b| {
+        a.t_s
+            .partial_cmp(&b.t_s)
+            .expect("finite fault times")
+            .then(a.replica.cmp(&b.replica))
+    });
+    Ok(events)
+}
+
 /// Dynamic-batcher and serving-loop knobs.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -83,6 +274,22 @@ pub struct ServeConfig {
     /// Per-batch streaming overlap model (the paper-faithful default is
     /// [`Overlap::Pipeline`], matching the CLI).
     pub overlap: Overlap,
+    /// Policy for arrivals that find the queue full.
+    pub admission: Admission,
+    /// End-to-end deadline per request (s): requests still queued past
+    /// it are cancelled (`timed_out`) at the next dispatch instead of
+    /// wasting a batch slot.  `None` disables deadlines.
+    pub deadline_s: Option<f64>,
+    /// Replica failure/recovery schedule; `None` (the default) keeps
+    /// every replica up and the event loop on the exact pre-fault path.
+    pub faults: Option<ReplicaFaults>,
+    /// Service attempts per request before it counts as `lost` (a
+    /// request killed mid-batch by a replica failure re-enqueues with
+    /// capped exponential backoff up to this many times).
+    pub max_retries: u32,
+    /// Base retry backoff (s); attempt `n` waits `2^(n-1)` times this,
+    /// capped at 64x.
+    pub retry_backoff_s: f64,
 }
 
 impl Default for ServeConfig {
@@ -93,6 +300,11 @@ impl Default for ServeConfig {
             arrays: 1,
             queue_cap: 256,
             overlap: Overlap::Pipeline,
+            admission: Admission::Fifo,
+            deadline_s: None,
+            faults: None,
+            max_retries: 3,
+            retry_backoff_s: 5e-3,
         }
     }
 }
@@ -219,6 +431,13 @@ pub struct ClassServeStats {
     pub offered: u64,
     pub rejected: u64,
     pub completed: u64,
+    /// Cancelled in queue past their deadline.
+    pub timed_out: u64,
+    /// Dropped by [`Admission::SloAware`] load shedding.
+    pub shed: u64,
+    /// Admitted but never completed: killed by replica failures past
+    /// the retry budget, or stranded when no replica ever recovered.
+    pub lost: u64,
     pub latency_p50_ms: f64,
     pub latency_p99_ms: f64,
 }
@@ -267,14 +486,44 @@ pub struct ServeResult {
     pub max_wait_s: f64,
     pub queue_cap: usize,
     pub overlap: Overlap,
+    /// Admission policy the run used.
+    pub admission: Admission,
+    /// Per-request deadline, if any.
+    pub deadline_s: Option<f64>,
+    /// Whether a replica fault schedule was configured (distinct from
+    /// "any fault fired": a quiet schedule still flips the loop onto
+    /// the robustness path and is reported as such).
+    pub faults_configured: bool,
+    /// Requests cancelled in queue past their deadline.
+    pub timed_out: u64,
+    /// Requests dropped by SLO-aware load shedding.
+    pub shed: u64,
+    /// Requests admitted but never completed (replica failures).
+    pub lost: u64,
+    /// Re-enqueues after a replica failure killed an in-flight batch.
+    pub retries: u64,
+    /// Up replica-seconds / (arrays x makespan); 1.0 without faults.
+    pub availability: f64,
+    /// `capacity_rps` scaled by availability: the ceiling goodput can
+    /// actually reach given the replica-seconds that existed.
+    pub degraded_capacity_rps: f64,
     pub classes: Vec<ClassServeStats>,
 }
 
 impl ServeResult {
+    /// True when any robustness feature was *configured* (faults, a
+    /// non-FIFO admission policy, or deadlines).  Gates serialization
+    /// of the robustness block on configuration — not outcomes — so a
+    /// fault-free run stays byte-identical to the pre-fault format.
+    pub fn robustness_on(&self) -> bool {
+        self.faults_configured || self.admission != Admission::Fifo || self.deadline_s.is_some()
+    }
+
     /// JSON view (one point of `Report::Serving`).
     pub fn to_json(&self) -> Json {
         use crate::util::json::{arr, num, obj, s};
-        obj(vec![
+        let robust = self.robustness_on();
+        let mut pairs = vec![
             ("offered_rate_rps", num(self.offered_rate_rps)),
             ("duration_s", num(self.duration_s)),
             ("offered", num(self.offered as f64)),
@@ -303,25 +552,44 @@ impl ServeResult {
             ("max_wait_ms", num(self.max_wait_s * 1e3)),
             ("queue_cap", num(self.queue_cap as f64)),
             ("overlap", s(self.overlap.name())),
-            (
-                "classes",
-                arr(self
-                    .classes
-                    .iter()
-                    .map(|c| {
-                        obj(vec![
-                            ("name", s(&c.name)),
-                            ("spec", s(&c.spec)),
-                            ("offered", num(c.offered as f64)),
-                            ("rejected", num(c.rejected as f64)),
-                            ("completed", num(c.completed as f64)),
-                            ("latency_p50_ms", num(c.latency_p50_ms)),
-                            ("latency_p99_ms", num(c.latency_p99_ms)),
-                        ])
-                    })
-                    .collect()),
-            ),
-        ])
+        ];
+        if robust {
+            pairs.push(("admission", s(self.admission.name())));
+            if let Some(dl) = self.deadline_s {
+                pairs.push(("deadline_ms", num(dl * 1e3)));
+            }
+            pairs.push(("timed_out", num(self.timed_out as f64)));
+            pairs.push(("shed", num(self.shed as f64)));
+            pairs.push(("lost", num(self.lost as f64)));
+            pairs.push(("retries", num(self.retries as f64)));
+            pairs.push(("availability", num(self.availability)));
+            pairs.push(("degraded_capacity_rps", num(self.degraded_capacity_rps)));
+        }
+        pairs.push((
+            "classes",
+            arr(self
+                .classes
+                .iter()
+                .map(|c| {
+                    let mut fields = vec![
+                        ("name", s(&c.name)),
+                        ("spec", s(&c.spec)),
+                        ("offered", num(c.offered as f64)),
+                        ("rejected", num(c.rejected as f64)),
+                        ("completed", num(c.completed as f64)),
+                    ];
+                    if robust {
+                        fields.push(("timed_out", num(c.timed_out as f64)));
+                        fields.push(("shed", num(c.shed as f64)));
+                        fields.push(("lost", num(c.lost as f64)));
+                    }
+                    fields.push(("latency_p50_ms", num(c.latency_p50_ms)));
+                    fields.push(("latency_p99_ms", num(c.latency_p99_ms)));
+                    obj(fields)
+                })
+                .collect()),
+        ));
+        obj(pairs)
     }
 }
 
@@ -346,6 +614,17 @@ struct LoopStats {
     class_rejected: Vec<u64>,
     class_completed: Vec<u64>,
     class_latency_ms: Vec<Summary>,
+    // Robustness counters: all zero on the fault-free loop.
+    timed_out: u64,
+    shed: u64,
+    lost: u64,
+    retries: u64,
+    class_timed_out: Vec<u64>,
+    class_shed: Vec<u64>,
+    class_lost: Vec<u64>,
+    /// Up replica-seconds accumulated by the faulty loop (unused — and
+    /// zero — on the fault-free loop, where availability is 1.0).
+    up_s: f64,
 }
 
 impl LoopStats {
@@ -369,12 +648,43 @@ impl LoopStats {
             class_rejected: vec![0; nclasses],
             class_completed: vec![0; nclasses],
             class_latency_ms: vec![Summary::new(); nclasses],
+            timed_out: 0,
+            shed: 0,
+            lost: 0,
+            retries: 0,
+            class_timed_out: vec![0; nclasses],
+            class_shed: vec![0; nclasses],
+            class_lost: vec![0; nclasses],
+            up_s: 0.0,
         }
     }
 
     fn sample_depth(&mut self, queued: usize) {
         self.depth.push(queued as f64);
         self.depth_max = self.depth_max.max(queued);
+    }
+
+    /// Every offered request must reach exactly one terminal state —
+    /// completed, rejected, shed, timed out, or lost.  Both event loops
+    /// check this per class before returning (debug builds), so any
+    /// accounting leak fails the test suite instead of skewing goodput.
+    fn assert_conservation(&self) {
+        for c in 0..self.class_offered.len() {
+            debug_assert_eq!(
+                self.class_offered[c],
+                self.class_completed[c]
+                    + self.class_rejected[c]
+                    + self.class_shed[c]
+                    + self.class_timed_out[c]
+                    + self.class_lost[c],
+                "class {c} request accounting leak"
+            );
+        }
+        debug_assert_eq!(
+            self.offered,
+            self.completed + self.rejected + self.shed + self.timed_out + self.lost,
+            "total request accounting leak"
+        );
     }
 }
 
@@ -486,6 +796,401 @@ fn run_loop(
             }
         }
     }
+    st.assert_conservation();
+    Ok(st)
+}
+
+/// One queued request on the robustness path: the original arrival
+/// time (latency and deadlines always measure from it) plus how many
+/// service attempts replica failures have already killed.
+#[derive(Debug, Clone, Copy)]
+struct Req {
+    arrive: f64,
+    retries: u32,
+}
+
+/// A batch executing on one replica (the robustness loop needs
+/// completion as an explicit event, because a failure can kill it
+/// first).
+struct InFlight {
+    class: usize,
+    start: f64,
+    done: f64,
+    svc_s: f64,
+    energy_j: f64,
+    reqs: Vec<Req>,
+}
+
+/// The robustness event loop: the same deterministic discrete-event
+/// skeleton as [`run_loop`], extended with replica up/down transitions,
+/// in-flight batch loss with capped-exponential-backoff retries,
+/// per-request deadlines (lazy cancellation at batch formation) and
+/// pluggable admission.  It runs *only* when a robustness feature is
+/// configured — the fault-free path stays on [`run_loop`] verbatim,
+/// which is what keeps pre-fault artifacts byte-identical (f64
+/// accumulation order and all).
+///
+/// Event priority at equal times: completions, then fault transitions,
+/// then arrivals (originals before retries), then dispatches — so a
+/// batch finishing exactly when its replica dies still completes, and
+/// a request arriving at a dispatch instant still joins the batch.
+fn run_loop_faulty(
+    arrivals: &[Arrival],
+    nclasses: usize,
+    cfg: &ServeConfig,
+    fault_events: &[ReplicaEvent],
+    service: &mut dyn FnMut(usize, usize) -> Result<(f64, f64)>,
+) -> Result<LoopStats> {
+    /// Retry delay doubles per attempt, capped at `2^6 = 64x` the base
+    /// backoff — enough spread to clear a repair window without ever
+    /// overflowing the shift.
+    const BACKOFF_CAP_DOUBLINGS: u32 = 6;
+
+    let mut st = LoopStats::new(nclasses, cfg.arrays);
+    let mut queues: Vec<VecDeque<Req>> = vec![VecDeque::new(); nclasses];
+    let mut queued = 0usize;
+    let mut inflight: Vec<Option<InFlight>> = (0..cfg.arrays).map(|_| None).collect();
+    let mut up = vec![true; cfg.arrays];
+    let mut last_change = vec![0.0f64; cfg.arrays];
+    // Pending retries: (ready time, enqueue seq, class, request); the
+    // seq keeps the pop order total when ready times tie.
+    let mut retryq: Vec<(f64, u64, usize, Req)> = Vec::new();
+    let mut retry_seq = 0u64;
+    // Memoized full-batch service time per class (SLO-aware slack).
+    let mut svc_full: Vec<Option<f64>> = vec![None; nclasses];
+
+    let mut i = 0usize; // next arrival
+    let mut fi = 0usize; // next fault transition
+    let mut now = 0.0f64;
+
+    #[derive(Clone, Copy)]
+    enum Ev {
+        Complete(usize),
+        Fault,
+        Arrive,
+        Retry(usize),
+        Dispatch(usize, usize),
+    }
+
+    loop {
+        let pending = i < arrivals.len()
+            || !retryq.is_empty()
+            || queued > 0
+            || inflight.iter().any(Option::is_some);
+        if !pending {
+            break;
+        }
+
+        // Candidate events, pushed in tie-break priority order; the
+        // strict `<` scan below keeps the earliest-pushed on ties.
+        let mut cands: Vec<(f64, Ev)> = Vec::with_capacity(5);
+        let mut done_next: Option<(usize, f64)> = None;
+        for (r, fl) in inflight.iter().enumerate() {
+            if let Some(fl) = fl {
+                if done_next.map_or(true, |(_, t)| fl.done < t) {
+                    done_next = Some((r, fl.done));
+                }
+            }
+        }
+        if let Some((r, t)) = done_next {
+            cands.push((t, Ev::Complete(r)));
+        }
+        if fi < fault_events.len() {
+            cands.push((fault_events[fi].t_s, Ev::Fault));
+        }
+        if i < arrivals.len() {
+            cands.push((arrivals[i].t_s, Ev::Arrive));
+        }
+        let mut retry_next: Option<(usize, f64, u64)> = None;
+        for (k, &(t, seq, _, _)) in retryq.iter().enumerate() {
+            if retry_next.map_or(true, |(_, bt, bs)| (t, seq) < (bt, bs)) {
+                retry_next = Some((k, t, seq));
+            }
+        }
+        if let Some((k, t, _)) = retry_next {
+            cands.push((t, Ev::Retry(k)));
+        }
+        // Earliest-free *up* replica (lowest index on ties), then the
+        // earliest eligible dispatch, exactly as the fault-free loop.
+        // With every replica down there is no dispatch candidate; the
+        // clock advances on fault transitions instead.
+        let mut free: Option<(usize, f64)> = None;
+        for r in 0..cfg.arrays {
+            if up[r] && free.map_or(true, |(_, bt)| st.free_at[r] < bt) {
+                free = Some((r, st.free_at[r]));
+            }
+        }
+        if let Some((srv, t_free)) = free {
+            let mut best: Option<(f64, f64, usize)> = None;
+            for (c, q) in queues.iter().enumerate() {
+                if let Some(head) = q.front() {
+                    let trigger =
+                        if q.len() >= cfg.max_batch { now } else { head.arrive + cfg.max_wait_s };
+                    let cand = (t_free.max(trigger).max(now), head.arrive, c);
+                    best = Some(match best {
+                        Some(b) if (b.0, b.1, b.2) <= (cand.0, cand.1, cand.2) => b,
+                        _ => cand,
+                    });
+                }
+            }
+            if let Some((td, _, c)) = best {
+                cands.push((td, Ev::Dispatch(srv, c)));
+            }
+        }
+
+        let mut sel: Option<(f64, Ev)> = None;
+        for &(t, ev) in &cands {
+            if sel.map_or(true, |(bt, _)| t < bt) {
+                sel = Some((t, ev));
+            }
+        }
+        let Some((te, ev)) = sel else {
+            // Nothing can advance the clock: queued work is stranded
+            // with every replica down and no recovery left.  Drain —
+            // with a deadline the requests would expire; without one
+            // they are simply lost.
+            for c in 0..nclasses {
+                while queues[c].pop_front().is_some() {
+                    queued -= 1;
+                    if cfg.deadline_s.is_some() {
+                        st.timed_out += 1;
+                        st.class_timed_out[c] += 1;
+                    } else {
+                        st.lost += 1;
+                        st.class_lost[c] += 1;
+                    }
+                }
+            }
+            for &(_, _, c, _) in &retryq {
+                if cfg.deadline_s.is_some() {
+                    st.timed_out += 1;
+                    st.class_timed_out[c] += 1;
+                } else {
+                    st.lost += 1;
+                    st.class_lost[c] += 1;
+                }
+            }
+            retryq.clear();
+            st.sample_depth(queued);
+            st.last_event_s = st.last_event_s.max(now);
+            break;
+        };
+
+        match ev {
+            Ev::Complete(r) => {
+                now = now.max(te);
+                let fl = inflight[r].take().expect("completion fired for an in-flight batch");
+                st.busy_s[r] += fl.svc_s;
+                st.energy_j += fl.energy_j;
+                for req in &fl.reqs {
+                    let lat_ms = (fl.done - req.arrive) * 1e3;
+                    st.latency_ms.push(lat_ms);
+                    st.class_latency_ms[fl.class].push(lat_ms);
+                }
+                st.completed += fl.reqs.len() as u64;
+                st.class_completed[fl.class] += fl.reqs.len() as u64;
+                st.last_event_s = st.last_event_s.max(fl.done);
+            }
+            Ev::Fault => {
+                now = now.max(te);
+                let e = fault_events[fi];
+                fi += 1;
+                if up[e.replica] == e.up {
+                    // Not a transition (e.g. a second `down` for an
+                    // already-down replica): ignore, so a busy
+                    // replica's `free_at` is never clobbered.
+                } else if e.up {
+                    up[e.replica] = true;
+                    last_change[e.replica] = e.t_s;
+                    st.free_at[e.replica] = e.t_s;
+                } else {
+                    up[e.replica] = false;
+                    st.up_s += e.t_s - last_change[e.replica];
+                    last_change[e.replica] = e.t_s;
+                    if let Some(fl) = inflight[e.replica].take() {
+                        // The batch dies with its replica: bill the
+                        // partial service, re-enqueue what still has
+                        // retry budget, drop the rest.
+                        let class = fl.class;
+                        let served = e.t_s - fl.start;
+                        st.busy_s[e.replica] += served;
+                        if fl.svc_s > 0.0 {
+                            st.energy_j += fl.energy_j * (served / fl.svc_s);
+                        }
+                        for req in fl.reqs {
+                            if req.retries >= cfg.max_retries {
+                                st.lost += 1;
+                                st.class_lost[class] += 1;
+                            } else {
+                                let n = req.retries + 1;
+                                let delay = cfg.retry_backoff_s
+                                    * (1u64 << (n - 1).min(BACKOFF_CAP_DOUBLINGS)) as f64;
+                                st.retries += 1;
+                                retryq.push((
+                                    e.t_s + delay,
+                                    retry_seq,
+                                    class,
+                                    Req { arrive: req.arrive, retries: n },
+                                ));
+                                retry_seq += 1;
+                            }
+                        }
+                        st.last_event_s = st.last_event_s.max(e.t_s);
+                    }
+                }
+            }
+            Ev::Arrive | Ev::Retry(_) => {
+                now = now.max(te);
+                let (class, req, fresh) = match ev {
+                    Ev::Arrive => {
+                        let a = arrivals[i];
+                        i += 1;
+                        st.offered += 1;
+                        st.class_offered[a.class] += 1;
+                        (a.class, Req { arrive: a.t_s, retries: 0 }, true)
+                    }
+                    Ev::Retry(k) => {
+                        let (_, _, c, r) = retryq.remove(k);
+                        (c, r, false)
+                    }
+                    _ => unreachable!("arm only matches arrivals and retries"),
+                };
+                if queued < cfg.queue_cap {
+                    queues[class].push_back(req);
+                    queued += 1;
+                    if fresh {
+                        st.admitted += 1;
+                    }
+                } else {
+                    match (cfg.admission, cfg.deadline_s) {
+                        (Admission::SloAware, Some(dl)) => {
+                            // Shed whoever is least likely to meet the
+                            // deadline.  Slack of a request at queue
+                            // position `pos` of class `c`: deadline
+                            // minus its estimated completion (earliest
+                            // free replica, whole batches ahead of it
+                            // spread over the arrays, plus its own
+                            // full-batch service time).
+                            let t_free = (0..cfg.arrays)
+                                .filter(|&r| up[r])
+                                .map(|r| st.free_at[r])
+                                .fold(f64::INFINITY, f64::min)
+                                .max(now);
+                            let mut slack_of =
+                                |c: usize, pos: usize, arrive: f64| -> Result<f64> {
+                                    let svc = match svc_full[c] {
+                                        Some(v) => v,
+                                        None => {
+                                            let (v, _) = service(c, cfg.max_batch)?;
+                                            svc_full[c] = Some(v);
+                                            v
+                                        }
+                                    };
+                                    let start = t_free
+                                        + (pos / cfg.max_batch) as f64 * svc
+                                            / cfg.arrays as f64;
+                                    Ok(arrive + dl - (start + svc))
+                                };
+                            let mut worst: Option<(f64, usize, usize)> = None;
+                            for (c, q) in queues.iter().enumerate() {
+                                for (pos, r) in q.iter().enumerate() {
+                                    let sl = slack_of(c, pos, r.arrive)?;
+                                    if worst.map_or(true, |(w, ..)| sl < w) {
+                                        worst = Some((sl, c, pos));
+                                    }
+                                }
+                            }
+                            // The newcomer competes too; on ties it
+                            // loses, so a uniform-slack queue degrades
+                            // to exactly FIFO tail-drop.
+                            let sl_new = slack_of(class, queues[class].len(), req.arrive)?;
+                            match worst {
+                                Some((w, c, pos)) if w < sl_new => {
+                                    queues[c].remove(pos).expect("victim position indexed");
+                                    st.shed += 1;
+                                    st.class_shed[c] += 1;
+                                    queues[class].push_back(req);
+                                    if fresh {
+                                        st.admitted += 1;
+                                    }
+                                }
+                                _ => {
+                                    st.shed += 1;
+                                    st.class_shed[class] += 1;
+                                }
+                            }
+                        }
+                        _ => {
+                            // FIFO tail-drop — and SLO-aware without a
+                            // deadline, which has no slack to rank by.
+                            // A bounced retry was admitted once already
+                            // and now has nowhere to go: that is a loss
+                            // to the failure, not a rejection.
+                            if fresh {
+                                st.rejected += 1;
+                                st.class_rejected[class] += 1;
+                            } else {
+                                st.lost += 1;
+                                st.class_lost[class] += 1;
+                            }
+                        }
+                    }
+                }
+                st.sample_depth(queued);
+                st.last_event_s = st.last_event_s.max(now);
+            }
+            Ev::Dispatch(srv, c) => {
+                now = now.max(te);
+                // Form the batch, lazily cancelling requests whose
+                // deadline already passed (retries put old arrivals
+                // behind younger ones, so expiry is checked per popped
+                // request, not just at the head).
+                let mut batch: Vec<Req> = Vec::new();
+                while batch.len() < cfg.max_batch {
+                    let Some(req) = queues[c].pop_front() else { break };
+                    queued -= 1;
+                    match cfg.deadline_s {
+                        Some(dl) if now > req.arrive + dl => {
+                            st.timed_out += 1;
+                            st.class_timed_out[c] += 1;
+                        }
+                        _ => batch.push(req),
+                    }
+                }
+                if !batch.is_empty() {
+                    let b = batch.len();
+                    let (svc_s, energy_j) = service(c, b)?;
+                    let done = now + svc_s;
+                    st.free_at[srv] = done;
+                    st.batches += 1;
+                    st.batch_elems += b as u64;
+                    for req in &batch {
+                        st.queue_delay_ms.push((now - req.arrive) * 1e3);
+                    }
+                    inflight[srv] = Some(InFlight {
+                        class: c,
+                        start: now,
+                        done,
+                        svc_s,
+                        energy_j,
+                        reqs: batch,
+                    });
+                }
+                st.sample_depth(queued);
+                st.last_event_s = st.last_event_s.max(now);
+            }
+        }
+    }
+
+    // Close the availability ledger at the makespan: replicas still up
+    // have been up since their last transition.
+    let makespan = st.last_event_s;
+    for r in 0..cfg.arrays {
+        if up[r] && last_change[r] < makespan {
+            st.up_s += makespan - last_change[r];
+        }
+    }
+    st.assert_conservation();
     Ok(st)
 }
 
@@ -501,6 +1206,17 @@ pub fn simulate(session: &Session, traffic: &Traffic, cfg: &ServeConfig) -> Resu
         cfg.max_wait_s >= 0.0 && cfg.max_wait_s.is_finite(),
         "serve max_wait must be finite and >= 0 (got {})",
         cfg.max_wait_s
+    );
+    if let Some(dl) = cfg.deadline_s {
+        ensure!(
+            dl > 0.0 && dl.is_finite(),
+            "serve deadline must be positive and finite (got {dl})"
+        );
+    }
+    ensure!(
+        cfg.retry_backoff_s >= 0.0 && cfg.retry_backoff_s.is_finite(),
+        "serve retry backoff must be finite and >= 0 (got {})",
+        cfg.retry_backoff_s
     );
     ensure!(!traffic.classes.is_empty(), "traffic has no request classes");
     for a in &traffic.arrivals {
@@ -522,7 +1238,26 @@ pub fn simulate(session: &Session, traffic: &Traffic, cfg: &ServeConfig) -> Resu
         memo.insert((c, b), v);
         Ok(v)
     };
-    let st = run_loop(&traffic.arrivals, traffic.classes.len(), cfg, &mut service)?;
+    // The fault-free configuration takes the original loop *verbatim*
+    // (not the robustness loop with no faults): its f64 accumulation
+    // order is part of the byte-reproducibility contract.
+    let robust =
+        cfg.faults.is_some() || cfg.admission != Admission::Fifo || cfg.deadline_s.is_some();
+    let st = if robust {
+        let fault_events = match &cfg.faults {
+            Some(f) => expand_fault_events(f, cfg.arrays, traffic.duration_s)?,
+            None => Vec::new(),
+        };
+        run_loop_faulty(
+            &traffic.arrivals,
+            traffic.classes.len(),
+            cfg,
+            &fault_events,
+            &mut service,
+        )?
+    } else {
+        run_loop(&traffic.arrivals, traffic.classes.len(), cfg, &mut service)?
+    };
 
     // Capacity bound: one replica serving full batches of the offered
     // mix sustains max_batch / (mix-weighted full-batch service time)
@@ -543,6 +1278,14 @@ pub fn simulate(session: &Session, traffic: &Traffic, cfg: &ServeConfig) -> Resu
     };
 
     let makespan_s = st.last_event_s;
+    // Availability: up replica-seconds over the replica-seconds that
+    // the makespan spans.  Without a fault schedule every replica is up
+    // the whole run by construction.
+    let availability = if cfg.faults.is_some() && makespan_s > 0.0 {
+        (st.up_s / (cfg.arrays as f64 * makespan_s)).clamp(0.0, 1.0)
+    } else {
+        1.0
+    };
     let lat = st.latency_ms.percentiles(&[50.0, 95.0, 99.0]);
     let served = !st.latency_ms.is_empty();
     let classes = traffic
@@ -558,6 +1301,9 @@ pub fn simulate(session: &Session, traffic: &Traffic, cfg: &ServeConfig) -> Resu
                 offered: st.class_offered[c],
                 rejected: st.class_rejected[c],
                 completed: st.class_completed[c],
+                timed_out: st.class_timed_out[c],
+                shed: st.class_shed[c],
+                lost: st.class_lost[c],
                 latency_p50_ms: if has { p[0] } else { 0.0 },
                 latency_p99_ms: if has { p[1] } else { 0.0 },
             }
@@ -608,6 +1354,15 @@ pub fn simulate(session: &Session, traffic: &Traffic, cfg: &ServeConfig) -> Resu
         max_wait_s: cfg.max_wait_s,
         queue_cap: cfg.queue_cap,
         overlap: cfg.overlap,
+        admission: cfg.admission,
+        deadline_s: cfg.deadline_s,
+        faults_configured: cfg.faults.is_some(),
+        timed_out: st.timed_out,
+        shed: st.shed,
+        lost: st.lost,
+        retries: st.retries,
+        availability,
+        degraded_capacity_rps: capacity_rps * availability,
         classes,
     })
 }
@@ -628,7 +1383,14 @@ mod tests {
     use super::*;
 
     fn cfg(max_batch: usize, max_wait_s: f64, arrays: usize, queue_cap: usize) -> ServeConfig {
-        ServeConfig { max_batch, max_wait_s, arrays, queue_cap, overlap: Overlap::Pipeline }
+        ServeConfig {
+            max_batch,
+            max_wait_s,
+            arrays,
+            queue_cap,
+            overlap: Overlap::Pipeline,
+            ..ServeConfig::default()
+        }
     }
 
     fn arrivals(ts: &[(f64, usize)]) -> Vec<Arrival> {
@@ -781,8 +1543,180 @@ mod tests {
             ServeConfig { arrays: 0, ..ServeConfig::default() },
             ServeConfig { queue_cap: 0, ..ServeConfig::default() },
             ServeConfig { max_wait_s: f64::NAN, ..ServeConfig::default() },
+            ServeConfig { deadline_s: Some(0.0), ..ServeConfig::default() },
+            ServeConfig { deadline_s: Some(f64::NAN), ..ServeConfig::default() },
+            ServeConfig { retry_backoff_s: -1.0, ..ServeConfig::default() },
+            ServeConfig {
+                faults: Some(ReplicaFaults::Process { mtbf_s: 0.0, mttr_s: 0.01, seed: 1 }),
+                ..ServeConfig::default()
+            },
+            ServeConfig {
+                faults: Some(ReplicaFaults::Trace(vec![ReplicaEvent {
+                    t_s: 0.0,
+                    replica: 9,
+                    up: false,
+                }])),
+                ..ServeConfig::default()
+            },
         ] {
             assert!(session.serve(&traffic, &bad).is_err(), "{bad:?}");
         }
+    }
+
+    #[test]
+    fn deadline_cancels_stale_queued_requests() {
+        // Three requests at t=0, one replica, 10 ms service, 12 ms
+        // deadline: the first two dispatch in time (the second finishes
+        // late — deadlines cancel queued work, they don't abort running
+        // batches), the third is still queued at 20 ms and cancels.
+        let a = arrivals(&[(0.0, 0), (0.0, 0), (0.0, 0)]);
+        let c = ServeConfig { deadline_s: Some(0.012), ..cfg(1, 1.0, 1, 64) };
+        let st = run_loop_faulty(&a, 1, &c, &[], &mut flat_service()).unwrap();
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.timed_out, 1);
+        assert_eq!(st.class_timed_out[0], 1);
+        assert_eq!(st.batches, 2);
+        assert!((st.latency_ms.max() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replica_failure_kills_the_batch_and_the_retry_succeeds() {
+        let a = arrivals(&[(0.0, 0)]);
+        let ev = [
+            ReplicaEvent { t_s: 0.005, replica: 0, up: false },
+            ReplicaEvent { t_s: 0.05, replica: 0, up: true },
+        ];
+        let c = cfg(1, 0.0, 1, 64);
+        let st = run_loop_faulty(&a, 1, &c, &ev, &mut flat_service()).unwrap();
+        // Dispatched at 0, killed at 5 ms, retried (5 ms backoff),
+        // stuck until the replica recovers at 50 ms, done at 60 ms.
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.retries, 1);
+        assert_eq!(st.lost, 0);
+        assert!((st.latency_ms.max() - 60.0).abs() < 1e-9);
+        // Up 0..5 ms and 50..60 ms of a 60 ms makespan.
+        assert!((st.up_s - 0.015).abs() < 1e-12, "up_s {}", st.up_s);
+    }
+
+    #[test]
+    fn permanently_dead_replicas_lose_requests_without_hanging() {
+        let a = arrivals(&[(0.0, 0), (0.001, 0)]);
+        let ev = [ReplicaEvent { t_s: 0.005, replica: 0, up: false }];
+        let st = run_loop_faulty(&a, 1, &cfg(2, 0.0, 1, 64), &ev, &mut flat_service()).unwrap();
+        // The in-flight request retries once, then both strand in the
+        // queue with no recovery in the schedule: drained as lost.
+        assert_eq!(st.completed, 0);
+        assert_eq!(st.retries, 1);
+        assert_eq!(st.lost, 2);
+        assert_eq!(st.offered, 2);
+        assert_eq!(st.class_lost[0], 2);
+    }
+
+    #[test]
+    fn robustness_loop_agrees_with_simple_loop_when_nothing_fires() {
+        // Same scenario through both loops: no faults, a deadline far
+        // beyond any latency.  Counters and latencies must agree (the
+        // byte-identity contract for default configs is stronger — the
+        // simple loop runs verbatim — but the semantics must match too).
+        let a = arrivals(&[(0.0, 0), (0.0, 0), (0.003, 0), (0.009, 0)]);
+        let c = cfg(2, 0.002, 1, 8);
+        let simple = run_loop(&a, 1, &c, &mut flat_service()).unwrap();
+        let dl = ServeConfig { deadline_s: Some(10.0), ..c };
+        let robust = run_loop_faulty(&a, 1, &dl, &[], &mut flat_service()).unwrap();
+        assert_eq!(simple.completed, robust.completed);
+        assert_eq!(simple.batches, robust.batches);
+        assert_eq!(simple.batch_elems, robust.batch_elems);
+        assert_eq!(simple.latency_ms.max(), robust.latency_ms.max());
+        assert_eq!(simple.queue_delay_ms.max(), robust.queue_delay_ms.max());
+    }
+
+    #[test]
+    fn slo_aware_beats_fifo_under_mixed_class_overload() {
+        // One replica, queue of 2.  Two slow requests (30 ms) arrive
+        // first, then four fast ones (1 ms); 40 ms deadline.  FIFO
+        // tail-drops the fast arrivals and serves a doomed slow request
+        // late; SLO-aware sheds the queued slow request (least slack)
+        // and completes the fast ones inside their deadline.
+        let mut service = |c: usize, _b: usize| -> Result<(f64, f64)> {
+            Ok(if c == 0 { (0.001, 1.0) } else { (0.030, 1.0) })
+        };
+        let a = arrivals(&[
+            (0.0, 1),
+            (0.0, 1),
+            (0.001, 0),
+            (0.001, 0),
+            (0.001, 0),
+            (0.001, 0),
+        ]);
+        let base = cfg(1, 1.0, 1, 2);
+        let fifo = ServeConfig { deadline_s: Some(0.040), ..base.clone() };
+        let slo = ServeConfig {
+            admission: Admission::SloAware,
+            deadline_s: Some(0.040),
+            ..base
+        };
+        let f = run_loop_faulty(&a, 2, &fifo, &[], &mut service).unwrap();
+        let s = run_loop_faulty(&a, 2, &slo, &[], &mut service).unwrap();
+
+        assert_eq!(f.completed, 2);
+        assert_eq!(f.rejected, 3);
+        assert_eq!(f.timed_out, 1);
+        assert!(f.latency_ms.max() > 40.0, "FIFO completes a request past its deadline");
+
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.shed, 3);
+        assert_eq!(s.class_shed[1], 1, "the doomed slow request is shed");
+        assert_eq!(s.class_shed[0], 2, "excess fast arrivals shed on their own slack");
+        assert_eq!(s.timed_out, 0);
+        assert!(s.latency_ms.max() <= 40.0, "every SLO-aware completion meets the deadline");
+        assert!(s.completed > f.completed, "strictly more deadline-met goodput");
+    }
+
+    #[test]
+    fn fault_process_is_seeded_and_per_replica_independent() {
+        let p = ReplicaFaults::Process { mtbf_s: 0.05, mttr_s: 0.01, seed: 7 };
+        let a = expand_fault_events(&p, 3, 1.0).unwrap();
+        let b = expand_fault_events(&p, 3, 1.0).unwrap();
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s), "sorted by time");
+        // Replica 0's stream is independent of the replica count.
+        let solo = expand_fault_events(&p, 1, 1.0).unwrap();
+        let r0: Vec<ReplicaEvent> = a.iter().filter(|e| e.replica == 0).copied().collect();
+        assert_eq!(solo, r0);
+        let other = ReplicaFaults::Process { mtbf_s: 0.05, mttr_s: 0.01, seed: 8 };
+        assert_ne!(a, expand_fault_events(&other, 3, 1.0).unwrap());
+        // Validation: out-of-range trace replica, degenerate MTBF.
+        let bad = ReplicaFaults::Trace(vec![ReplicaEvent { t_s: 0.0, replica: 5, up: false }]);
+        let err = expand_fault_events(&bad, 2, 1.0).unwrap_err().to_string();
+        assert!(err.contains("references replica 5"), "{err}");
+        let degenerate = ReplicaFaults::Process { mtbf_s: 0.0, mttr_s: 0.01, seed: 1 };
+        assert!(expand_fault_events(&degenerate, 1, 1.0).is_err());
+    }
+
+    #[test]
+    fn fault_trace_parses_and_rejects_garbage() {
+        let text = r#"{"events": [
+            {"t": 0.05, "replica": 0, "up": false},
+            {"t": 0.12, "replica": 0, "up": true}
+        ]}"#;
+        match ReplicaFaults::from_trace_str(text).unwrap() {
+            ReplicaFaults::Trace(ev) => {
+                assert_eq!(ev.len(), 2);
+                assert!(!ev[0].up && ev[1].up);
+            }
+            other => panic!("expected a trace, got {other:?}"),
+        }
+        assert!(ReplicaFaults::from_trace_str(r#"{"events": []}"#).is_err());
+        assert!(ReplicaFaults::from_trace_str(
+            r#"{"events": [{"t": -1.0, "replica": 0, "up": true}]}"#
+        )
+        .is_err());
+        assert!(
+            ReplicaFaults::from_trace_str(r#"{"events": [{"t": 1.0, "replica": 0}]}"#).is_err()
+        );
+        assert_eq!(Admission::parse("slo-aware").unwrap(), Admission::SloAware);
+        assert_eq!(Admission::parse("fifo").unwrap(), Admission::Fifo);
+        assert!(Admission::parse("nope").is_err());
     }
 }

@@ -132,6 +132,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Inject a hardware fault model: lowering remaps butterfly nodes
+    /// around dead PEs and the simulator prices degraded NoC links and
+    /// downed DDR channels.  The model is validated against the
+    /// session's architecture on the first `run` — a mismatch is a
+    /// structured error, never a panic.
+    pub fn faults(mut self, faults: crate::arch::FaultModel) -> Self {
+        self.sim.faults = Some(Arc::new(faults));
+        self
+    }
+
     /// Simulation window in DFG iterations per stage.
     pub fn window(mut self, window: usize) -> Self {
         self.window = window.max(1);
@@ -492,6 +502,12 @@ impl Session {
         division: Option<(usize, usize)>,
         strat: &'static dyn DataflowStrategy,
     ) -> Result<KernelResult> {
+        if let Some(f) = self.cfg.sim.faults.as_deref() {
+            // Fail with a structured error — never a lowering panic —
+            // before any work when the fault model does not fit this
+            // architecture (wrong geometry, or nothing left to map onto).
+            f.validate(&self.cfg.arch)?;
+        }
         let plan = self.plan_for(spec, division, strat)?;
         self.execute(spec, &plan, strat)
     }
@@ -743,7 +759,16 @@ impl Session {
     ) -> Arc<StageMeasure> {
         let lower = || {
             self.counters.lowerings.fetch_add(1, Ordering::Relaxed);
-            let map = strat.mapping(stage.points, &self.cfg.arch);
+            // Under a fault model, remap around dead PEs; `run_strategy`
+            // validated the model against this arch before any lowering,
+            // so the fallible path cannot fire here.  Healthy sessions
+            // take the exact pre-fault call.
+            let map = match self.cfg.sim.faults.as_deref() {
+                Some(f) => strat
+                    .fault_mapping(stage.points, &self.cfg.arch, f)
+                    .expect("fault model validated against this arch before lowering"),
+                None => strat.mapping(stage.points, &self.cfg.arch),
+            };
             let program = lower_stage_mapped(stage, &self.cfg.arch, window, pack, &map);
             // Check a scratch arena out of the pool (falling back to a
             // fresh one when all are in flight under fan-out), run, and
@@ -1113,5 +1138,55 @@ mod tests {
         assert!(session.stream(&ks, 0).is_err());
         assert!(session.stream(&[], 8).is_err());
         assert!(session.stream(&ks, 8).is_ok());
+    }
+
+    #[test]
+    fn faulty_session_degrades_gracefully_and_deterministically() {
+        use crate::arch::FaultModel;
+
+        let s = spec(KernelKind::Fft, 1024, 4096);
+        let healthy = Session::builder().build().run(&s).unwrap();
+
+        let mut fm = FaultModel::for_arch(&ArchConfig::full());
+        fm.kill_pe(5).unwrap();
+        fm.degrade_link(9, 4).unwrap();
+        let faulty = Session::builder().faults(fm.clone()).build();
+        let a = faulty.run(&s).unwrap();
+        let b = faulty.run(&s).unwrap();
+        // Deterministic under a fixed fault set.
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy_j, b.energy_j);
+        // A dead PE halves the usable mesh (largest power-of-two live
+        // subset): the kernel still completes, just slower.
+        assert!(
+            a.time_s > healthy.time_s,
+            "faulty run should be slower: {} <= {}",
+            a.time_s,
+            healthy.time_s
+        );
+
+        // An all-healthy model must not perturb the healthy numbers.
+        let noop = Session::builder()
+            .faults(FaultModel::for_arch(&ArchConfig::full()))
+            .build()
+            .run(&s)
+            .unwrap();
+        assert_eq!(noop.cycles, healthy.cycles);
+        assert_eq!(noop.energy_j, healthy.energy_j);
+    }
+
+    #[test]
+    fn mismatched_fault_model_is_a_structured_error() {
+        use crate::arch::FaultModel;
+
+        // Built for the full mesh, run against the §VI-H scaled config
+        // (one DDR channel): the geometry check must fire before any
+        // lowering, as an error — not a remap panic.
+        let mut fm = FaultModel::for_arch(&ArchConfig::full());
+        fm.kill_pe(3).unwrap();
+        let session = Session::builder().arch(ArchConfig::scaled_128()).faults(fm).build();
+        let err = session.run(&spec(KernelKind::Fft, 256, 1024)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fault model was built for"), "unexpected error: {msg}");
     }
 }

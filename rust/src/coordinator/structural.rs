@@ -26,8 +26,10 @@
 //! JSON-lines file whose first line is the header
 //! `{"store":"bfdf-structural","version":1}` and whose every other line
 //! is one measurement (the full key plus the complete [`SimStats`]).
-//! Appends are flushed per entry, unparseable tail lines from a crash
-//! are skipped on load, and entries from other configurations are
+//! Appends are flushed per entry; torn records from a crash — tail or
+//! mid-file — are skipped, counted ([`StructuralStore::torn`]) and
+//! warned about once per open, while a header naming a different format
+//! or version fails loudly; entries from other configurations are
 //! harmless (their signatures simply never match).  Persistence is
 //! best-effort by design: an I/O error on append costs future reuse,
 //! never correctness — the in-memory entry is still served.
@@ -37,7 +39,7 @@ use std::fmt;
 use std::io::Write as _;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::dfg::graph::KernelKind;
 use crate::sim::SimStats;
@@ -90,6 +92,49 @@ pub struct StructuralStore {
     entries: Mutex<HashMap<StructuralKey, Cell>>,
     sink: Option<Mutex<std::fs::File>>,
     loaded: usize,
+    torn: usize,
+}
+
+/// Validate the first line of a JSON-lines checkpoint against its
+/// expected header.
+///
+/// Returns `Ok(true)` when the line is this file kind's header (right
+/// marker key, compatible version) and should be consumed, `Ok(false)`
+/// when it is no header at all (a torn write, or a data line from a
+/// headerless legacy file — the caller's record loop deals with it),
+/// and a loud error when the file positively identifies as a different
+/// format or version: silently skipping every record would masquerade
+/// as an empty cache, and silently accepting them could replay numbers
+/// a newer schema encodes differently.
+pub(crate) fn check_jsonl_header(
+    line: &str,
+    path: &str,
+    kind_key: &str,
+    kind_val: &str,
+    sibling_key: &str,
+    version: f64,
+) -> Result<bool> {
+    let Ok(j) = json::parse(line) else { return Ok(false) };
+    if let Some(other) = j.get(sibling_key).and_then(Json::as_str) {
+        bail!(
+            "'{path}' is a '{other}' {sibling_key} file, not a '{kind_val}' {kind_key} \
+             — point --{kind_key} and --{sibling_key} at different paths"
+        );
+    }
+    let Some(name) = j.get(kind_key).and_then(Json::as_str) else {
+        return Ok(false);
+    };
+    ensure!(
+        name == kind_val,
+        "'{path}' is a '{name}' {kind_key} file, not '{kind_val}'"
+    );
+    let v = j.get("version").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    ensure!(
+        v == version,
+        "'{path}' has {kind_key} format version {v} but this build reads version \
+         {version}; delete the file (or drop --resume) to regenerate it"
+    );
+    Ok(true)
 }
 
 impl fmt::Debug for StructuralStore {
@@ -111,20 +156,44 @@ impl Default for StructuralStore {
 impl StructuralStore {
     /// In-memory store (no persistence).
     pub fn new() -> StructuralStore {
-        StructuralStore { entries: Mutex::new(HashMap::new()), sink: None, loaded: 0 }
+        StructuralStore { entries: Mutex::new(HashMap::new()), sink: None, loaded: 0, torn: 0 }
     }
 
     /// Open `path` for persistence.  With `resume`, previously recorded
-    /// measurements are loaded (corrupt tail lines skipped) and new
-    /// ones appended; otherwise the file is truncated.
+    /// measurements are loaded and new ones appended; otherwise the
+    /// file is truncated.  Loading is torn-write robust: any record a
+    /// crashed run left unparseable — mid-file or tail — is skipped and
+    /// counted ([`Self::torn`], one warning per open), while a header
+    /// naming the wrong format or version fails loudly instead of
+    /// masquerading as an empty cache.
     pub fn open(path: &str, resume: bool) -> Result<StructuralStore> {
         let mut entries = HashMap::new();
+        let mut torn = 0usize;
         if resume {
             if let Ok(text) = std::fs::read_to_string(path) {
-                for line in text.lines() {
-                    let Ok(j) = json::parse(line) else { continue };
-                    let Some((key, m)) = entry_from_json(&j) else { continue };
+                let mut lines = text.lines().peekable();
+                if let Some(&first) = lines.peek() {
+                    if check_jsonl_header(first, path, "store", "bfdf-structural", "journal", 1.0)?
+                    {
+                        lines.next();
+                    }
+                }
+                for line in lines {
+                    let Ok(j) = json::parse(line) else {
+                        torn += 1;
+                        continue;
+                    };
+                    let Some((key, m)) = entry_from_json(&j) else {
+                        torn += 1;
+                        continue;
+                    };
                     entries.insert(key, Arc::new(Mutex::new(Some(Arc::new(m)))) as Cell);
+                }
+                if torn > 0 {
+                    eprintln!(
+                        "warning: structural store '{path}': skipped {torn} torn or \
+                         malformed record(s) left by a crashed run"
+                    );
                 }
             }
         }
@@ -143,12 +212,17 @@ impl StructuralStore {
             writeln!(file, "{}", header.render())
                 .with_context(|| format!("writing structural store header to '{path}'"))?;
         }
-        Ok(StructuralStore { entries, sink: Some(Mutex::new(file)), loaded })
+        Ok(StructuralStore { entries, sink: Some(Mutex::new(file)), loaded, torn })
     }
 
     /// Entries loaded from disk at open time.
     pub fn loaded(&self) -> usize {
         self.loaded
+    }
+
+    /// Torn or malformed records skipped while loading at open time.
+    pub fn torn(&self) -> usize {
+        self.torn
     }
 
     /// Distinct measurements currently held.
@@ -409,9 +483,63 @@ mod tests {
         }
         let store = StructuralStore::open(&path, true).unwrap();
         assert_eq!(store.loaded(), 1);
+        assert_eq!(store.torn(), 1);
         let got = store.lookup(&key("round-robin")).unwrap();
         assert_eq!(*got, *measure(42));
         // Fresh open truncates.
+        let store = StructuralStore::open(&path, false).unwrap();
+        assert_eq!(store.loaded(), 0);
+        assert_eq!(store.torn(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mid_file_torn_records_are_skipped_and_counted() {
+        // A crash (or a partial filesystem sync) can tear a record in
+        // the middle of the file, not just at the tail; the records
+        // around it must still load.
+        let path = std::env::temp_dir()
+            .join(format!("bfdf_structural_torn_{}.jsonl", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let good_a = entry_to_json(&key("round-robin"), &measure(42)).render();
+        let good_b = entry_to_json(&key("column-major"), &measure(77)).render();
+        std::fs::write(
+            &path,
+            format!(
+                "{}\n{}\n{{\"sig\":\"torn-mid\n{}\nnot json at all\n",
+                r#"{"store":"bfdf-structural","version":1}"#,
+                good_a, good_b
+            ),
+        )
+        .unwrap();
+        let store = StructuralStore::open(&path, true).unwrap();
+        assert_eq!(store.loaded(), 2, "records around the tear must survive");
+        assert_eq!(store.torn(), 2, "both the mid-file and the tail tear are counted");
+        assert_eq!(store.lookup(&key("round-robin")).unwrap().stats.cycles, 42);
+        assert_eq!(store.lookup(&key("column-major")).unwrap().stats.cycles, 77);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_header_fails_loudly() {
+        let path = std::env::temp_dir()
+            .join(format!("bfdf_structural_hdr_{}.jsonl", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+
+        // A future format version must not masquerade as an empty cache.
+        std::fs::write(&path, "{\"store\":\"bfdf-structural\",\"version\":2}\n").unwrap();
+        let err = StructuralStore::open(&path, true).unwrap_err().to_string();
+        assert!(
+            err.contains("version 2") && err.contains("version 1"),
+            "unexpected error: {err}"
+        );
+
+        // An autotune journal is a different file kind, not torn data.
+        std::fs::write(&path, "{\"journal\":\"bfdf-pareto\",\"version\":1}\n").unwrap();
+        let err = StructuralStore::open(&path, true).unwrap_err().to_string();
+        assert!(err.contains("bfdf-pareto"), "unexpected error: {err}");
+
+        // Without --resume the file is truncated unread, so no error.
         let store = StructuralStore::open(&path, false).unwrap();
         assert_eq!(store.loaded(), 0);
         std::fs::remove_file(&path).ok();

@@ -104,6 +104,26 @@ pub trait DataflowStrategy: Send + Sync {
         Mapping::for_points(points, arch)
     }
 
+    /// Node→PE mapping when hardware faults are present: the default
+    /// compacts the butterfly onto the largest power-of-two subset of
+    /// live PEs ([`Mapping::fault_aware`]), which keeps the XOR partner
+    /// algebra (and the depth/node-conservation invariants) intact while
+    /// dead PEs host zero nodes.  Errors — instead of panicking — when
+    /// the fault set leaves nothing to map onto.  Cache aliasing is
+    /// prevented structurally: the session's structural signature embeds
+    /// the fault model's signature via
+    /// [`crate::sim::SimOptions::signature`], so faulty and healthy
+    /// measurements never share cache entries even though
+    /// [`DataflowStrategy::mapping_id`] is unchanged.
+    fn fault_mapping(
+        &self,
+        points: usize,
+        arch: &ArchConfig,
+        faults: &crate::arch::FaultModel,
+    ) -> Result<Mapping> {
+        Mapping::fault_aware(points, arch, faults)
+    }
+
     /// Cache discriminator for [`DataflowStrategy::mapping`]: stage
     /// measurements are shared across strategies whose mapping ids (and
     /// schedules) agree, so a strategy that overrides `mapping` must
@@ -413,6 +433,41 @@ mod tests {
                         strat.name()
                     );
                     assert_eq!(p.vectors, 3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_strategies_conserve_nodes_on_faulty_meshes() {
+        // The faulty-mesh extension of the conservation invariant: for a
+        // ladder of dead-PE counts, every strategy's fault mapping keeps
+        // each stage's layer fully assigned to live PEs, balanced over
+        // the compacted slots, with the plan structure untouched.
+        let arch = ArchConfig::full();
+        for dead in [1usize, 3, 7, 12, 15] {
+            let fm = crate::arch::FaultModel::seeded(&arch, 11, dead, 0, 1, 0).unwrap();
+            for strat in registry() {
+                for kind in [KernelKind::Bpmm, KernelKind::Fft] {
+                    let n = 1usize << 10;
+                    let p = strat.plan(kind, n, 3, &arch, None).unwrap();
+                    assert_eq!(p.total_depth(), 10, "{}: plan unchanged by faults", strat.name());
+                    for stage in &p.stages {
+                        let m = strat.fault_mapping(stage.points, &arch, &fm).unwrap();
+                        assert_eq!(m.num_pes, arch.num_pes(), "lowering contract");
+                        let per = m.nodes_per_pe();
+                        assert_eq!(
+                            per.iter().sum::<usize>(),
+                            stage.points / 2,
+                            "{} {kind:?} dead={dead}: nodes conserved",
+                            strat.name()
+                        );
+                        for pe in 0..arch.num_pes() {
+                            if fm.pe_dead(pe) {
+                                assert_eq!(per[pe], 0, "dead PE {pe} hosts nodes");
+                            }
+                        }
+                    }
                 }
             }
         }

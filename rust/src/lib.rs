@@ -14,7 +14,10 @@
 //!   clap/serde/criterion/proptest — see DESIGN.md).
 //! * [`model`] — exact numeric references for butterfly matrices, FFT and
 //!   attention, used as oracles by tests and by the functional examples.
-//! * [`arch`] — hardware configuration (Table I / Table III parameters).
+//! * [`arch`] — hardware configuration (Table I / Table III parameters)
+//!   plus the fault layer ([`arch::FaultModel`]): a validated, seedable
+//!   set of dead PEs, degraded NoC links and downed DDR channels that
+//!   the mapping and the engine price instead of ignoring.
 //! * [`dfg`] — the paper's compiler: multilayer butterfly DFG templates
 //!   (Fig. 5b/7), multi-stage Cooley-Tukey division (Fig. 9), BPMM weight
 //!   slicing (Fig. 10), PE-array mapping and micro-code block generation
@@ -73,7 +76,13 @@
 //!   replica arrays that reports p50/p95/p99 latency, goodput against
 //!   the capacity bound and utilization
 //!   ([`coordinator::Session::serve`], `Report::Serving`, the
-//!   `bfdf serve-sim` subcommand).  Design-space autotuning
+//!   `bfdf serve-sim` subcommand).  The serving loop degrades
+//!   gracefully under failures — seeded or scripted replica up/down
+//!   schedules ([`coordinator::ReplicaFaults`]), capped-backoff
+//!   retries for batches killed in flight, per-request deadlines, and
+//!   pluggable admission ([`coordinator::Admission`], FIFO or
+//!   SLO-aware slack shedding) — all default-off, so fault-free runs
+//!   stay byte-identical.  Design-space autotuning
 //!   ([`coordinator::autotune`]) closes the loop: a
 //!   [`coordinator::SearchSpace`] grid over the `ArchConfig` knobs
 //!   (mesh, SIMD width, SPM ports/capacity, DDR channels, replica

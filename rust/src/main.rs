@@ -21,9 +21,9 @@ use anyhow::{Context as _, Result};
 use butterfly_dataflow::arch::{ArchConfig, UnitKind};
 use butterfly_dataflow::coordinator::autotune;
 use butterfly_dataflow::coordinator::{
-    AutotuneConfig, AutotuneResult, Journal, NetworkResult, Objective, Overlap, Report,
-    SearchSpace, ServeConfig, ServeResult, Session, StructuralStore, SweepRow, Traffic,
-    WorkloadClass,
+    Admission, AutotuneConfig, AutotuneResult, Journal, NetworkResult, Objective, Overlap,
+    Report, ReplicaFaults, SearchSpace, ServeConfig, ServeResult, Session, StructuralStore,
+    SweepRow, Traffic, WorkloadClass,
 };
 use butterfly_dataflow::dfg::graph::KernelKind;
 use butterfly_dataflow::dfg::stages::enumerate_divisions;
@@ -155,6 +155,23 @@ fn app() -> App {
             .opt("seed", "42", "traffic seed (a fixed seed reproduces the run bit-for-bit)")
             .opt("arch", "scaled128", "architecture preset: full | scaled128")
             .opt("overlap", "pipeline", "per-batch overlap model: none | dma | pipeline")
+            .opt(
+                "faults",
+                "",
+                "replica fault-trace JSON file (scripted up/down events; conflicts with \
+                 --mtbf/--mttr)",
+            )
+            .opt("mtbf", "", "seeded replica fault process: mean time between failures (s)")
+            .opt("mttr", "", "seeded replica fault process: mean time to repair (s)")
+            .opt("fault-seed", "7", "seed for the --mtbf/--mttr fault process")
+            .opt("admission", "fifo", "admission policy: fifo | slo-aware")
+            .opt(
+                "deadline-ms",
+                "",
+                "per-request deadline (ms): stale queued requests are cancelled, and \
+                 slo-aware admission sheds by slack",
+            )
+            .opt("retries", "3", "max re-enqueues for requests lost to a replica failure")
             .opt("out", "", "also write the JSON report to this path (e.g. BENCH_serving.json)")
             .flag("json", "emit a machine-readable report"),
         )
@@ -316,6 +333,7 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
         .sim(SimOptions {
             no_multiline_spm: m.flag("no-multiline-spm"),
             fifo_scheduling: m.flag("fifo"),
+            ..Default::default()
         })
         .build();
     let r = session.run_with(&spec, parse_division(m.get("division"))?)?;
@@ -895,12 +913,56 @@ fn cmd_serve_sim(m: &Matches) -> Result<()> {
         .get("seed")
         .parse()
         .map_err(|_| anyhow::anyhow!("--seed expects an integer, got '{}'", m.get("seed")))?;
+    let admission = Admission::parse(m.get("admission"))?;
+    let deadline_s = match m.get("deadline-ms") {
+        "" => None,
+        raw => {
+            let ms: f64 = raw.parse().map_err(|_| {
+                anyhow::anyhow!("--deadline-ms expects a number, got '{raw}'")
+            })?;
+            Some(ms * 1e-3)
+        }
+    };
+    let (fault_file, mtbf, mttr) = (m.get("faults"), m.get("mtbf"), m.get("mttr"));
+    let faults = if !fault_file.is_empty() {
+        anyhow::ensure!(
+            mtbf.is_empty() && mttr.is_empty(),
+            "--faults (a scripted trace) conflicts with --mtbf/--mttr (a seeded process); \
+             pick one"
+        );
+        Some(ReplicaFaults::from_trace_file(fault_file)?)
+    } else if !mtbf.is_empty() || !mttr.is_empty() {
+        anyhow::ensure!(
+            !mtbf.is_empty() && !mttr.is_empty(),
+            "--mtbf and --mttr must be given together"
+        );
+        let mtbf_s: f64 = mtbf
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--mtbf expects seconds, got '{mtbf}'"))?;
+        let mttr_s: f64 = mttr
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--mttr expects seconds, got '{mttr}'"))?;
+        let fault_seed: u64 = m.get("fault-seed").parse().map_err(|_| {
+            anyhow::anyhow!("--fault-seed expects an integer, got '{}'", m.get("fault-seed"))
+        })?;
+        Some(ReplicaFaults::Process { mtbf_s, mttr_s, seed: fault_seed })
+    } else {
+        None
+    };
+    let max_retries = m.get("retries").parse().map_err(|_| {
+        anyhow::anyhow!("--retries expects an integer, got '{}'", m.get("retries"))
+    })?;
     let cfg = ServeConfig {
         max_batch,
         max_wait_s: max_wait_ms * 1e-3,
         arrays,
         queue_cap,
         overlap,
+        admission,
+        deadline_s,
+        faults,
+        max_retries,
+        ..ServeConfig::default()
     };
     let session = Session::builder().arch(parse_arch(m.get("arch"))?).build();
     let trace = m.get("trace");
@@ -947,15 +1009,20 @@ fn cmd_serve_sim(m: &Matches) -> Result<()> {
 /// Text tables for a serving run: the load/latency curve plus the
 /// per-class breakdown of the heaviest point.
 fn print_serving(points: &[ServeResult], cache: &butterfly_dataflow::coordinator::CacheStats) {
-    let mut t = Table::new(
-        "serve-sim load/latency curve",
-        &[
-            "rate r/s", "offered", "rej", "goodput r/s", "capacity r/s", "p50 ms", "p95 ms",
-            "p99 ms", "util", "batch",
-        ],
-    );
+    // The fault-tolerance columns only appear when some point actually
+    // configured faults, deadlines, or a non-FIFO policy — plain runs
+    // keep the familiar narrow table.
+    let robust = points.iter().any(|p| p.robustness_on());
+    let mut head = vec![
+        "rate r/s", "offered", "rej", "goodput r/s", "capacity r/s", "p50 ms", "p95 ms",
+        "p99 ms", "util", "batch",
+    ];
+    if robust {
+        head.extend(["timeout", "shed", "lost", "avail"]);
+    }
+    let mut t = Table::new("serve-sim load/latency curve", &head);
     for p in points {
-        t.row(&[
+        let mut row = vec![
             format!("{:.1}", p.offered_rate_rps),
             format!("{}", p.offered),
             format!("{}", p.rejected),
@@ -966,32 +1033,65 @@ fn print_serving(points: &[ServeResult], cache: &butterfly_dataflow::coordinator
             format!("{:.3}", p.latency_p99_ms),
             format!("{:.1}%", 100.0 * p.utilization),
             format!("{:.2}", p.mean_batch),
-        ]);
+        ];
+        if robust {
+            row.push(format!("{}", p.timed_out));
+            row.push(format!("{}", p.shed));
+            row.push(format!("{}", p.lost));
+            row.push(format!("{:.1}%", 100.0 * p.availability));
+        }
+        t.row(&row);
     }
     t.print();
     if let Some(last) = points.last() {
-        let mut t = Table::new(
-            &format!(
-                "per-class breakdown at {:.1} req/s ({} arrays, max batch {}, max wait {:.1} ms)",
-                last.offered_rate_rps,
-                last.arrays,
-                last.max_batch,
-                last.max_wait_s * 1e3
-            ),
-            &["class", "spec", "offered", "rej", "done", "p50 ms", "p99 ms"],
+        let mut title = format!(
+            "per-class breakdown at {:.1} req/s ({} arrays, max batch {}, max wait {:.1} ms",
+            last.offered_rate_rps,
+            last.arrays,
+            last.max_batch,
+            last.max_wait_s * 1e3
         );
+        if robust {
+            title.push_str(&format!(", {} admission", last.admission.name()));
+            if let Some(dl) = last.deadline_s {
+                title.push_str(&format!(", deadline {:.1} ms", dl * 1e3));
+            }
+        }
+        title.push(')');
+        let mut head = vec!["class", "spec", "offered", "rej", "done"];
+        if robust {
+            head.extend(["timeout", "shed", "lost"]);
+        }
+        head.extend(["p50 ms", "p99 ms"]);
+        let mut t = Table::new(&title, &head);
         for c in &last.classes {
-            t.row(&[
+            let mut row = vec![
                 c.name.clone(),
                 c.spec.clone(),
                 format!("{}", c.offered),
                 format!("{}", c.rejected),
                 format!("{}", c.completed),
-                format!("{:.3}", c.latency_p50_ms),
-                format!("{:.3}", c.latency_p99_ms),
-            ]);
+            ];
+            if robust {
+                row.push(format!("{}", c.timed_out));
+                row.push(format!("{}", c.shed));
+                row.push(format!("{}", c.lost));
+            }
+            row.push(format!("{:.3}", c.latency_p50_ms));
+            row.push(format!("{:.3}", c.latency_p99_ms));
+            t.row(&row);
         }
         t.print();
+        if robust && last.faults_configured {
+            println!(
+                "replica availability {:.2}% -> degraded capacity bound {:.1} req/s \
+                 (healthy {:.1}); {} retries",
+                100.0 * last.availability,
+                last.degraded_capacity_rps,
+                last.capacity_rps,
+                last.retries
+            );
+        }
     }
     println!(
         "plan cache (shared across all classes and batch sizes): {} lowerings, \
@@ -1175,4 +1275,77 @@ fn cmd_gpu_model(m: &Matches) -> Result<()> {
     t.row(&["DRAM traffic".into(), format!("{}B", si(r.dram_bytes))]);
     t.print();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    //! Pinned error messages for every class of bad user input the CLI
+    //! can see: argv-level (unknown command/option), value-level (a
+    //! word where a number belongs), domain-level (an unknown preset or
+    //! policy), and file-level (an unreadable path).  Each test drives
+    //! the real `run()` entry point, so a refactor that turns one of
+    //! these structured errors back into a panic or an unhelpful
+    //! message fails here, not in a user's terminal.
+
+    use super::run;
+
+    fn err_of(argv: &[&str]) -> String {
+        let args: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        format!("{:#}", run(&args).expect_err("argv must be rejected"))
+    }
+
+    #[test]
+    fn unknown_command_and_option_are_structured_errors() {
+        assert!(err_of(&["frobnicate"]).contains("unknown command 'frobnicate'"));
+        let e = err_of(&["simulate", "--wat", "1"]);
+        assert!(e.contains("unknown option --wat"), "{e}");
+        let e = err_of(&["simulate", "--points"]);
+        assert!(e.contains("option --points needs a value"), "{e}");
+    }
+
+    #[test]
+    fn malformed_values_name_the_option_and_the_input() {
+        let e = err_of(&["simulate", "--points", "abc"]);
+        assert!(e.contains("--points expects an integer, got 'abc'"), "{e}");
+        let e = err_of(&["serve-sim", "--seed", "1.5"]);
+        assert!(e.contains("--seed expects an integer, got '1.5'"), "{e}");
+        let e = err_of(&["serve-sim", "--deadline-ms", "soon"]);
+        assert!(e.contains("--deadline-ms expects a number, got 'soon'"), "{e}");
+        let e = err_of(&["serve-sim", "--retries", "many"]);
+        assert!(e.contains("--retries expects an integer, got 'many'"), "{e}");
+        let e = err_of(&["serve-sim", "--mtbf", "often", "--mttr", "0.1"]);
+        assert!(e.contains("--mtbf expects seconds, got 'often'"), "{e}");
+    }
+
+    #[test]
+    fn unknown_domain_values_list_the_choices() {
+        let e = err_of(&["simulate", "--kind", "warp"]);
+        assert!(e.contains("unknown kernel kind 'warp' (fft | bpmm)"), "{e}");
+        let e = err_of(&["stream", "--arch", "weird"]);
+        assert!(e.contains("unknown arch preset 'weird' (full | scaled128)"), "{e}");
+        let e = err_of(&["serve-sim", "--admission", "lifo"]);
+        assert!(e.contains("unknown admission policy 'lifo'"), "{e}");
+        assert!(e.contains("fifo, slo-aware"), "{e}");
+    }
+
+    #[test]
+    fn fault_knob_conflicts_are_reported_before_any_work() {
+        let e = err_of(&["serve-sim", "--faults", "x.json", "--mtbf", "0.1", "--mttr", "0.01"]);
+        assert!(e.contains("--faults") && e.contains("conflicts"), "{e}");
+        let e = err_of(&["serve-sim", "--mtbf", "0.1"]);
+        assert!(e.contains("--mtbf and --mttr must be given together"), "{e}");
+        let e = err_of(&["serve-sim", "--mttr", "0.1"]);
+        assert!(e.contains("--mtbf and --mttr must be given together"), "{e}");
+    }
+
+    #[test]
+    fn unreadable_files_name_the_path() {
+        let e = err_of(&["serve-sim", "--trace", "/nonexistent/bfdf-trace.json"]);
+        assert!(e.contains("cannot read trace file '/nonexistent/bfdf-trace.json'"), "{e}");
+        let e = err_of(&["serve-sim", "--faults", "/nonexistent/bfdf-faults.json"]);
+        assert!(
+            e.contains("cannot read fault trace file '/nonexistent/bfdf-faults.json'"),
+            "{e}"
+        );
+    }
 }

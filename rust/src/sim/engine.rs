@@ -80,11 +80,17 @@ pub struct SimOptions {
     /// Disable the coarse-grained priority scheduler: FIFO block issue
     /// (ablation for the Fig. 8 design point).
     pub fifo_scheduling: bool,
+    /// Injected hardware faults ([`crate::arch::FaultModel`]): degraded
+    /// NoC links serialize scaled transfers and downed DDR channels
+    /// shrink the delivery bandwidth.  `None` (the default) is the
+    /// perfect machine — that path is code-identical to the pre-fault
+    /// engine, so every healthy number stays bit-for-bit reproducible.
+    pub faults: Option<std::sync::Arc<crate::arch::FaultModel>>,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { no_multiline_spm: false, fifo_scheduling: false }
+        SimOptions { no_multiline_spm: false, fifo_scheduling: false, faults: None }
     }
 }
 
@@ -100,9 +106,19 @@ impl SimOptions {
     /// exhaustive destructuring below makes the compiler the guard:
     /// adding a field to `SimOptions` refuses to build until it is
     /// spliced into the signature here.
+    ///
+    /// The fault segment appears only when a model is present, so every
+    /// pre-fault cache key (persisted structural stores, autotune
+    /// journals) keeps its exact historical spelling.
     pub fn signature(&self) -> String {
-        let SimOptions { no_multiline_spm, fifo_scheduling } = *self;
-        format!("nomlspm{}|fifo{}", no_multiline_spm as u8, fifo_scheduling as u8)
+        let SimOptions { no_multiline_spm, fifo_scheduling, faults } = self;
+        let mut sig =
+            format!("nomlspm{}|fifo{}", *no_multiline_spm as u8, *fifo_scheduling as u8);
+        if let Some(f) = faults {
+            sig.push('|');
+            sig.push_str(&f.signature());
+        }
+        sig
     }
 }
 
@@ -334,7 +350,14 @@ pub fn simulate_in(
     ws.wheel.reset();
 
     // --- DMA schedule: weight preamble then per-iteration chunks. ---
-    let bpc = arch.ddr_bytes_per_cycle();
+    // A downed DDR channel shrinks the aggregate delivery bandwidth by
+    // the surviving fraction; the healthy path never touches the scale
+    // factor (bit-exactness of every fault-free number).
+    let faults = opts.faults.as_deref();
+    let bpc = match faults {
+        Some(f) if f.ddr_down() > 0 => arch.ddr_bytes_per_cycle() * f.ddr_scale(),
+        _ => arch.ddr_bytes_per_cycle(),
+    };
     let weight_cycles = (program.meta.weight_dma_bytes as f64 / bpc).ceil() as u64;
     let chunk_in = program.meta.dma_in_bytes_per_iter as f64;
     // Inputs prefetch ahead of compute (double buffering).  Output
@@ -490,14 +513,34 @@ pub fn simulate_in(
                         for &l in route {
                             s = s.max(ws.link_free[l as usize]);
                         }
-                        for &l in route {
-                            ws.link_free[l as usize] = s + xfer;
-                        }
-                        let dur = arch.block_issue_overhead + (s - start) + xfer;
+                        let (tail, hop_lat) = match faults {
+                            None => {
+                                for &l in route {
+                                    ws.link_free[l as usize] = s + xfer;
+                                }
+                                (xfer, exec.noc_hops[b] as u64 * arch.noc_hop_latency)
+                            }
+                            Some(f) => {
+                                // Degraded links serialize a scaled
+                                // transfer: the path frees when its
+                                // slowest link drains, and each hop's
+                                // latency scales with its multiplier.
+                                let mut worst = xfer;
+                                let mut lat = 0;
+                                for &l in route {
+                                    let x = xfer * f.link_multiplier(l as usize);
+                                    ws.link_free[l as usize] = s + x;
+                                    worst = worst.max(x);
+                                    lat += arch.noc_hop_latency
+                                        * f.link_multiplier(l as usize);
+                                }
+                                (worst, lat)
+                            }
+                        };
+                        let dur = arch.block_issue_overhead + (s - start) + tail;
                         stats.noc_scalars += exec.scalars_wide[b] * w;
                         service_end = start + dur;
-                        done_at =
-                            service_end + exec.noc_hops[b] as u64 * arch.noc_hop_latency;
+                        done_at = service_end + hop_lat;
                     }
                     _ => unreachable!("unit kind index out of range"),
                 }
@@ -787,6 +830,51 @@ mod tests {
         assert_eq!(fifo.signature(), "nomlspm0|fifo1");
         assert_ne!(spm.signature(), fifo.signature());
         assert!(!SimOptions::default().signature().contains("SimOptions"));
+        // Faults extend the signature only when present: every
+        // pre-fault cache key keeps its historical spelling.
+        let mut fm = crate::arch::FaultModel::for_arch(&ArchConfig::full());
+        fm.kill_pe(2).unwrap();
+        let faulty =
+            SimOptions { faults: Some(std::sync::Arc::new(fm)), ..Default::default() };
+        assert_eq!(faulty.signature(), "nomlspm0|fifo0|fault[pes16|dead=2|links=|ddr0]");
+    }
+
+    #[test]
+    fn degraded_links_and_ddr_slow_the_run_monotonically() {
+        // A ladder of worsening fault sets must never speed the machine
+        // up — and a healthy FaultModel must be priced exactly like no
+        // model at all (the graceful-degradation acceptance criterion at
+        // the engine level).
+        use crate::arch::FaultModel;
+        use std::sync::Arc;
+        let arch = ArchConfig::full();
+        let p = lower_stage(&stage(KernelKind::Fft, 256), &arch, 8);
+        let base = simulate(&p, &arch, &SimOptions::default());
+        let healthy = SimOptions {
+            faults: Some(Arc::new(FaultModel::for_arch(&arch))),
+            ..Default::default()
+        };
+        assert_eq!(simulate(&p, &arch, &healthy), base, "healthy model is a no-op");
+        let mut prev = base.cycles;
+        for mult in [2u32, 8, 32] {
+            let mut fm = FaultModel::for_arch(&arch);
+            for l in 0..arch.num_pes() * 4 {
+                fm.degrade_link(l, mult).unwrap();
+            }
+            let opts = SimOptions { faults: Some(Arc::new(fm)), ..Default::default() };
+            let s = simulate(&p, &arch, &opts);
+            assert!(s.cycles >= prev, "mult {mult}: {} < {prev}", s.cycles);
+            prev = s.cycles;
+        }
+        assert!(prev > base.cycles, "fully degraded NoC must cost cycles");
+        // Downing one of full()'s two DDR channels stretches the
+        // delivery schedule.
+        let mut fm = FaultModel::for_arch(&arch);
+        fm.down_ddr(1).unwrap();
+        let opts = SimOptions { faults: Some(Arc::new(fm)), ..Default::default() };
+        let s = simulate(&p, &arch, &opts);
+        assert!(s.dma_fill_cycles > base.dma_fill_cycles);
+        assert!(s.cycles >= base.cycles);
     }
 
     #[test]

@@ -112,6 +112,43 @@ fn resumed_sweep_reproduces_the_report_byte_for_byte() {
 }
 
 #[test]
+fn journal_skips_torn_records_and_rejects_foreign_headers() {
+    let path = std::env::temp_dir()
+        .join(format!("bfdf_autotune_torn_{}.jsonl", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    let good = "{\"key\":\"k1\",\"latency_s\":1.0,\"energy_j\":2.0,\"area_mm2\":3.0,\
+                \"efficiency\":4.0,\"throughput\":5.0,\"power_w\":6.0}";
+
+    // Mid-file tear between two good records: both survive, counted.
+    std::fs::write(
+        &path,
+        format!(
+            "{}\n{}\n{{\"key\":\"torn\n{}\n",
+            "{\"journal\":\"bfdf-pareto\",\"version\":1}",
+            good,
+            good.replace("k1", "k2"),
+        ),
+    )
+    .unwrap();
+    let j = Journal::open(&path, true).unwrap();
+    assert_eq!(j.loaded(), 2, "records around the tear must survive");
+    assert_eq!(j.torn(), 1);
+
+    // A future format version fails loudly instead of re-evaluating
+    // the whole grid behind the user's back.
+    std::fs::write(&path, "{\"journal\":\"bfdf-pareto\",\"version\":2}\n").unwrap();
+    let err = Journal::open(&path, true).unwrap_err().to_string();
+    assert!(err.contains("version 2") && err.contains("version 1"), "unexpected error: {err}");
+
+    // Pointing --journal at a structural store is a user error, not an
+    // empty journal.
+    std::fs::write(&path, "{\"store\":\"bfdf-structural\",\"version\":1}\n").unwrap();
+    let err = Journal::open(&path, true).unwrap_err().to_string();
+    assert!(err.contains("bfdf-structural"), "unexpected error: {err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn frontier_metrics_match_individually_run_sessions() {
     // Acceptance: every frontier point's stats must be reproducible by
     // a fresh single-point Session run — the sweep adds sharding,

@@ -2,10 +2,15 @@
 //! the ISSUE-6 acceptance criteria — monotone p99 across a rate sweep,
 //! goodput saturating at the capacity bound, bit-reproducible reports
 //! under a fixed seed, observable multi-tenant cache sharing, and
-//! trace-driven runs.
+//! trace-driven runs — plus the ISSUE-10 robustness criteria: graceful
+//! degradation under replica faults, SLO-aware admission beating FIFO
+//! on deadline-met goodput, and edge cases (zero arrivals, zero
+//! max-wait, a trace downing every replica) that must terminate
+//! cleanly.
 
 use butterfly_dataflow::coordinator::{
-    Overlap, PipelineConfig, Report, ServeConfig, Session, Traffic,
+    Admission, Overlap, PipelineConfig, ReplicaEvent, ReplicaFaults, Report, ServeConfig,
+    Session, Traffic,
 };
 use butterfly_dataflow::util::json;
 use butterfly_dataflow::workloads::resolve_model;
@@ -21,6 +26,7 @@ fn cfg(max_batch: usize, arrays: usize) -> ServeConfig {
         arrays,
         queue_cap: 64,
         overlap: Overlap::Pipeline,
+        ..ServeConfig::default()
     }
 }
 
@@ -174,6 +180,259 @@ fn trace_driven_run_works_end_to_end() {
     assert_eq!(r.classes[0].completed, 3);
     assert_eq!(r.classes[1].name, "vit-256");
     assert_eq!(r.classes[1].completed, 1);
+}
+
+#[test]
+fn degradation_is_graceful_and_monotone_under_nested_fault_traces() {
+    // A ladder of *nested* downtime windows over the same traffic: each
+    // rung strictly contains the previous rung's downtime, so goodput
+    // must not increase and p99 must not decrease — and nothing may
+    // panic or hang.  (Requests carry no deadline and every replica
+    // recovers, so all admitted work eventually completes: degradation
+    // shows up purely as a longer makespan and fatter tail.)
+    let session = Session::builder().build();
+    let svc = full_batch_svc_s(&session, 4);
+    let rate = 6.0 / svc; // ~1.5x the two-array capacity of batch-4 service
+    let traffic = Traffic::poisson(&[CLASS.to_string()], rate, 80.0 / rate, 21).unwrap();
+    let horizon = traffic.duration_s;
+    let ladders: Vec<Vec<ReplicaEvent>> = vec![
+        vec![],
+        vec![
+            ReplicaEvent { t_s: 0.2 * horizon, replica: 1, up: false },
+            ReplicaEvent { t_s: 0.4 * horizon, replica: 1, up: true },
+        ],
+        vec![
+            ReplicaEvent { t_s: 0.2 * horizon, replica: 1, up: false },
+            ReplicaEvent { t_s: 0.8 * horizon, replica: 1, up: true },
+        ],
+        vec![
+            ReplicaEvent { t_s: 0.2 * horizon, replica: 1, up: false },
+            ReplicaEvent { t_s: 0.8 * horizon, replica: 1, up: true },
+            ReplicaEvent { t_s: 0.3 * horizon, replica: 0, up: false },
+            ReplicaEvent { t_s: 0.7 * horizon, replica: 0, up: true },
+        ],
+    ];
+    let mut last_goodput = f64::INFINITY;
+    let mut last_p99 = 0.0f64;
+    let mut last_avail = f64::INFINITY;
+    for (i, events) in ladders.iter().enumerate() {
+        let c = ServeConfig {
+            max_batch: 4,
+            arrays: 2,
+            queue_cap: 256,
+            faults: if events.is_empty() {
+                // Rung 0 still runs the robustness loop (empty trace is
+                // rejected by the parser but fine programmatically? no:
+                // use a far-future fault so the schedule is configured
+                // yet inert inside the horizon).
+                Some(ReplicaFaults::Trace(vec![ReplicaEvent {
+                    t_s: horizon * 100.0,
+                    replica: 0,
+                    up: false,
+                }]))
+            } else {
+                Some(ReplicaFaults::Trace(events.clone()))
+            },
+            ..cfg(4, 2)
+        };
+        let r = session.serve(&traffic, &c).unwrap();
+        assert_eq!(
+            r.offered,
+            r.completed + r.rejected + r.shed + r.timed_out + r.lost,
+            "rung {i}: accounting leak"
+        );
+        assert!(r.completed > 0, "rung {i}: nothing completed");
+        assert!(
+            r.goodput_rps <= last_goodput + 1e-9,
+            "rung {i}: goodput rose under more downtime: {} > {}",
+            r.goodput_rps,
+            last_goodput
+        );
+        assert!(
+            r.latency_p99_ms >= last_p99 - 1e-9,
+            "rung {i}: p99 improved under more downtime: {} < {}",
+            r.latency_p99_ms,
+            last_p99
+        );
+        assert!(
+            r.availability <= last_avail + 1e-12,
+            "rung {i}: availability rose with more downtime"
+        );
+        assert!(r.availability > 0.0 && r.availability <= 1.0);
+        assert!(r.degraded_capacity_rps <= r.capacity_rps + 1e-9);
+        last_goodput = r.goodput_rps;
+        last_p99 = r.latency_p99_ms;
+        last_avail = r.availability;
+    }
+}
+
+#[test]
+fn slo_aware_admission_beats_fifo_on_deadline_goodput() {
+    // Deterministic mixed-class overload with real kernel costs: two
+    // slow-class requests arrive first, four fast ones right behind,
+    // one replica, queue of two, max_batch 1.  The deadline is chosen
+    // between the classes' measured service times so FIFO tail-drop
+    // serves a doomed slow request late and times the fast ones out,
+    // while SLO-aware sheds the doomed request and completes the fast
+    // ones in time.
+    let session = Session::builder().build();
+    let fast_key = "att:bpmm".to_string();
+    let slow_key = "bert-4k".to_string();
+    let pipe = PipelineConfig::new(Overlap::Pipeline, 1);
+    let svc_of = |key: &str| {
+        session
+            .run_network_with(&resolve_model(key).unwrap(), Some(1), pipe)
+            .unwrap()
+            .batch_time_s
+    };
+    let (svc_fast, svc_slow) = (svc_of(&fast_key), svc_of(&slow_key));
+    // The shedding walkthrough below needs the doomed slow request's
+    // slack to sit strictly under every fast newcomer's, which holds
+    // whenever svc_fast < svc_slow / 3.  A whole BERT network against a
+    // single attention bpmm clears that with a wide margin.
+    assert!(
+        svc_fast < 0.3 * svc_slow,
+        "test classes must differ in cost: fast {svc_fast} vs slow {svc_slow}"
+    );
+    let t1 = svc_fast * 0.01;
+    let deadline = 1.5 * svc_slow + 0.5 * svc_fast;
+
+    let trace = format!(
+        concat!(
+            "{{\"arrivals\": [",
+            "{{\"t\": 0.0, \"workload\": \"{slow}\"}},",
+            "{{\"t\": 0.0, \"workload\": \"{slow}\"}},",
+            "{{\"t\": {t1}, \"workload\": \"{fast}\"}},",
+            "{{\"t\": {t1}, \"workload\": \"{fast}\"}},",
+            "{{\"t\": {t1}, \"workload\": \"{fast}\"}},",
+            "{{\"t\": {t1}, \"workload\": \"{fast}\"}}",
+            "]}}"
+        ),
+        slow = slow_key,
+        fast = fast_key,
+        t1 = t1,
+    );
+    let traffic = Traffic::from_trace_str(&trace).unwrap();
+
+    let base = ServeConfig {
+        max_batch: 1,
+        max_wait_s: 1.0,
+        arrays: 1,
+        queue_cap: 2,
+        deadline_s: Some(deadline),
+        ..ServeConfig::default()
+    };
+    let fifo = session.serve(&traffic, &base).unwrap();
+    let slo = session
+        .serve(&traffic, &ServeConfig { admission: Admission::SloAware, ..base })
+        .unwrap();
+
+    assert_eq!(fifo.completed, 2);
+    assert_eq!(fifo.rejected, 3);
+    assert_eq!(fifo.timed_out, 1);
+    assert!(
+        fifo.latency_max_ms > deadline * 1e3,
+        "FIFO completes the second slow request past its deadline"
+    );
+
+    assert_eq!(slo.completed, 3, "SLO-aware completes strictly more");
+    assert_eq!(slo.shed, 3);
+    assert_eq!(slo.timed_out, 0);
+    assert_eq!(slo.rejected, 0);
+    assert!(slo.completed > fifo.completed);
+    // Per-class: the one shed slow request, two shed fast stragglers.
+    let slow_class = slo.classes.iter().find(|c| c.name == slow_key).unwrap();
+    let fast_class = slo.classes.iter().find(|c| c.name == fast_key).unwrap();
+    assert_eq!(slow_class.shed, 1);
+    assert_eq!(fast_class.shed, 2);
+}
+
+#[test]
+fn seeded_replica_faults_reproduce_identical_reports() {
+    // The whole robustness path — seeded fault process, retries,
+    // deadlines, SLO-aware shedding — must stay byte-reproducible.
+    let run = || {
+        let session = Session::builder().build();
+        let traffic =
+            Traffic::poisson(&[CLASS.to_string(), "att:bpmm".to_string()], 3000.0, 0.05, 11)
+                .unwrap();
+        let c = ServeConfig {
+            arrays: 2,
+            admission: Admission::SloAware,
+            deadline_s: Some(0.05),
+            faults: Some(ReplicaFaults::Process { mtbf_s: 0.01, mttr_s: 0.004, seed: 5 }),
+            ..cfg(4, 2)
+        };
+        let r = session.serve(&traffic, &c).unwrap();
+        Report::Serving {
+            arch: session.arch_signature().to_string(),
+            cache: session.cache_stats(),
+            points: vec![r],
+        }
+        .render()
+    };
+    let a = run();
+    assert_eq!(a, run(), "same fault seed must reproduce the report bit-for-bit");
+    // The robustness block is serialized (configured => reported).
+    let parsed = json::parse(&a).unwrap();
+    let point = &parsed.req("points").unwrap().as_arr().unwrap()[0];
+    assert_eq!(point.req_str("admission").unwrap(), "slo-aware");
+    assert!(point.req_f64("availability").unwrap() <= 1.0);
+    assert!(point.req_f64("degraded_capacity_rps").unwrap() > 0.0);
+    // And a default-config run serializes *no* robustness block.
+    let session = Session::builder().build();
+    let traffic = Traffic::poisson(&[CLASS.to_string()], 500.0, 0.05, 11).unwrap();
+    let plain = session.serve(&traffic, &ServeConfig::default()).unwrap();
+    let doc = plain.to_json().render();
+    assert!(!doc.contains("\"admission\""), "fault-free JSON gained robustness fields");
+    assert!(!doc.contains("\"availability\""));
+}
+
+#[test]
+fn serving_edge_cases_terminate_cleanly() {
+    let session = Session::builder().build();
+
+    // Zero arrivals (constructed directly: the generators reject empty
+    // streams, the serving loop must still handle one).
+    let empty = Traffic {
+        classes: vec![resolve_model(CLASS).unwrap()],
+        arrivals: vec![],
+        duration_s: 0.0,
+    };
+    let r = session.serve(&empty, &ServeConfig::default()).unwrap();
+    assert_eq!((r.offered, r.completed, r.rejected), (0, 0, 0));
+    assert_eq!(r.latency_p99_ms, 0.0);
+    // ... and with the robustness loop engaged.
+    let c = ServeConfig {
+        deadline_s: Some(0.01),
+        faults: Some(ReplicaFaults::Process { mtbf_s: 0.01, mttr_s: 0.001, seed: 3 }),
+        ..ServeConfig::default()
+    };
+    let r = session.serve(&empty, &c).unwrap();
+    assert_eq!(r.offered, 0);
+    assert_eq!(r.availability, 1.0, "no makespan, nothing was unavailable");
+
+    // max_wait_s = 0: every partial batch dispatches immediately.
+    let traffic = Traffic::poisson(&[CLASS.to_string()], 800.0, 0.02, 9).unwrap();
+    let zero_wait = ServeConfig { max_wait_s: 0.0, ..ServeConfig::default() };
+    let r = session.serve(&traffic, &zero_wait).unwrap();
+    assert_eq!(r.offered, r.completed + r.rejected);
+
+    // A trace that downs every replica at t=0 and never recovers:
+    // zero goodput, zero availability (to fp tolerance), no hang.
+    let all_down = ServeConfig {
+        arrays: 2,
+        faults: Some(ReplicaFaults::Trace(vec![
+            ReplicaEvent { t_s: 0.0, replica: 0, up: false },
+            ReplicaEvent { t_s: 0.0, replica: 1, up: false },
+        ])),
+        ..cfg(4, 2)
+    };
+    let r = session.serve(&traffic, &all_down).unwrap();
+    assert_eq!(r.completed, 0);
+    assert_eq!(r.offered, r.rejected + r.lost);
+    assert!(r.availability <= 1e-9, "availability {} with every replica down", r.availability);
+    assert_eq!(r.goodput_rps, 0.0);
 }
 
 #[test]

@@ -35,7 +35,7 @@ fn opt_combos() -> [SimOptions; 4] {
         SimOptions::default(),
         SimOptions { fifo_scheduling: true, ..Default::default() },
         SimOptions { no_multiline_spm: true, ..Default::default() },
-        SimOptions { fifo_scheduling: true, no_multiline_spm: true },
+        SimOptions { fifo_scheduling: true, no_multiline_spm: true, ..Default::default() },
     ]
 }
 
